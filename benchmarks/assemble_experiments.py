@@ -1,0 +1,41 @@
+"""Insert the generated §Dry-run and §Roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.assemble_experiments
+"""
+
+import io
+import os
+import re
+import sys
+from contextlib import redirect_stdout
+
+from . import gen_experiments
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PATH = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def capture(fn) -> str:
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn()
+    return buf.getvalue()
+
+
+def main():
+    text = open(PATH).read()
+    dr = capture(gen_experiments.dryrun_table)
+    rl = capture(gen_experiments.roofline_table)
+    text = re.sub(r"<!-- GENERATED:DRYRUN -->(.|\n)*?(?=\n---)",
+                  "<!-- GENERATED:DRYRUN -->\n\n" + dr, text, count=1) \
+        if "GENERATED:DRYRUN -->\n\n|" in text else text.replace(
+        "<!-- GENERATED:DRYRUN -->", "<!-- GENERATED:DRYRUN -->\n\n" + dr)
+    text = text.replace("<!-- GENERATED:ROOFLINE -->",
+                        "<!-- GENERATED:ROOFLINE -->\n\n" + rl)
+    open(PATH, "w").write(text)
+    print(f"EXPERIMENTS.md updated ({len(dr.splitlines())} dry-run rows, "
+          f"{len(rl.splitlines())} roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

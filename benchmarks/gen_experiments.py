@@ -1,0 +1,138 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts.  Run after both sweeps:
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "artifacts", "dryrun")
+HBM = 16 * 2**30
+
+ARCHS = [
+    "granite-moe-1b-a400m", "deepseek-moe-16b", "nemotron-4-15b",
+    "stablelm-12b", "minitron-4b", "codeqwen1.5-7b", "internvl2-26b",
+    "seamless-m4t-medium", "mamba2-1.3b", "zamba2-1.2b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SUBQ = {"mamba2-1.3b", "zamba2-1.2b"}
+
+
+def load(arch, shape, mesh):
+    p = os.path.join(ART, f"{arch}--{shape}--{mesh}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def gib(x):
+    return x / 2**30
+
+
+def dryrun_table():
+    print("### Dry-run matrix (lower + compile; per-device memory analysis)\n")
+    print("Cells marked SKIP(rule): `long_500k` requires sub-quadratic "
+          "attention and runs only for the SSM/hybrid archs per the "
+          "assignment.\n")
+    print("| arch | shape | 16x16 | 2x16x16 | args GiB/dev | temp GiB/dev "
+          "| peak(donation-adj) | fits 16 GiB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in SUBQ:
+                print(f"| {arch} | {shape} | SKIP(rule) | SKIP(rule) "
+                      f"| — | — | — | — |")
+                continue
+            s = load(arch, shape, "16_16")
+            m = load(arch, shape, "2_16_16")
+            if s is None:
+                print(f"| {arch} | {shape} | MISSING | | | | | |")
+                continue
+            mem = s["memory"]
+            peak = mem["argument_bytes_per_dev"] + mem["temp_bytes_per_dev"]
+            print(f"| {arch} | {shape} "
+                  f"| OK ({s['compile_s']:.0f}s) "
+                  f"| {'OK (%.0fs)' % m['compile_s'] if m else 'MISSING'} "
+                  f"| {gib(mem['argument_bytes_per_dev']):.2f} "
+                  f"| {gib(mem['temp_bytes_per_dev']):.2f} "
+                  f"| {gib(peak):.2f} "
+                  f"| {'Y' if peak <= HBM else 'over'} |")
+    print()
+
+
+def roofline_table():
+    print("### Roofline (single-pod 16x16, 256 chips; terms in ms/step)\n")
+    print("compute = dot-FLOPs/dev ÷ 197 TF/s;  memory = (args+out+temp)/dev "
+          "÷ 819 GB/s;  collective = per-dev collective operand bytes ÷ 50 "
+          "GB/s/link.  `useful` = MODEL_FLOPS ÷ (HLO_FLOPs x 256) with "
+          "MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active "
+          "params.\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful | one-line diagnosis |")
+    print("|---|---|---|---|---|---|---|---|")
+    notes = {
+        ("granite-moe-1b-a400m", "train_4k"):
+            "a2a dispatch + activation ARs dominate; tiny active params",
+        ("granite-moe-1b-a400m", "prefill_32k"):
+            "S^2 attention dominates a 400M-active model at 32k",
+        ("granite-moe-1b-a400m", "decode_32k"): "KV-cache streaming",
+        ("deepseek-moe-16b", "train_4k"):
+            "fwd TP partial-sum all-reduces (f32 wire)",
+        ("deepseek-moe-16b", "prefill_32k"): "a2a + attention ARs",
+        ("deepseek-moe-16b", "decode_32k"): "KV + expert weight streaming",
+        ("nemotron-4-15b", "train_4k"): "row-parallel AR f32 wire",
+        ("stablelm-12b", "train_4k"): "row-parallel AR f32 wire",
+        ("internvl2-26b", "train_4k"):
+            "largest model: ARs + remat; needs 2-pod mesh for 16 GiB",
+        ("mamba2-1.3b", "long_500k"): "state-cache streaming, O(1) decode",
+        ("zamba2-1.2b", "long_500k"): "shared-attn KV over 512k seq",
+    }
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in SUBQ:
+                continue
+            s = load(arch, shape, "16_16")
+            if s is None:
+                continue
+            rl = s["roofline"]
+            note = notes.get((arch, shape), "")
+            print(f"| {arch} | {shape} "
+                  f"| {rl['compute_s']*1e3:.1f} "
+                  f"| {rl['memory_s']*1e3:.1f} "
+                  f"| {rl['collective_s']*1e3:.1f} "
+                  f"| {rl['dominant']} "
+                  f"| {rl['useful_ratio']:.2f} | {note} |")
+    print()
+    # summary picks
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            s = load(arch, shape, "16_16")
+            if s:
+                rows.append(s)
+    if rows:
+        worst = min((r for r in rows if r["shape"] != "decode_32k"
+                     and r["shape"] != "long_500k"),
+                    key=lambda r: r["roofline"]["useful_ratio"])
+        collb = max(rows, key=lambda r: r["roofline"]["collective_s"])
+        print(f"**Hillclimb picks** — worst useful-ratio (non-decode): "
+              f"`{worst['arch']} x {worst['shape']}` "
+              f"({worst['roofline']['useful_ratio']:.2f}); "
+              f"most collective-bound: `{collb['arch']} x {collb['shape']}`; "
+              f"most paper-representative: `deepseek-moe-16b x train_4k` "
+              f"(sparse-FFNN dispatch is the paper's own regime).\n")
+
+
+def main():
+    dryrun_table()
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""One benchmark per paper table/figure (Gleinig et al. 2023, §VI).
+
+Each function yields CSV rows ``name,us_per_call,derived``:
+  * ``us_per_call``: wall time of the dominant operation (one exact I/O
+    simulation for the simulated experiments; one forward for the timing
+    experiments);
+  * ``derived``: the figure's actual quantities (exact I/O counts, bounds,
+    reduction percentages, speedups).
+
+Scale notes (recorded in EXPERIMENTS.md): CR iteration counts default to
+2,000 (paper: 1,000,000) — the paper's own Fig. 4 shows the bulk of the
+reduction lands early; pass REPRO_BENCH_SCALE=paper for full-width runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.core import (
+    connection_reordering,
+    generate,
+    random_ffnn,
+    simulate,
+    theorem1_bounds,
+)
+from repro.core.graph import from_dense_weights
+
+FULL = os.environ.get("REPRO_BENCH_SCALE", "default") == "paper"
+BASE_W = 500 if FULL else 250         # paper baseline: 500-wide, 4 layers
+BASE_T = 20_000 if FULL else 2_000    # paper: 1e6
+BERT_T = 2_000 if FULL else 400
+Row = Tuple[str, float, str]
+
+
+def _cr(net, M, T=None, policy="min", seed=0):
+    t0 = time.time()
+    order0 = net.theorem1_order()
+    init = simulate(net, order0, M, policy)
+    sim_us = (time.time() - t0) * 1e6
+    res = connection_reordering(net, order0, M, policy=policy,
+                                T=T or BASE_T, seed=seed)
+    lo = theorem1_bounds(net).total_lo
+    red = 100.0 * (init.total - res.ios) / max(1, init.total)
+    gap_closed = 100.0 * (init.total - res.ios) / max(1, init.total - lo)
+    return sim_us, (f"initial={init.total} reordered={res.ios} lower={lo} "
+                    f"reduction={red:.1f}% gap_closed={gap_closed:.1f}%")
+
+
+def fig2_density() -> Iterator[Row]:
+    """CR vs edge density (paper Fig. 2a)."""
+    for dens in (0.05, 0.1, 0.2, 0.4):
+        net = random_ffnn(BASE_W, 4, dens, seed=1)
+        us, derived = _cr(net, M=100)
+        yield (f"fig2a_density_{dens}", us, f"W={net.W} {derived}")
+
+
+def fig2_depth() -> Iterator[Row]:
+    """CR vs depth (paper Fig. 2b)."""
+    for depth in (2, 4, 8):
+        net = random_ffnn(BASE_W, depth, 0.1, seed=2)
+        us, derived = _cr(net, M=100)
+        yield (f"fig2b_depth_{depth}", us, f"W={net.W} {derived}")
+
+
+def fig2_width() -> Iterator[Row]:
+    """CR vs width (paper Fig. 2c)."""
+    for width in (100, 250, 500):
+        net = random_ffnn(width, 4, 0.1, seed=3)
+        us, derived = _cr(net, M=100)
+        yield (f"fig2c_width_{width}", us, f"W={net.W} {derived}")
+
+
+def fig2_memory() -> Iterator[Row]:
+    """CR vs fast-memory size (paper Fig. 2d)."""
+    net = random_ffnn(BASE_W, 4, 0.1, seed=4)
+    for M in (10, 50, 100, 400):
+        us, derived = _cr(net, M=M)
+        yield (f"fig2d_M_{M}", us, derived)
+
+
+def fig3_compact_growth() -> Iterator[Row]:
+    """CG nets hit the lower bound exactly when M >= M_g (paper Fig. 3)."""
+    for Mg in (100, 300, 500):
+        cg = generate(M_g=Mg, n_iters=1000, in_degree=4, seed=Mg)
+        b = theorem1_bounds(cg.net)
+        for M in (Mg // 2, Mg - 10, Mg, Mg + 100):
+            if M < 3:
+                continue
+            t0 = time.time()
+            s = simulate(cg.net, cg.order, M, "min")
+            us = (time.time() - t0) * 1e6
+            yield (f"fig3_Mg{Mg}_M{M}", us,
+                   f"ios={s.total} lower={b.total_lo} "
+                   f"optimal={s.total == b.total_lo}")
+
+
+def fig4_eviction_policies() -> Iterator[Row]:
+    """CR under RR / LRU / MIN (paper Fig. 4)."""
+    net = random_ffnn(BASE_W, 4, 0.1, seed=5)
+    for policy in ("rr", "lru", "min"):
+        us, derived = _cr(net, M=100, policy=policy,
+                          T=max(400, BASE_T // 4))
+        yield (f"fig4_{policy}", us, derived)
+
+
+def fig5_memory_sizes() -> Iterator[Row]:
+    """I/O vs M before/after CR; convergence to the bound (paper Fig. 5)."""
+    net = random_ffnn(BASE_W, 3, 0.01, seed=6)
+    lo = theorem1_bounds(net).total_lo
+    for M in (5, 20, 100, 500, 2000):
+        order = net.theorem1_order()
+        t0 = time.time()
+        before = simulate(net, order, M, "min").total
+        us = (time.time() - t0) * 1e6
+        res = connection_reordering(net, order, M, T=max(400, BASE_T // 4),
+                                    seed=M)
+        yield (f"fig5_M_{M}", us,
+               f"before={before} after={res.ios} lower={lo}")
+
+
+def fig6_bert() -> Iterator[Row]:
+    """Pruned BERT-large encoder FFNN (1024x4096x1024), M=100 (paper Fig. 6).
+
+    Weights are synthetic (no pretrained checkpoint offline) but the shapes
+    and magnitude-pruning procedure match the paper."""
+    rng = np.random.default_rng(0)
+    w1 = rng.standard_normal((1024, 4096)).astype(np.float32)
+    w2 = rng.standard_normal((4096, 1024)).astype(np.float32)
+    for dens in (0.02, 0.05, 0.1):
+        net = from_dense_weights([w1, w2], density=dens, seed=0)
+        lo = theorem1_bounds(net).total_lo
+        for policy in ("lru", "min"):
+            order = net.theorem1_order()
+            t0 = time.time()
+            init = simulate(net, order, 100, policy).total
+            us = (time.time() - t0) * 1e6
+            res = connection_reordering(net, order, 100, policy=policy,
+                                        T=BERT_T, seed=1)
+            yield (f"fig6_bert_d{dens}_{policy}", us,
+                   f"W={net.W} initial={init} reordered={res.ios} lower={lo}")
+
+
+# ---------------------------------------------------------------------------
+# wall-clock (paper Fig. 7/8 analogue, CPU, JAX executors)
+# ---------------------------------------------------------------------------
+
+def _timing_pair(sizes, density, batch=128, block=64, reps=5):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.blocksparse import to_bsr
+    from repro.sparse.layers import ScheduledSparseFFNN, prune_dense_stack
+
+    rng = np.random.default_rng(0)
+    ws = [rng.standard_normal((sizes[i], sizes[i + 1])).astype(np.float32)
+          * 0.05 for i in range(len(sizes) - 1)]
+    bs = [np.zeros(sizes[i + 1], np.float32) for i in range(len(sizes) - 1)]
+    x = jnp.asarray(rng.standard_normal((batch, sizes[0])), jnp.float32)
+
+    # layer-based dense executor (the CSRMM-role baseline on this backend)
+    mats = [jnp.asarray(w) for w in ws]
+
+    @jax.jit
+    def dense_forward(x):
+        h = x
+        for i, w in enumerate(mats):
+            h = h @ w
+            if i < len(mats) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    layers = prune_dense_stack(ws, bs, density=density, block_m=block,
+                               block_n=block)
+    net = ScheduledSparseFFNN.build(layers)
+
+    # scheduled block-computation executor (jnp; computes only nonzero blocks
+    # in the paper-ordered schedule)
+    def make_sched(layer, sch):
+        rows = jnp.asarray(sch.rows[:layer.nnz_blocks])
+        cols = jnp.asarray(sch.cols[:layer.nnz_blocks])
+        blocks = jnp.asarray(sch.blocks[:layer.nnz_blocks])
+        go = layer.grid_out
+
+        def f(h, act):
+            xt = h.reshape(batch, -1, layer.block_m)[:, rows]   # [B,nnz,bm]
+            yt = jnp.einsum("bnm,nmk->bnk", xt, blocks)
+            out = jax.ops.segment_sum(yt.transpose(1, 0, 2), cols,
+                                      num_segments=go)
+            out = out.transpose(1, 0, 2).reshape(batch, -1)
+            return jax.nn.relu(out) if act else out
+        return f
+
+    fns = [make_sched(l, s) for l, s in zip(net.layers, net.schedules)]
+
+    @jax.jit
+    def sparse_forward(x):
+        h = x
+        for i, f in enumerate(fns):
+            h = f(h, i < len(fns) - 1)
+        return h
+
+    dense_forward(x).block_until_ready()
+    sparse_forward(x).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        dense_forward(x).block_until_ready()
+    t_dense = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        sparse_forward(x).block_until_ready()
+    t_sparse = (time.time() - t0) / reps
+    ios = net.simulated_ios(M_tiles=3).total
+    return t_dense, t_sparse, ios
+
+
+def fig7_random_mlp_timing() -> Iterator[Row]:
+    """Scheduled sparse vs layer-dense wall clock, random MLPs (Fig. 7a)."""
+    for dens in (0.05, 0.1, 0.3):
+        td, ts, ios = _timing_pair((512,) * 5, dens)
+        yield (f"fig7_density_{dens}", ts * 1e6,
+               f"dense_us={td*1e6:.0f} sparse_us={ts*1e6:.0f} "
+               f"speedup={td/ts:.2f}x tile_ios={ios}")
+
+
+def fig8_bert_timing() -> Iterator[Row]:
+    """BERT FFNN shapes wall clock (Fig. 8)."""
+    for dens in (0.05, 0.1):
+        td, ts, ios = _timing_pair((1024, 4096, 1024), dens, block=128)
+        yield (f"fig8_bert_density_{dens}", ts * 1e6,
+               f"dense_us={td*1e6:.0f} sparse_us={ts*1e6:.0f} "
+               f"speedup={td/ts:.2f}x tile_ios={ios}")

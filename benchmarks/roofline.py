@@ -1,0 +1,76 @@
+"""Roofline table from the dry-run artifacts (single-pod per the assignment).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh 16_16] [--md]
+
+Reads benchmarks/artifacts/dryrun/*.json produced by repro.launch.dryrun and
+prints per-cell: the three roofline terms (seconds), the dominant term,
+MODEL_FLOPS/HLO_FLOPS, and memory feasibility vs the 16 GB/chip budget.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16 * 2**30
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "artifacts", "dryrun")
+
+
+def load(mesh: str, tag: str = ""):
+    rows = []
+    suffix = f"-{tag}.json" if tag else ".json"
+    for path in sorted(glob.glob(os.path.join(ART, f"*--{mesh}{suffix}"))):
+        base = os.path.basename(path)
+        if not tag and base.count("--") > 2:
+            continue
+        with open(path) as f:
+            rows.append(json.load(f))
+    if not tag:
+        rows = [r for r in rows if "--" + mesh + ".json" in "--" + os.path.basename(
+            f"{r['arch']}--{r['shape']}--{mesh}.json")]
+    return rows
+
+
+def fmt_row(r):
+    rl = r["roofline"]
+    mem = r["memory"]
+    peak = mem["peak_est_bytes_per_dev"]
+    fits = "Y" if peak <= HBM_PER_CHIP else "OVER"
+    terms = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+             "collective": rl["collective_s"]}
+    dom = rl["dominant"]
+    frac = terms[dom] / max(1e-12, sum(terms.values()))
+    return (f"{r['arch']:22s} {r['shape']:12s} "
+            f"{rl['compute_s']*1e3:10.2f} {rl['memory_s']*1e3:10.2f} "
+            f"{rl['collective_s']*1e3:12.2f} {dom:10s} {frac:5.2f} "
+            f"{rl['useful_ratio']:6.2f} {peak/2**30:7.2f} {fits:>4s}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16_16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load(args.mesh, args.tag)
+    print(f"# roofline ({args.mesh}, {len(rows)} cells) — terms in ms/step, "
+          f"peak in GiB/dev vs 16 GiB budget")
+    print(f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+          f"{'collective':>12s} {'dominant':10s} {'share':>5s} "
+          f"{'useful':>6s} {'peak':>7s} {'fits':>4s}")
+    for r in rows:
+        print(fmt_row(r))
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline"]["useful_ratio"])
+        collb = max(rows, key=lambda r: r["roofline"]["collective_s"]
+                    / max(1e-12, r["roofline"]["compute_s"]))
+        print(f"\nworst useful-ratio: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline']['useful_ratio']:.2f})")
+        print(f"most collective-bound: {collb['arch']} x {collb['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all paper figures
+    PYTHONPATH=src python -m benchmarks.run fig6 fig7  # a subset
+    REPRO_BENCH_SCALE=paper ...                        # full paper scale
+
+Prints ``name,us_per_call,derived`` CSV.  The roofline table has its own
+entry point: ``python -m benchmarks.roofline`` (reads the dry-run artifacts).
+"""
+
+from __future__ import annotations
+
+import sys
+
+from . import paper_figs
+
+GROUPS = {
+    "fig2": [paper_figs.fig2_density, paper_figs.fig2_depth,
+             paper_figs.fig2_width, paper_figs.fig2_memory],
+    "fig3": [paper_figs.fig3_compact_growth],
+    "fig4": [paper_figs.fig4_eviction_policies],
+    "fig5": [paper_figs.fig5_memory_sizes],
+    "fig6": [paper_figs.fig6_bert],
+    "fig7": [paper_figs.fig7_random_mlp_timing],
+    "fig8": [paper_figs.fig8_bert_timing],
+}
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    selected = args or list(GROUPS)
+    print("name,us_per_call,derived")
+    for group in selected:
+        for fn in GROUPS[group]:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Train a small LM for a few hundred steps with the full production stack:
+sharded params, AdamW + cosine schedule, deterministic data pipeline, async
+checkpointing, fault injection, and automatic restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200 --arch zamba2-1.2b
+
+Uses the reduced config of the chosen architecture (CPU-friendly); the same
+driver scales the full config on a real mesh (see repro.launch.train).
+"""
+
+import subprocess
+import sys
+
+
+def main():
+    args = sys.argv[1:]
+    if not any(a.startswith("--steps") for a in args):
+        args += ["--steps", "120"]
+    if not any(a.startswith("--arch") for a in args):
+        args += ["--arch", "zamba2-1.2b"]
+    cmd = [sys.executable, "-m", "repro.launch.train", "--reduced",
+           "--batch", "8", "--seq", "64", "--ckpt-dir", "/tmp/repro_example",
+           "--inject-fault-at", "40"] + args
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

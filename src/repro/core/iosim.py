@@ -1,0 +1,261 @@
+"""Exact I/O simulator for Algorithm 1 (paper §II) under MIN / LRU / RR eviction.
+
+Cost model (paper §II):
+  * every connection triple is streamed through fast memory: 1 read-I/O each,
+    deleted for free after use (M ≥ 3 reserves one slot for it, so *neuron
+    values* occupy at most M-1 slots — cf. the Theorem 2 proof);
+  * a neuron-value access that misses fast memory costs 1 read-I/O
+    (first access to a non-input neuron reads its bias, first access to an
+    input neuron reads the input value, later misses re-read the stored value);
+  * evicting a value costs 1 write-I/O iff the eviction must preserve it:
+    the value is dirty (slow memory does not hold the current value) AND
+    (it will be used again OR it belongs to an output neuron).  Everything
+    else is a free deletion — this is the paper's "efficient eviction policy";
+  * at the end of the computation every output value must reside in slow
+    memory (dirty cached outputs are flushed, 1 write-I/O each).
+
+Policies:
+  * MIN  — Belady: evict the value referenced farthest in the future, preferring
+           values never referenced again (paper: trivially implementable offline
+           once the connection order is fixed).
+  * LRU  — least-recently-used.
+  * RR   — round-robin pointer over the M-1 slots.
+
+The simulator is granularity-agnostic: a "value" can be a scalar (paper-faithful)
+or an activation tile (the TPU block reformulation in ``core/blocksparse.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from .graph import FFNN
+
+INF = np.iinfo(np.int64).max
+
+
+@dataclasses.dataclass(frozen=True)
+class IOStats:
+    reads: int
+    writes: int
+
+    @property
+    def total(self) -> int:
+        return self.reads + self.writes
+
+
+def _build_trace(net: FFNN, order: np.ndarray):
+    """Neuron-access trace of Algorithm 1: (src_0, dst_0, src_1, dst_1, ...)."""
+    order = np.asarray(order, dtype=np.int64)
+    src = net.src[order].astype(np.int64)
+    dst = net.dst[order].astype(np.int64)
+    trace = np.empty(2 * len(order), dtype=np.int64)
+    trace[0::2] = src
+    trace[1::2] = dst
+    return trace
+
+
+def _next_use(trace: np.ndarray, n_neurons: int) -> np.ndarray:
+    """next_use[t] = next position > t at which trace[t] is accessed (INF if none).
+
+    Vectorized: stable-sort positions by value; within each value group the next
+    occurrence is simply the following sorted position.
+    """
+    T = len(trace)
+    order = np.argsort(trace, kind="stable")
+    sorted_vals = trace[order]
+    nxt_sorted = np.full(T, INF, dtype=np.int64)
+    if T > 1:
+        same = sorted_vals[:-1] == sorted_vals[1:]
+        nxt_sorted[:-1][same] = order[1:][same]
+    nxt = np.empty(T, dtype=np.int64)
+    nxt[order] = nxt_sorted
+    return nxt
+
+
+def simulate(
+    net: FFNN,
+    order: np.ndarray,
+    M: int,
+    policy: str = "min",
+    validate_order: bool = False,
+    force_python: bool = False,
+) -> IOStats:
+    """Count exact read/write I/Os of Algorithm 1 for ``order`` with memory ``M``.
+
+    Uses the C accelerator (``_iosim_c``) when available unless
+    ``force_python=True``; both paths implement identical semantics and the
+    test suite cross-checks them.
+    """
+    if M < 3:
+        raise ValueError("the model requires M >= 3")
+    if validate_order and not net.is_topological_connection_order(order):
+        raise ValueError("not a topological connection order")
+    policy = policy.lower()
+    if policy not in ("min", "lru", "rr"):
+        raise ValueError(f"unknown eviction policy {policy!r}")
+
+    if not force_python:
+        fast = _simulate_fast(net, order, M, policy)
+        if fast is not None:
+            return fast
+
+    trace_np = _build_trace(net, order)
+    T = len(trace_np)
+    capacity = M - 1  # one slot stays free for the streamed connection
+    n = net.N
+
+    # --- per-neuron state (plain Python lists: ~5x faster scalar access) ------
+    trace = trace_np.tolist()
+    in_cache = bytearray(n)
+    dirty = bytearray(n)
+    remaining_uses = np.bincount(trace_np, minlength=n).tolist()
+    is_output = net.is_output
+    is_output_l = is_output.astype(np.int8).tolist()
+
+    nxt = _next_use(trace_np, n).tolist() if policy == "min" else None
+    cur_next_use = [INF] * n if policy == "min" else None
+
+    reads = int(net.W)  # every connection is read exactly once
+    writes = 0
+    cached = 0
+
+    heappush, heappop = heapq.heappush, heapq.heappop
+
+    if policy == "min":
+        heap: list = []  # (-next_use, neuron), lazy invalidation
+        for t in range(T):
+            v = trace[t]
+            if in_cache[v]:
+                cur_next_use[v] = nxt[t]
+                heappush(heap, (-nxt[t], v))
+            else:
+                if cached >= capacity:
+                    while True:
+                        negnu, u = heappop(heap)
+                        if in_cache[u] and cur_next_use[u] == -negnu:
+                            break
+                    if dirty[u] and (remaining_uses[u] > 0 or is_output_l[u]):
+                        writes += 1
+                        dirty[u] = 0
+                    in_cache[u] = 0
+                    cached -= 1
+                reads += 1
+                in_cache[v] = 1
+                cached += 1
+                cur_next_use[v] = nxt[t]
+                heappush(heap, (-nxt[t], v))
+            remaining_uses[v] -= 1
+            if t & 1:  # dst access: partial sum updated in fast memory
+                dirty[v] = 1
+    elif policy == "lru":
+        lru_clock = 0
+        lru_stamp = [0] * n
+        lru_heap: list = []
+        for t in range(T):
+            v = trace[t]
+            lru_clock += 1
+            if in_cache[v]:
+                lru_stamp[v] = lru_clock
+                heappush(lru_heap, (lru_clock, v))
+            else:
+                if cached >= capacity:
+                    while True:
+                        stamp, u = heappop(lru_heap)
+                        if in_cache[u] and lru_stamp[u] == stamp:
+                            break
+                    if dirty[u] and (remaining_uses[u] > 0 or is_output_l[u]):
+                        writes += 1
+                        dirty[u] = 0
+                    in_cache[u] = 0
+                    cached -= 1
+                reads += 1
+                in_cache[v] = 1
+                cached += 1
+                lru_stamp[v] = lru_clock
+                heappush(lru_heap, (lru_clock, v))
+            remaining_uses[v] -= 1
+            if t & 1:
+                dirty[v] = 1
+    else:  # rr
+        rr_slots = [-1] * capacity
+        slot_of = [-1] * n
+        rr_ptr = 0
+        free_slots = list(range(capacity - 1, -1, -1))
+        for t in range(T):
+            v = trace[t]
+            if not in_cache[v]:
+                if cached >= capacity:
+                    while True:
+                        u = rr_slots[rr_ptr]
+                        ptr = rr_ptr
+                        rr_ptr = (rr_ptr + 1) % capacity
+                        if u >= 0 and in_cache[u]:
+                            break
+                    if dirty[u] and (remaining_uses[u] > 0 or is_output_l[u]):
+                        writes += 1
+                        dirty[u] = 0
+                    in_cache[u] = 0
+                    cached -= 1
+                    rr_slots[ptr] = v
+                    slot_of[v] = ptr
+                else:
+                    s = free_slots.pop()
+                    rr_slots[s] = v
+                    slot_of[v] = s
+                reads += 1
+                in_cache[v] = 1
+                cached += 1
+            remaining_uses[v] -= 1
+            if t & 1:
+                dirty[v] = 1
+
+    # flush: outputs must reside in slow memory.  Outputs evicted dirty already
+    # paid their write inside the eviction branch above.
+    in_cache_np = np.frombuffer(bytes(in_cache), dtype=np.int8).astype(bool)
+    dirty_np = np.frombuffer(bytes(dirty), dtype=np.int8).astype(bool)
+    writes += int((in_cache_np & dirty_np & is_output).sum())
+    # output neurons that never appear in the trace (no in/out connections):
+    # their bias is read and the activated value written, 1 I/O each.
+    untouched = is_output & (np.bincount(trace_np, minlength=n) == 0)
+    reads += int(untouched.sum())
+    writes += int(untouched.sum())
+
+    return IOStats(reads=reads, writes=writes)
+
+
+def _simulate_fast(net: FFNN, order: np.ndarray, M: int, policy: str) -> Optional[IOStats]:
+    """C-accelerated path; returns None when the accelerator is unavailable."""
+    from . import _iosim_c
+
+    if not _iosim_c.available():
+        return None
+    trace = _build_trace(net, order)
+    res = _iosim_c.simulate_c(trace, net.N, M - 1, net.is_output, policy)
+    if res is None:
+        return None
+    miss_reads, evict_writes = res
+    reads = int(net.W) + miss_reads
+    writes = evict_writes
+    untouched = net.is_output & (np.bincount(trace, minlength=net.N) == 0)
+    reads += int(untouched.sum())
+    writes += int(untouched.sum())
+    return IOStats(reads=reads, writes=writes)
+
+
+def simulate_curve(
+    net: FFNN,
+    order: np.ndarray,
+    Ms: np.ndarray,
+    policy: str = "min",
+) -> np.ndarray:
+    """Total I/Os for a sweep of memory sizes (paper Fig. 3/5)."""
+    return np.array([simulate(net, order, int(m), policy).total for m in Ms])
+
+
+def trace_length(net: FFNN) -> int:
+    return 2 * net.W

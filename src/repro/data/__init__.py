@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, TokenBatcher, sharded_batches
+
+__all__ = ["SyntheticLM", "TokenBatcher", "sharded_batches"]

@@ -1,0 +1,117 @@
+"""Scheduled block-sparse matmul — the paper's contribution as a TPU kernel.
+
+``y = act(x @ W + b)`` where W is block-sparse (BSR).  The Pallas grid *is* the
+paper's topological order of the connections: one grid step per nonzero weight
+block, executed in the (reordered) schedule produced by
+``repro.core.blocksparse.schedule_arrays``.
+
+I/O behaviour (the paper's model realized in hardware):
+  * the weight block of step g streams HBM->VMEM exactly once        (W reads);
+  * the input tile x[:, rows[g]] is fetched only when ``rows[g]`` differs from
+    ``rows[g-1]`` — Pallas keeps the block in VMEM across grid steps whose
+    index_map result is unchanged                     (input-neuron reads);
+  * the f32 accumulator tile lives in VMEM scratch for the *contiguous* run of
+    steps sharing ``cols[g]`` (Theorem-1 grouped order), is written back once
+    per output tile                                   (writes = S exactly).
+
+The schedule MUST be contiguous-by-output (checked in ops.py) — that is
+precisely the Theorem-1 2-optimal family the paper proves sufficient; within
+it, Connection Reordering minimizes the input-tile re-fetches.
+
+Scalar-prefetch arrays feed the index maps:
+  rows[g], cols[g] — input/output tile of step g,
+  first[g]         — 1 iff step g is the first visiting its output tile
+                     (zero-initialize the accumulator),
+  last[g]          — 1 iff step g is the last (add bias, activate, emit).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    # scalar prefetch
+    rows_ref, cols_ref, first_ref, last_ref,
+    # inputs
+    x_ref, w_ref, b_ref,
+    # outputs
+    o_ref,
+    # scratch
+    acc_ref,
+    *,
+    activation: Optional[Callable],
+):
+    g = pl.program_id(0)
+
+    @pl.when(first_ref[g] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(last_ref[g] == 1)
+    def _emit():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation is not None:
+            y = activation(y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grid_out", "activation", "interpret"),
+)
+def bsr_matmul(
+    x: jnp.ndarray,        # [B, n_in]
+    blocks: jnp.ndarray,   # [nnz, bm, bn] scheduled order
+    rows: jnp.ndarray,     # int32 [nnz]
+    cols: jnp.ndarray,     # int32 [nnz]
+    first: jnp.ndarray,    # int32 [nnz]
+    last: jnp.ndarray,     # int32 [nnz]
+    bias: jnp.ndarray,     # [n_out]
+    grid_out: int,
+    activation: Optional[Callable] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Run the scheduled BSR matmul.  See module docstring for the schedule contract."""
+    B, n_in = x.shape
+    nnz, bm, bn = blocks.shape
+    n_out = grid_out * bn
+    if n_in % bm:
+        raise ValueError("n_in must be a multiple of the block size")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(nnz,),
+        in_specs=[
+            # input tile: revisits keep it in VMEM while rows[g] is unchanged
+            pl.BlockSpec((B, bm), lambda g, rows, cols, first, last: (0, rows[g])),
+            # weight block: streamed, one per step
+            pl.BlockSpec((1, bm, bn), lambda g, rows, cols, first, last: (g, 0, 0)),
+            # bias tile of the current output tile
+            pl.BlockSpec((1, bn), lambda g, rows, cols, first, last: (0, cols[g])),
+        ],
+        out_specs=pl.BlockSpec(
+            (B, bn), lambda g, rows, cols, first, last: (0, cols[g])
+        ),
+        scratch_shapes=[pltpu.VMEM((B, bn), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_out), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )
+    return fn(rows, cols, first, last, x, blocks, bias.reshape(1, -1))

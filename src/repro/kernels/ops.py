@@ -1,0 +1,129 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``scheduled_bsr_layer`` is the user-facing op: it takes a ``BSRLayer`` plus a
+block schedule (from ``core.blocksparse.schedule_arrays``), enforces the
+Theorem-1 contiguity contract, patches empty output tiles, and dispatches to
+the Pallas kernel (TPU) or the jnp oracle (non-TPU backends).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocksparse import BSRLayer, is_contiguous_by_output
+from . import ref
+from .bsr_matmul import bsr_matmul
+
+
+@dataclasses.dataclass
+class CompiledSchedule:
+    """A validated, kernel-ready block schedule for one BSR layer."""
+
+    blocks: jnp.ndarray   # [nnz', bm, bn] in schedule order (incl. patch blocks)
+    rows: jnp.ndarray     # int32 [nnz']
+    cols: jnp.ndarray     # int32 [nnz']
+    first: jnp.ndarray
+    last: jnp.ndarray
+    grid_out: int
+    # simulated tile traffic of this schedule (reads, writes) under the
+    # single-resident-tile VMEM model — the paper's I/O count for M=3.
+    sim_reads: int
+    sim_writes: int
+
+
+def compile_schedule(
+    layer: BSRLayer,
+    perm: Optional[np.ndarray] = None,
+) -> CompiledSchedule:
+    """Validate + pack a schedule.  ``perm`` permutes the layer's block storage
+    (default: as stored).  Raises if the schedule is not contiguous-by-output —
+    the Theorem-1 family the kernel's VMEM-resident accumulator requires."""
+    if perm is None:
+        perm = np.arange(layer.nnz_blocks)
+    perm = np.asarray(perm, dtype=np.int64)
+    rows = layer.rows[perm].astype(np.int32)
+    cols = layer.cols[perm].astype(np.int32)
+    blocks = layer.blocks[perm]
+    if not is_contiguous_by_output(cols):
+        raise ValueError(
+            "schedule is not contiguous by output tile; use a Theorem-1 "
+            "(grouped-by-output) order — see core.blocksparse.schedule_arrays"
+        )
+    # patch: output tiles with no nonzero block still need bias+activation.
+    present = np.zeros(layer.grid_out, dtype=bool)
+    present[cols] = True
+    missing = np.flatnonzero(~present).astype(np.int32)
+    if len(missing):
+        zero = np.zeros((len(missing), layer.block_m, layer.block_n), blocks.dtype)
+        blocks = np.concatenate([blocks, zero])
+        rows = np.concatenate([rows, np.zeros(len(missing), np.int32)])
+        cols = np.concatenate([cols, missing])
+    nnz = len(rows)
+    first = np.zeros(nnz, np.int32)
+    last = np.zeros(nnz, np.int32)
+    first[0] = 1
+    first[1:] = (cols[1:] != cols[:-1]).astype(np.int32)
+    last[-1] = 1
+    last[:-1] = (cols[1:] != cols[:-1]).astype(np.int32)
+    # simulated tile I/O: weight blocks stream once each; an input tile is
+    # re-read whenever rows[] changes; one write per output tile.
+    row_changes = 1 + int((rows[1:] != rows[:-1]).sum()) if nnz else 0
+    sim_reads = nnz + row_changes + layer.grid_out  # + bias tiles
+    sim_writes = layer.grid_out
+    return CompiledSchedule(
+        blocks=jnp.asarray(blocks),
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(cols),
+        first=jnp.asarray(first),
+        last=jnp.asarray(last),
+        grid_out=layer.grid_out,
+        sim_reads=sim_reads,
+        sim_writes=sim_writes,
+    )
+
+
+def scheduled_bsr_layer(
+    x: jnp.ndarray,
+    layer: BSRLayer,
+    schedule: Optional[CompiledSchedule] = None,
+    activation: Optional[Callable] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """y = act(x @ W_bsr + b) via the scheduled Pallas kernel.
+
+    On non-TPU backends ``interpret`` defaults to True (the Pallas body runs
+    in Python — the correctness path used by tests on CPU).
+    """
+    if schedule is None:
+        schedule = compile_schedule(layer)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return bsr_matmul(
+        x,
+        schedule.blocks,
+        schedule.rows,
+        schedule.cols,
+        schedule.first,
+        schedule.last,
+        jnp.asarray(layer.bias),
+        grid_out=schedule.grid_out,
+        activation=activation,
+        interpret=interpret,
+    )
+
+
+def bsr_layer_ref(
+    x: jnp.ndarray,
+    layer: BSRLayer,
+    activation: Optional[Callable] = None,
+) -> jnp.ndarray:
+    """Oracle wrapper with the same signature family as scheduled_bsr_layer."""
+    return ref.bsr_matmul_ref(
+        x, layer.rows, layer.cols, jnp.asarray(layer.blocks),
+        jnp.asarray(layer.bias), layer.grid_in, layer.grid_out, activation,
+    )

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, partitioning, steps, dry-run, drivers."""

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry run: lower + compile every (arch x shape) on the production
+meshes, print memory/cost analysis, and emit roofline JSON artifacts.
+
+MUST be run as its own process (the XLA flag above is read at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch nemotron-4-15b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import gc            # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config                      # noqa: E402
+from repro.launch import hlo_analysis, partition, specs, steps      # noqa: E402
+from repro.launch.mesh import make_production_mesh                  # noqa: E402
+from repro.models.config import LM_SHAPES, applicable_shapes        # noqa: E402
+from repro.models.sharding import axes_from_mesh                    # noqa: E402
+from repro.optim import OptConfig, adamw_init                       # noqa: E402
+
+ARTIFACT_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "../../../benchmarks/artifacts/dryrun"))
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if hasattr(x, "item"):
+        return x.item()
+    return x
+
+
+def _coerce(cfg, key: str, val: str):
+    cur = getattr(cfg, key)
+    if isinstance(cur, bool):
+        return val.lower() in ("1", "true", "yes")
+    if isinstance(cur, int):
+        return int(val)
+    if isinstance(cur, float):
+        return float(val)
+    return val
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             moe_impl: str = None, quiet: bool = False, tag: str = "",
+             overrides=None):
+    cfg = get_config(arch)
+    if moe_impl and cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    for kv in overrides or []:
+        key, val = kv.split("=", 1)
+        cfg = dataclasses.replace(cfg, **{key: _coerce(cfg, key, val)})
+    shape = LM_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes_from_mesh(mesh)
+    jax.set_mesh(mesh)
+    n_chips = mesh.size
+    t0 = time.time()
+
+    p_shape = specs.params_shape(cfg)
+    p_specs = partition.params_specs(mesh, p_shape)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, p_shape)
+        o_specs = partition.opt_specs(mesh, opt_shape, p_specs)
+        batch = specs.train_inputs(cfg, shape)
+        b_specs = partition.batch_specs(mesh, batch)
+        step = steps.make_train_step(cfg, OptConfig(), mesh,
+                                     grad_specs=o_specs["master"])
+        jitted = jax.jit(step, in_shardings=(p_specs, o_specs, b_specs),
+                         out_shardings=(p_specs, o_specs, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_shape, opt_shape, batch)
+    elif shape.kind == "prefill":
+        batch = specs.prefill_inputs(cfg, shape)
+        b_specs = partition.batch_specs(mesh, batch)
+        step = steps.make_prefill_step(cfg, mesh)
+        out_shape = jax.eval_shape(step, p_shape, batch)
+        if isinstance(out_shape[1], dict):
+            out_caches = partition.cache_specs(mesh, cfg, out_shape[1])
+        else:  # encdec: enc_out [B, S, d] — batch-sharded
+            out_caches = partition.batch_specs(mesh, out_shape[1])
+        jitted = jax.jit(step, in_shardings=(p_specs, b_specs),
+                         out_shardings=(None, out_caches))
+        lowered = jitted.lower(p_shape, batch)
+    else:  # decode
+        caches, tok = specs.decode_inputs(cfg, shape)
+        c_specs = partition.cache_specs(mesh, cfg, caches)
+        t_specs = partition.batch_specs(mesh, tok)["tokens"]
+        step = steps.make_serve_step(cfg, mesh)
+        jitted = jax.jit(step, in_shardings=(p_specs, c_specs, t_specs),
+                         out_shardings=(None, c_specs), donate_argnums=(1,))
+        lowered = jitted.lower(p_shape, caches, tok["tokens"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    module_cost = hlo_analysis.analyze_module(txt)
+    coll = hlo_analysis.CollectiveStats(
+        total_bytes=int(module_cost.coll_bytes),
+        by_op={k: int(v) for k, v in module_cost.coll_by_op.items()},
+        count=module_cost.n_whiles)
+    mf = hlo_analysis.model_flops_for(cfg, shape)
+    rl = hlo_analysis.roofline(module_cost, coll, n_chips, mf, mem,
+                               xla_cost=cost)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "peak_est_bytes_per_dev": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "roofline": rl.as_dict(),
+    }
+    if not quiet:
+        print(f"[{arch} x {shape_name} x {result['mesh']}] "
+              f"compile {t_compile:.0f}s | "
+              f"args {mem.argument_size_in_bytes/2**30:.2f} GiB/dev, "
+              f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB/dev | "
+              f"flops/dev {rl.flops_per_dev:.3e} | "
+              f"compute {rl.compute_s*1e3:.2f} ms, memory {rl.memory_s*1e3:.2f} ms, "
+              f"collective {rl.collective_s*1e3:.2f} ms -> {rl.dominant}-bound | "
+              f"useful {rl.useful_ratio:.2f}")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis: flops=%.4g bytes=%.4g" %
+              (rl.flops_per_dev, rl.bytes_per_dev))
+        print("  collectives:", coll.by_op)
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"-{tag}" if tag else ""
+    fname = f"{arch}--{shape_name}--{result['mesh'].replace('x','_')}{suffix}.json"
+    with open(os.path.join(ARTIFACT_DIR, fname), "w") as f:
+        json.dump(_jsonable(result), f, indent=1)
+    # free compiler memory before the next cell
+    del compiled, lowered, jitted
+    gc.collect()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(LM_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch x shape) cell")
+    ap.add_argument("--moe-impl", choices=["dense", "a2a"], default=None)
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="config override key=value (repeatable)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for sh in applicable_shapes(cfg):
+                cells.append((arch, sh))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, sh in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, sh, mp, moe_impl=args.moe_impl, tag=args.tag,
+                         overrides=args.overrides)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, sh, mp, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(meshes)} dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis`` yields per-device HLO FLOPs and bytes (the module is the
+post-SPMD per-device program); collective bytes are parsed from the compiled
+HLO text by summing *operand* bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.  Terms:
+
+    compute    = flops_per_device / 197e12          (= global/(chips*peak))
+    memory     = bytes_per_device / 819e9
+    collective = coll_bytes_per_device / 50e9
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[^\]]*\]\S*)\s+([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"(%[\w\.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string: 'f32[128,64]{1,0}' or a tuple thereof."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_op: Dict[str, int]
+    count: int
+
+
+# ---------------------------------------------------------------------------
+# trip-count-aware HLO module analysis
+#
+# XLA's HloCostAnalysis (compiled.cost_analysis()) visits while/scan bodies
+# ONCE, so flops and collective bytes of layer stacks expressed as lax.scan
+# are undercounted by the trip count.  We parse the compiled module text into
+# computations, infer while trip counts from the loop-condition constant, and
+# aggregate dot-FLOPs and collective operand bytes bottom-up with multipliers.
+# ---------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                        r"\{?(%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)\}?")
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_SHAPE_OF = re.compile(r"^([a-z0-9]+)\[([\d,]*)\]")
+_CONSTANT = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_OF.match(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    coll_by_op: Dict[str, float]
+    n_whiles: int
+    trip_counts: list
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll_by_op.values())
+
+
+def analyze_module(hlo_text: str) -> ModuleCost:
+    # strip /*...*/ comments: tuple types embed "/*index=N*/" markers whose '='
+    # breaks the type-string regex
+    hlo_text = re.sub(r"/\*.*?\*/", "", hlo_text)
+    comps = _parse_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+    memo: Dict[str, Tuple[float, Dict[str, float]]] = {}
+    whiles = []
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in _CONSTANT.findall(line):
+                best = max(best, int(c))
+        return best
+
+    def cost(name: str) -> Tuple[float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, {})  # cycle guard
+        flops = 0.0
+        coll: Dict[str, float] = {}
+        sizes: Dict[str, int] = {}
+        lines = comps.get(name, [])
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            opname, type_str, op = m.groups()
+            sizes[opname] = shape_bytes(type_str)
+            if op == "dot":
+                res = _dims_of(type_str)
+                cd = _DOT_DIMS.search(line)
+                k = 1
+                if cd:
+                    ops = _OPERAND_RE.findall(line[m.end():])
+                    lhs = ops[0] if ops else None
+                    lhs_dims = None
+                    if lhs is not None:
+                        for l2 in lines:
+                            m2 = _DEF_RE.match(l2)
+                            if m2 and m2.group(1) == lhs:
+                                lhs_dims = _dims_of(m2.group(2))
+                                break
+                        if lhs_dims is None:
+                            mm = re.search(re.escape(lhs) +
+                                           r"\s*=\s*([a-z0-9]+\[[\d,]*\])", "\n".join(lines))
+                            if mm:
+                                lhs_dims = _dims_of(mm.group(1))
+                    if lhs_dims and cd.group(1):
+                        for idx in cd.group(1).split(","):
+                            i = int(idx)
+                            if i < len(lhs_dims):
+                                k *= lhs_dims[i]
+                if res is not None:
+                    n = 1
+                    for d in res:
+                        n *= d
+                    flops += 2.0 * n * k
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in COLLECTIVES and not op.endswith("-done"):
+                args = line[m.end():]
+                depth, out = 1, []
+                for ch in args:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    out.append(ch)
+                onames = _OPERAND_RE.findall("".join(out))
+                b = sum(sizes.get(o, shape_bytes(o_lookup(lines, o))) for o in onames)
+                coll[base_op] = coll.get(base_op, 0.0) + b
+            if op == "while":
+                mm = re.search(r"condition=(%[\w\.\-]+),?\s*body=(%[\w\.\-]+)", line)
+                if not mm:
+                    mm = re.search(r"body=(%[\w\.\-]+),?\s*condition=(%[\w\.\-]+)", line)
+                    cond, body = (mm.group(2), mm.group(1)) if mm else (None, None)
+                else:
+                    cond, body = mm.group(1), mm.group(2)
+                if body:
+                    t = trip_count(cond) if cond else 1
+                    whiles.append(t)
+                    bf, bc = cost(body)
+                    cf, cc = cost(cond) if cond else (0.0, {})
+                    flops += t * (bf + cf)
+                    for k2, v in bc.items():
+                        coll[k2] = coll.get(k2, 0.0) + t * v
+                    for k2, v in cc.items():
+                        coll[k2] = coll.get(k2, 0.0) + t * v
+            elif op in ("fusion", "call", "conditional", "map", "reduce",
+                        "reduce-window", "scatter", "sort", "select-and-scatter",
+                        "all-reduce", "reduce-scatter"):
+                mm = _CALL_ATTR.search(line)
+                if mm:
+                    for sub in mm.group(1).split(","):
+                        sub = sub.strip()
+                        sf, sc = cost(sub)
+                        flops += sf
+                        for k2, v in sc.items():
+                            coll[k2] = coll.get(k2, 0.0) + v
+        memo[name] = (flops, coll)
+        return memo[name]
+
+    def o_lookup(lines, name):
+        for l2 in lines:
+            m2 = _DEF_RE.match(l2)
+            if m2 and m2.group(1) == name:
+                return m2.group(2)
+        return ""
+
+    if entry is None:
+        return ModuleCost(0.0, {}, 0, [])
+    f, c = cost(entry)
+    return ModuleCost(flops=f, coll_by_op=c, n_whiles=len(whiles),
+                      trip_counts=whiles)
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Trip-count-aware collective operand bytes of a per-device module."""
+    mc = analyze_module(hlo_text)
+    return CollectiveStats(
+        total_bytes=int(mc.coll_bytes),
+        by_op={k: int(v) for k, v in mc.coll_by_op.items()},
+        count=mc.n_whiles)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float     # MODEL_FLOPS / (HLO_FLOPs * chips)
+    coll_by_op: Dict[str, int]
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    out_bytes: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(module_cost: "ModuleCost", coll: CollectiveStats, n_chips: int,
+             model_flops: float, mem_stats=None,
+             xla_cost: Optional[Dict] = None) -> Roofline:
+    """Three-term roofline from the trip-aware module analysis.
+
+    compute: dot-FLOPs per device (while bodies x trip count) / peak;
+    memory: per-device HBM bytes touched — arguments + outputs + temp buffers
+    from the real buffer assignment (a one-pass lower bound on HBM traffic);
+    collective: per-device collective operand bytes / per-chip link bw."""
+    flops = float(module_cost.flops)
+    if mem_stats is not None:
+        byt = float(mem_stats.argument_size_in_bytes
+                    + mem_stats.output_size_in_bytes
+                    + mem_stats.temp_size_in_bytes)
+    else:
+        byt = float((xla_cost or {}).get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byt / HBM_BW
+    coll_s = coll.total_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / max(1.0, flops * n_chips)
+    kw = {}
+    if mem_stats is not None:
+        kw = dict(arg_bytes=mem_stats.argument_size_in_bytes,
+                  temp_bytes=mem_stats.temp_size_in_bytes,
+                  out_bytes=mem_stats.output_size_in_bytes)
+    return Roofline(
+        flops_per_dev=flops, bytes_per_dev=byt,
+        coll_bytes_per_dev=float(coll.total_bytes),
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        coll_by_op=coll.by_op, **kw)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (fwd only);
+    N = active params for MoE.  Enc-dec splits N between the encoder (sees
+    B·S source frames) and the decoder (sees B·S/tgt_frac target tokens)."""
+    B, S = shape.global_batch, shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    if cfg.family == "encdec":
+        d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+        att = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+            + cfg.n_heads * hd * d
+        mlp_p = 2 * d * f
+        n_enc = cfg.n_enc_layers * (att + mlp_p)
+        n_dec = cfg.n_dec_layers * (2 * att + mlp_p) + 2 * cfg.vocab * d
+        if shape.kind == "decode":
+            return 2.0 * n_dec * B
+        d_src = B * S
+        d_tgt = B * S // cfg.tgt_frac
+        return mult * (n_enc * d_src + n_dec * d_tgt)
+    n = cfg.n_active_params()
+    if shape.kind == "decode":
+        return 2.0 * n * B
+    return mult * n * B * S

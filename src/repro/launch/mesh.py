@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (uses however many host devices exist)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for n in dp_axes(mesh):
+        s *= mesh.shape[n]
+    return s
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

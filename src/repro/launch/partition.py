@@ -1,0 +1,179 @@
+"""Parameter / optimizer / cache / batch partition rules.
+
+Megatron-style TP over the ``model`` axis, DP over (``pod``, ``data``),
+expert-parallel MoE weights over ``model``, vocab-sharded embeddings, and
+ZeRO-1-style extra data-axis sharding on optimizer-state leaves.
+
+Rules are name-based over the pytree paths produced by the model inits; dims
+that are only conditionally shardable (kv heads < tp, odd feature packs) fall
+back to replication via divisibility checks against the concrete mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes, dp_size, tp_size
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _in_layers(path) -> bool:
+    keys = [str(getattr(e, "key", "")) for e in path]
+    return any(k in ("layers", "enc_layers", "dec_layers") for k in keys)
+
+
+def _div(mesh, axis: Optional[str], n: int) -> Optional[str]:
+    if axis is None:
+        return None
+    size = mesh.shape.get(axis, 1) if hasattr(mesh.shape, "get") else mesh.shape[axis]
+    return axis if (n % size == 0 and n >= size) else None
+
+
+def param_spec(mesh, path, shape) -> P:
+    """PartitionSpec for one parameter leaf (shape WITHOUT accounting for the
+    stacked layer dim — pass the real leaf shape; stacking handled here)."""
+    name = _leaf_name(path)
+    stacked = _in_layers(path)
+    core = tuple(shape[1:]) if stacked else tuple(shape)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def spec(*axes):
+        axes = tuple(axes)
+        if stacked:
+            axes = (None,) + axes
+        return P(*axes)
+
+    nd = len(core)
+    if name == "embed":
+        return spec(_div(mesh, tp, core[0]), None)
+    if name == "unembed":
+        return spec(None, _div(mesh, tp, core[1]))
+    if name in ("wq", "wk", "wv"):
+        return spec(None, _div(mesh, tp, core[1]))
+    if name == "wo":
+        return spec(_div(mesh, tp, core[0]), None)
+    if name in ("up", "gate"):
+        if nd == 3:   # MoE experts [E, d, f] — expert parallel
+            return spec(_div(mesh, tp, core[0]), None, None)
+        return spec(None, _div(mesh, tp, core[1]))
+    if name == "down":
+        if nd == 3:
+            return spec(_div(mesh, tp, core[0]), None, None)
+        return spec(_div(mesh, tp, core[0]), None)
+    if name == "router":
+        return spec(None, None)
+    if name == "in_proj":
+        return spec(None, _div(mesh, tp, core[1]))
+    if name == "out_proj":
+        return spec(_div(mesh, tp, core[0]), None)
+    if name in ("conv", "conv_bias"):
+        return spec(*([None] * (nd - 1) + [_div(mesh, tp, core[-1])]))
+    # norms, biases, scalars: replicate
+    return spec(*([None] * nd))
+
+
+def params_specs(mesh, params_shape) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(mesh, path, leaf.shape), params_shape)
+
+
+def opt_specs(mesh, opt_shape, p_specs) -> Any:
+    """Optimizer-state specs: parameter spec + one extra data-axis dim (ZeRO-1)."""
+    dpa = dp_axes(mesh)
+    dsz = dp_size(mesh)
+
+    def zero1(path, leaf):
+        name = _leaf_name(path)
+        if name == "step":
+            return P()
+        # find this leaf's param spec by stripping the master/mu/nu prefix
+        sub = path[1:]
+        try:
+            pspec = _lookup(p_specs, sub)
+        except (KeyError, TypeError):
+            pspec = P()
+        axes = list(pspec) + [None] * (len(leaf.shape) - len(tuple(pspec)))
+        for i, ax in enumerate(axes):
+            if ax is None and leaf.shape[i] % dsz == 0 and leaf.shape[i] >= dsz:
+                axes[i] = dpa if len(dpa) > 1 else dpa[0]
+                break
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(zero1, opt_shape)
+
+
+def _lookup(tree, path):
+    node = tree
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if key is None:
+            key = getattr(entry, "idx", None)
+        node = node[key]
+    return node
+
+
+def batch_specs(mesh, batch_shape) -> Any:
+    dpa = dp_axes(mesh)
+    dsz = dp_size(mesh)
+
+    def one(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        first = (dpa if len(dpa) > 1 else dpa[0]) if (b % dsz == 0 and b >= dsz) else None
+        return P(*([first] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_specs(mesh, cfg, caches_shape) -> Any:
+    """KV/SSM cache specs for decode: batch over dp when divisible, the long
+    sequence window over ``model``, ssm heads over ``model`` when divisible."""
+    dpa = dp_axes(mesh)
+    dsz = dp_size(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    dp_ax = dpa if len(dpa) > 1 else dpa[0]
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        sh = leaf.shape
+        if name == "pos" or leaf.ndim <= 1:
+            return P(*([None] * leaf.ndim))
+        if name in ("k", "v", "k_scale", "v_scale"):
+            # stacked [L(, G), B, S, K, hd|1] or unstacked [B, S, K, hd|1]
+            lead = leaf.ndim - 4
+            batch = sh[lead]
+            seq = sh[lead + 1]
+            return P(*([None] * lead
+                       + [dp_ax if batch % dsz == 0 and batch >= dsz else None,
+                          _div(mesh, tp, seq), None, None]))
+        if name == "state":
+            # [..., B, H, P, N]
+            lead = leaf.ndim - 4
+            batch = sh[lead]
+            return P(*([None] * lead
+                       + [dp_ax if batch % dsz == 0 and batch >= dsz else None,
+                          _div(mesh, tp, sh[lead + 1]), None, None]))
+        if name == "conv":
+            # [..., B, Kw-1, Ch]
+            lead = leaf.ndim - 3
+            batch = sh[lead]
+            return P(*([None] * lead
+                       + [dp_ax if batch % dsz == 0 and batch >= dsz else None,
+                          None, _div(mesh, tp, sh[lead + 2])]))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input stand-ins per (architecture x shape) — no allocation."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import LM_SHAPES, ModelConfig, ShapeConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        St = S // cfg.tgt_frac
+        return {
+            "src_embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+            "tgt_tokens": sds((B, St), jnp.int32),
+            "labels": sds((B, St), jnp.int32),
+        }
+    if cfg.modality == "vision_stub":
+        return {
+            "embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+            "labels": sds((B, S), jnp.int32),
+        }
+    return {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"src_embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+                "tgt_tokens": sds((B, S // cfg.tgt_frac), jnp.int32)}
+    if cfg.modality == "vision_stub":
+        return {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, Dict]:
+    """Returns (caches_shape_tree, token_inputs) for one serve step with a
+    KV window of ``shape.seq_len``."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        enc_out = sds((B, S, cfg.d_model), jnp.bfloat16)
+        caches = jax.eval_shape(
+            lambda eo: encdec.make_dec_caches(
+                {"dec_layers": jax.eval_shape(
+                    lambda k: encdec.init(k, cfg), jax.random.PRNGKey(0)
+                )["dec_layers"]}, cfg, eo, window=S),
+            enc_out)
+        return caches, {"tokens": sds((B, 1), jnp.int32)}
+    caches = jax.eval_shape(lambda: lm.make_caches(cfg, B, S))
+    return caches, {"tokens": sds((B, 1), jnp.int32)}
+
+
+def params_shape(cfg: ModelConfig):
+    mod = encdec if cfg.family == "encdec" else lm
+    return jax.eval_shape(lambda k: mod.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    return LM_SHAPES[name]

@@ -1,0 +1,113 @@
+"""Train / prefill / serve step builders shared by train.py, serve.py, dryrun.py."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, adamw_update
+
+
+def _model(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else lm
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, mesh=None,
+                    grad_specs=None):
+    """``grad_specs``: optional PartitionSpec tree for the f32 gradient
+    accumulator — pass the ZeRO-1 optimizer-state specs to reduce-scatter
+    microbatch gradients over the data axis instead of holding a full f32
+    copy per chip (ZeRO-2; −(dp-1)/dp of grad memory)."""
+    mod = _model(cfg)
+
+    def loss(p, mb):
+        return mod.loss_fn(p, cfg, mb, mesh)
+
+    def constrain(g):
+        if grad_specs is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), g, grad_specs)
+
+    dp_sz = 1
+    if mesh is not None:
+        try:
+            for name in mesh.axis_names:
+                if name in ("pod", "data", "replica"):
+                    dp_sz *= mesh.shape[name]
+        except (TypeError, KeyError):
+            dp_sz = 1
+
+    def train_step(params, opt_state, batch):
+        # clamp microbatching so every micro-slice still shards over dp:
+        # B/n_micro must be divisible by dp (else XLA silently replicates
+        # the micro-batch across the surplus data ranks — observed as
+        # unchanged per-device FLOPs on the 2-pod mesh).
+        B = jax.tree.leaves(batch)[0].shape[0]
+        n_micro = max(1, min(cfg.microbatch, B // max(1, dp_sz)))
+        while n_micro > 1 and (B % n_micro or (B // n_micro) % dp_sz):
+            n_micro -= 1
+        if n_micro > 1:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch)
+            zeros = constrain(jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params))
+
+            def micro(acc, mb):
+                (lval, metrics), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                g = constrain(jax.tree.map(lambda b: b.astype(jnp.float32), g))
+                acc = constrain(jax.tree.map(lambda a, b: a + b, acc, g))
+                return acc, lval
+
+            acc, losses = jax.lax.scan(micro, zeros, mb_batch)
+            grads = jax.tree.map(lambda a: a / n_micro, acc)
+            lval = jnp.mean(losses)
+        else:
+            (lval, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+            grads = constrain(jax.tree.map(lambda g: g.astype(jnp.float32),
+                                           grads))
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, {"loss": lval, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    mod = _model(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            enc_out = encdec.encode(params, cfg, batch["src_embeds"])
+            h = encdec.decode_train(params, cfg, enc_out, batch["tgt_tokens"])
+            logits = jnp.einsum("bd,dv->bv", h[:, -1],
+                                encdec.unembed_matrix(params),
+                                preferred_element_type=jnp.float32)
+            return logits, enc_out
+        logits, caches = lm.prefill(
+            params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            mesh=mesh)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    """One decode step: greedy next token + updated caches."""
+
+    def serve_step(params, caches, tokens):
+        if cfg.family == "encdec":
+            logits, new_caches = encdec.decode_step(params, cfg, tokens, caches)
+        else:
+            logits, new_caches = lm.decode_step(params, cfg, tokens, caches,
+                                                mesh=mesh)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, new_caches
+
+    return serve_step

@@ -1,0 +1,16 @@
+"""Model zoo: dense/MoE/SSM/hybrid decoder LMs + encoder-decoder."""
+
+from . import encdec, lm
+from .config import (
+    LM_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+    get_config,
+    list_configs,
+)
+
+__all__ = [
+    "encdec", "lm", "LM_SHAPES", "ModelConfig", "ShapeConfig",
+    "applicable_shapes", "get_config", "list_configs",
+]

@@ -1,0 +1,61 @@
+"""Shared model components: norms, rope, activations, init helpers."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm with f32 statistics.
+
+    The sum-of-squares is accumulated in f32 via einsum rather than
+    materializing convert(x) — with layer-stacked scans XLA otherwise keeps a
+    whole-stack f32 *copy* of the saved bf16 activations alive for the
+    backward pass (observed: +8 GiB/dev on a 32L model; see EXPERIMENTS.md
+    §Perf memory iteration 1)."""
+    dt = x.dtype
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss / d + eps)[..., None]
+    return (x * (inv * scale.astype(jnp.float32)).astype(dt)).astype(dt)
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "squared_relu": squared_relu,
+}
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

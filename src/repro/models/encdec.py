@@ -1,0 +1,159 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech/text frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings [B, S_src, d].  The decoder is a standard causal
+transformer with cross-attention; decode_step runs one target token against a
+self-attention KV cache plus the precomputed cross-attention cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, split_keys
+from .config import ModelConfig
+from .layers import attention, init_attention, init_mlp, make_cache, mlp
+from .lm import lm_loss_from_h, unembed_matrix
+from .sharding import dp, shard, tp
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ks = split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg, dtype=dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    ks = split_keys(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": init_attention(ks[0], cfg, dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": init_attention(ks[1], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[2], cfg, dtype=dtype),
+    }
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    ks = split_keys(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "embed": dense_init(ks[2], (cfg.vocab, cfg.d_model), in_axis=1, dtype=dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(ks[3], (cfg.d_model, cfg.vocab), dtype=dtype),
+    }
+
+
+def _maybe_remat(fn, cfg, train):
+    return jax.checkpoint(fn) if (train and cfg.remat) else fn
+
+
+def encode(params, cfg: ModelConfig, src_embeds, train=False):
+    B, S = src_embeds.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = shard(src_embeds, dp(), None, None)
+
+    def body(hh, p):
+        a, _ = attention(p["attn"], rms_norm(hh, p["ln1"], cfg.norm_eps),
+                         positions, cfg, causal=False)
+        hh = hh + a
+        hh = hh + mlp(p["mlp"], rms_norm(hh, p["ln2"], cfg.norm_eps), cfg)
+        return hh, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg, train), h, params["enc_layers"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(p, h, positions, enc_out, cfg, self_cache=None, cross_cache=None):
+    a, new_self = attention(p["self_attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                            positions, cfg, causal=True, cache=self_cache)
+    h = h + a
+    x, new_cross = attention(p["cross_attn"], rms_norm(h, p["ln_x"], cfg.norm_eps),
+                             positions, cfg, causal=False, cache=cross_cache,
+                             kv_from=enc_out, cross=True)
+    h = h + x
+    h = h + mlp(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h, new_self, new_cross
+
+
+def decode_train(params, cfg: ModelConfig, enc_out, tgt_tokens, train=False):
+    B, S = tgt_tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = jnp.take(params["embed"], tgt_tokens, axis=0)
+    h = shard(h, dp(), None, None)
+
+    def body(hh, p):
+        hh, _, _ = _dec_block(p, hh, positions, enc_out, cfg)
+        return hh, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg, train), h, params["dec_layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, mesh=None):
+    """batch: {"src_embeds": [B,Ss,d], "tgt_tokens": [B,St], "labels": [B,St]}."""
+    enc_out = encode(params, cfg, batch["src_embeds"], train=True)
+    h = decode_train(params, cfg, enc_out, batch["tgt_tokens"], train=True)
+    ce = lm_loss_from_h(params, cfg, h, batch["labels"])
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_dec_caches(params, cfg: ModelConfig, enc_out, window: int,
+                    dtype=jnp.bfloat16):
+    """Self caches (empty, `window` long) + cross caches (from enc_out)."""
+    B = enc_out.shape[0]
+    L = cfg.n_dec_layers
+    one = make_cache(cfg, B, window, dtype)
+    self_caches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape).copy(), one)
+
+    K, hd = cfg.n_kv_heads, cfg.hd
+
+    def one_cross(p):
+        Skv = enc_out.shape[1]
+        k = jnp.einsum("bsd,dn->bsn", enc_out, p["cross_attn"]["wk"]) \
+            .reshape(B, Skv, K, hd)
+        v = jnp.einsum("bsd,dn->bsn", enc_out, p["cross_attn"]["wv"]) \
+            .reshape(B, Skv, K, hd)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    cross = jax.vmap(one_cross)(params["dec_layers"])
+    return {"self": self_caches, "cross": cross}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, mesh=None):
+    """tokens: [B, 1] target token; caches from make_dec_caches."""
+    h = jnp.take(params["embed"], tokens, axis=0)
+    B = h.shape[0]
+    pos0 = caches["self"]["pos"][0]
+    positions = jnp.broadcast_to(pos0[None, None], (B, 1))
+
+    def body(carry, xs):
+        hh = carry
+        p, self_c, cross_c = xs
+        hh, new_self, _ = _dec_block(p, hh, positions, None, cfg,
+                                     self_cache=self_c, cross_cache=cross_c)
+        return hh, new_self
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["dec_layers"], caches["self"], caches["cross"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, unembed_matrix(params),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,413 @@
+"""Decoder-only LM assembly for all four families: dense, moe, ssm, hybrid.
+
+Layer stacks are ``lax.scan`` over stacked parameters (one layer's HLO,
+iterated — keeps compile time and HLO size flat in depth), with per-layer
+``jax.checkpoint`` for training.  The hybrid (zamba2) family scans over
+*groups* of ``attn_period`` Mamba2 layers followed by one application of a
+single *shared* attention+MLP block (parameters closed over, not scanned).
+
+Entry points:
+  init(key, cfg)                        -> params pytree
+  loss_fn(params, cfg, batch, mesh)     -> (loss, metrics)
+  prefill(params, cfg, tokens|embeds)   -> (last-token logits, caches)
+  decode_step(params, cfg, token, caches, mesh) -> (logits, caches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm, split_keys
+from .config import ModelConfig
+from .layers import attention, init_attention, init_mlp, init_moe, make_cache, mlp, moe
+from .sharding import dp, shard, tp
+from .ssm import init_ssm, make_ssm_cache, ssm_block
+
+
+# =============================================================================
+# init
+# =============================================================================
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        ks = split_keys(key, 2)
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "ssm": init_ssm(ks[0], cfg, dtype)}
+    ks = split_keys(key, 3)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg, dtype=dtype)
+    return p
+
+
+def _init_shared_attn(key, cfg: ModelConfig, dtype):
+    """Zamba2's shared attention+MLP block (one copy, applied every period)."""
+    ks = split_keys(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg, dtype=dtype),
+    }
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    ks = split_keys(key, 4)
+    L = cfg.n_layers
+    layer_keys = jax.random.split(ks[0], L)
+    layers = jax.vmap(lambda k: _init_block(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": dense_init(ks[1], (cfg.vocab, cfg.d_model), in_axis=1, dtype=dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[2], (cfg.d_model, cfg.vocab), dtype=dtype)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_shared_attn(ks[3], cfg, dtype)
+    return params
+
+
+# =============================================================================
+# blocks
+# =============================================================================
+
+def _dense_block(p, h, positions, cfg: ModelConfig, mesh=None, cache=None):
+    a, new_cache = attention(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                             positions, cfg, causal=True, cache=cache)
+    h = h + a
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        m, aux = moe(p["moe"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg, mesh)
+    else:
+        m = mlp(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h + m, aux, new_cache
+
+
+def _ssm_layer(p, h, cfg: ModelConfig, cache=None):
+    s, new_cache = ssm_block(p["ssm"], rms_norm(h, p["ln"], cfg.norm_eps),
+                             cfg, cache=cache)
+    return h + s, new_cache
+
+
+def _shared_attn_block(p, h, positions, cfg: ModelConfig, cache=None):
+    a, new_cache = attention(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                             positions, cfg, causal=True, cache=cache)
+    h = h + a
+    h = h + mlp(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
+    return h, new_cache
+
+
+# =============================================================================
+# stacks (scan over layers)
+# =============================================================================
+
+def _maybe_remat(fn, cfg: ModelConfig, train: bool):
+    if train and cfg.remat:
+        return jax.checkpoint(fn)
+    return fn
+
+
+def _stack_dense(params, h, positions, cfg, mesh, train):
+    def block(layer_p, hh):
+        hh, a, _ = _dense_block(layer_p, hh, positions, cfg, mesh)
+        return hh, a
+
+    block = _maybe_remat(block, cfg, train)
+
+    def body(hh, layer_p):
+        hh, a = block(layer_p, hh)
+        return hh, a
+
+    h, auxs = jax.lax.scan(body, h, params["layers"])
+    return h, jnp.sum(auxs)
+
+
+def _stack_ssm(params, h, positions, cfg, mesh, train):
+    def body(carry, layer_p):
+        hh = _ssm_layer(layer_p, carry, cfg)[0]
+        return hh, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg, train), h, params["layers"])
+    return h, jnp.zeros((), jnp.float32)
+
+
+def _group_params(layers, period: int, n_groups: int, tail: int):
+    main = jax.tree.map(lambda x: x[: n_groups * period].reshape(
+        (n_groups, period) + x.shape[1:]), layers)
+    tail_p = jax.tree.map(lambda x: x[n_groups * period:], layers)
+    return main, tail_p
+
+
+def _stack_hybrid(params, h, positions, cfg, mesh, train):
+    period = cfg.attn_period
+    L = cfg.n_layers
+    n_groups, tail = L // period, L % period
+    main, tail_p = _group_params(params["layers"], period, n_groups, tail)
+    shared = params["shared_attn"]
+
+    def group_body(carry, group_p):
+        hh = carry
+
+        def inner(c, lp):
+            return _ssm_layer(lp, c, cfg)[0], None
+
+        hh, _ = jax.lax.scan(inner, hh, group_p)
+        hh, _ = _shared_attn_block(shared, hh, positions, cfg)
+        return hh, None
+
+    h, _ = jax.lax.scan(_maybe_remat(group_body, cfg, train), h, main)
+    if tail:
+        def inner_t(c, lp):
+            return _ssm_layer(lp, c, cfg)[0], None
+
+        h, _ = jax.lax.scan(_maybe_remat(inner_t, cfg, train), h, tail_p)
+    return h, jnp.zeros((), jnp.float32)
+
+
+_STACKS = {"dense": _stack_dense, "moe": _stack_dense,
+           "ssm": _stack_ssm, "hybrid": _stack_hybrid}
+
+
+# =============================================================================
+# forward / loss
+# =============================================================================
+
+def embed_tokens(params, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    return shard(e, dp(), None, None)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, mesh=None,
+            train: bool = False):
+    h = embed_tokens(params, tokens) if embeds is None else embeds
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = shard(h, dp(), None, None)
+    h, aux = _STACKS[cfg.family](params, h, positions, cfg, mesh, train)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def unembed_matrix(params):
+    if "unembed" in params:
+        return params["unembed"]                       # [d, V]
+    return params["embed"].T                           # tied
+
+
+def lm_loss_from_h(params, cfg: ModelConfig, h, labels):
+    """Cross entropy with vocab-sharded logits.
+
+    logsumexp reduces over the sharded vocab dim (SPMD all-reduce over tp);
+    the label logit is recovered by gathering unembedding *rows* — avoids a
+    gather on the [B,S,V] tensor."""
+    W = unembed_matrix(params)                         # [d, V]
+    logits = jnp.einsum("bsd,dv->bsv", h, W, preferred_element_type=jnp.float32)
+    logits = shard(logits, dp(), None, tp())
+    lse = jax.nn.logsumexp(logits, axis=-1)            # [B, S]
+    rows = jnp.take(W.T, labels, axis=0)               # [B, S, d]
+    label_logit = jnp.einsum("bsd,bsd->bs", h.astype(jnp.float32),
+                             rows.astype(jnp.float32))
+    return jnp.mean(lse - label_logit)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, mesh=None):
+    """batch: {"tokens": [B,S]} or {"embeds": [B,S,d]}, with {"labels": [B,S]}."""
+    h, aux = forward(params, cfg,
+                     tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                     mesh=mesh, train=True)
+    ce = lm_loss_from_h(params, cfg, h, batch["labels"])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# =============================================================================
+# serving: prefill + decode
+# =============================================================================
+
+def make_caches(cfg: ModelConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe"):
+        one = make_cache(cfg, batch, length, dtype)
+        return {"attn": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (L,) + x.shape).copy(), one)}
+    if cfg.family == "ssm":
+        one = make_ssm_cache(cfg, batch, dtype)
+        return {"ssm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (L,) + x.shape).copy(), one)}
+    # hybrid
+    period = cfg.attn_period
+    n_groups, tail = cfg.n_layers // period, cfg.n_layers % period
+    ssm_one = make_ssm_cache(cfg, batch, dtype)
+    attn_one = make_cache(cfg, batch, length, dtype)
+    return {
+        "ssm_main": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None, None],
+                                       (n_groups, period) + x.shape).copy(), ssm_one),
+        "ssm_tail": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (tail,) + x.shape).copy(), ssm_one),
+        "attn": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape).copy(),
+            attn_one),
+    }
+
+
+def grow_caches(cfg: ModelConfig, caches, window: int):
+    """Pad attention KV windows (from prefill) up to ``window`` for decoding."""
+    def pad_kv(c):
+        cur = c["k"].shape[2]  # [L, B, S, K, hd]
+        if cur >= window:
+            return c
+        pad = window - cur
+        out = {
+            key: (jnp.pad(val, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                  if key != "pos" else val)
+            for key, val in c.items()
+        }
+        return out
+
+    out = dict(caches)
+    if "attn" in caches and caches["attn"] is not None:
+        out["attn"] = pad_kv(caches["attn"])
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, mesh=None,
+                embeds=None):
+    """One token for every sequence in the batch.  tokens: [B, 1]."""
+    h = embed_tokens(params, tokens) if embeds is None else embeds
+    B = h.shape[0]
+
+    if cfg.family in ("dense", "moe"):
+        pos0 = caches["attn"]["pos"][0]
+        positions = jnp.broadcast_to(pos0[None, None], (B, 1))
+
+        def body(carry, xs):
+            hh = carry
+            layer_p, cache_l = xs
+            hh, aux, new_c = _dense_block(layer_p, hh, positions, cfg, mesh,
+                                          cache=cache_l)
+            return hh, new_c
+
+        h, new_attn = jax.lax.scan(body, h, (params["layers"], caches["attn"]))
+        new_caches = {"attn": new_attn}
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            layer_p, cache_l = xs
+            hh, new_c = _ssm_layer(layer_p, carry, cfg, cache=cache_l)
+            return hh, new_c
+
+        h, new_ssm = jax.lax.scan(body, h, (params["layers"], caches["ssm"]))
+        new_caches = {"ssm": new_ssm}
+    else:  # hybrid
+        period = cfg.attn_period
+        n_groups, tail = cfg.n_layers // period, cfg.n_layers % period
+        main, tail_p = _group_params(params["layers"], period, n_groups, tail)
+        shared = params["shared_attn"]
+        pos0 = caches["attn"]["pos"][0]
+        positions = jnp.broadcast_to(pos0[None, None], (B, 1))
+
+        def group_body(carry, xs):
+            hh = carry
+            group_p, ssm_c, attn_c = xs
+
+            def inner(c, lp_and_cache):
+                lp, sc = lp_and_cache
+                h2, nsc = _ssm_layer(lp, c, cfg, cache=sc)
+                return h2, nsc
+
+            hh, new_ssm_c = jax.lax.scan(inner, hh, (group_p, ssm_c))
+            hh, new_attn_c = _shared_attn_block(shared, hh, positions, cfg,
+                                                cache=attn_c)
+            return hh, (new_ssm_c, new_attn_c)
+
+        h, (new_ssm_main, new_attn) = jax.lax.scan(
+            group_body, h, (main, caches["ssm_main"], caches["attn"]))
+        new_ssm_tail = caches["ssm_tail"]
+        if tail:
+            def inner_t(c, xs):
+                lp, sc = xs
+                h2, nsc = _ssm_layer(lp, c, cfg, cache=sc)
+                return h2, nsc
+
+            h, new_ssm_tail = jax.lax.scan(inner_t, h,
+                                           (tail_p, caches["ssm_tail"]))
+        new_caches = {"ssm_main": new_ssm_main, "ssm_tail": new_ssm_tail,
+                      "attn": new_attn}
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, unembed_matrix(params),
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, dp(), None, tp())
+    return logits[:, 0], new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, mesh=None):
+    """Process the prompt; returns (last-position logits, caches primed at S).
+
+    Uses the full-sequence path per layer and records caches.  For attention
+    families the cache window equals the prompt length (decode then grows it —
+    the dry-run decode shape allocates the full window instead)."""
+    h = embed_tokens(params, tokens) if embeds is None else embeds
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, layer_p):
+            hh = carry
+            hh, aux, cache = _dense_block(layer_p, hh, positions, cfg, mesh,
+                                          cache={})
+            return hh, cache
+
+        h, caches = jax.lax.scan(body, h, params["layers"])
+        new_caches = {"attn": caches}
+    elif cfg.family == "ssm":
+        def body(carry, layer_p):
+            hh, c = _ssm_layer(layer_p, carry, cfg,
+                               cache=make_ssm_cache(cfg, B, h.dtype))
+            return hh, c
+
+        h, caches = jax.lax.scan(body, h, params["layers"])
+        new_caches = {"ssm": caches}
+    else:
+        period = cfg.attn_period
+        n_groups, tail = cfg.n_layers // period, cfg.n_layers % period
+        main, tail_p = _group_params(params["layers"], period, n_groups, tail)
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_p):
+            hh = carry
+
+            def inner(c, lp):
+                h2, sc = _ssm_layer(lp, c, cfg, cache=make_ssm_cache(cfg, B, h.dtype))
+                return h2, sc
+
+            hh, ssm_c = jax.lax.scan(inner, hh, group_p)
+            hh, attn_c = _shared_attn_block(shared, hh, positions, cfg, cache={})
+            return hh, (ssm_c, attn_c)
+
+        h, (ssm_main, attn_c) = jax.lax.scan(group_body, h, main)
+        ssm_tail = None
+        if tail:
+            def inner_t(c, lp):
+                h2, sc = _ssm_layer(lp, c, cfg, cache=make_ssm_cache(cfg, B, h.dtype))
+                return h2, sc
+
+            h, ssm_tail = jax.lax.scan(inner_t, h, tail_p)
+        new_caches = {"ssm_main": ssm_main, "ssm_tail": ssm_tail, "attn": attn_c}
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], unembed_matrix(params),
+                        preferred_element_type=jnp.float32)
+    return logits, new_caches

@@ -1,0 +1,83 @@
+"""Logical-axis sharding helpers.
+
+Models annotate activations with *logical* axes (dp = batch, tp = tensor/model
+parallel) and parameters with PartitionSpecs built from the same vocabulary.
+The mapping adapts to the active mesh: on the multi-pod mesh the batch axis
+spans ("pod", "data"); on the single-pod mesh just "data"; on a test mesh
+whatever is registered.  ``set_mesh_axes`` is called by the launcher (and by
+tests) before tracing.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh_axes(dp: Tuple[str, ...] = ("data",), tp: Optional[str] = "model"):
+    _state.dp = tuple(dp)
+    _state.tp = tp
+
+
+def axes_from_mesh(mesh) -> None:
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data", "replica"))
+    tp = "model" if "model" in names else None
+    set_mesh_axes(dp or ("data",), tp)
+
+
+def dp() -> Union[Tuple[str, ...], str, None]:
+    d = getattr(_state, "dp", ("data",))
+    if len(d) == 1:
+        return d[0]
+    return d
+
+
+def tp() -> Optional[str]:
+    return getattr(_state, "tp", "model")
+
+
+def shard(x, *spec):
+    """with_sharding_constraint, tolerant of running without a mesh (tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def tp_size(mesh=None) -> int:
+    m = mesh or _current_mesh()
+    if m is None or tp() is None:
+        return 1
+    try:
+        return m.shape[tp()]
+    except (KeyError, TypeError):
+        return 1
+
+
+def _current_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    if m is not None and not m.empty:
+        return m
+    return None
+
+
+def div_or_none(n: int, axis_name: Optional[str], mesh=None):
+    """Return axis_name if it divides n on the active mesh, else None.
+
+    Used for dims that are only sometimes shardable (e.g. kv heads < tp)."""
+    if axis_name is None:
+        return None
+    m = mesh or _current_mesh()
+    if m is None:
+        return axis_name
+    try:
+        size = m.shape[axis_name]
+    except (KeyError, TypeError):
+        return None
+    return axis_name if n % size == 0 and n >= size else None

@@ -1,0 +1,205 @@
+"""Mamba2 — state-space duality (SSD) block, chunked (arXiv:2405.21060).
+
+The SSD recurrence  h_t = a_t·h_{t-1} + (dt_t x_t) ⊗ B_t,  y_t = C_t·h_t + D·x_t
+is computed in matrix form over chunks of length Q: a quadratic intra-chunk
+term (attention-like, masked by the decay kernel) plus an inter-chunk state
+carried by a lax.scan — O(S·Q) instead of O(S²), and O(1) per decode step.
+
+Layout: d_inner = expand·d_model split into H = d_inner/P heads of dim P;
+B, C are single-group [*, N] (G=1).  A short causal depthwise conv precedes
+x, B, C as in the reference implementation.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init, rms_norm, split_keys
+from .config import ModelConfig
+from .sharding import dp, shard, tp
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = split_keys(key, 4)
+    conv_ch = di + 2 * N
+    return {
+        # in_proj packs [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dtype=dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    Bm = zxbcdt[..., 2 * di:2 * di + N]
+    Cm = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along S.  xbc: [B, S, Ch]; w: [Kw, Ch]."""
+    Kw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (Kw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(Kw):
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(x, dt, A_log, Bm, Cm, cfg: ModelConfig,
+                h0: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H] (post-softplus); Bm, Cm: [B, S, N].
+    Returns (y [B, S, H, P], h_final [B, H, P, N]).
+    """
+    B, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad with dt = 0 steps: decay a = exp(0) = 1 and zero input, so the
+        # state passes through unchanged and padded outputs are discarded.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    a_log = (-jnp.exp(A_log)[None, None] * dt).astype(jnp.float32)   # [B, S, H]
+
+    xc = x.reshape(B, nc, Q, H, Pd)
+    dtc = dt.reshape(B, nc, Q, H)
+    alc = a_log.reshape(B, nc, Q, H)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    L = jnp.cumsum(alc, axis=2)                                       # [B,nc,Q,H]
+    Ltot = L[:, :, -1]                                                # [B,nc,H]
+
+    # intra-chunk: scores[t,s] = (C_t·B_s) exp(L_t - L_s) dt_s for t >= s
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc,
+                    preferred_element_type=jnp.float32)               # [B,nc,Q,Q]
+    decay = L[:, :, :, None, :] - L[:, :, None, :, :]                 # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    scores = jnp.where(tri[None, None, :, :, None],
+                       jnp.exp(decay) * cb[..., None], 0.0)
+    scores = scores * dtc[:, :, None, :, :]                           # dt_s factor
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores,
+                         xc.astype(jnp.float32))
+
+    # per-chunk outgoing state: S_c = sum_s exp(Ltot - L_s) dt_s x_s B_s^T
+    w_out = jnp.exp(Ltot[:, :, None] - L) * dtc                       # [B,nc,Q,H]
+    chunk_state = jnp.einsum("bcqh,bcqhp,bcqn->bchpn",
+                             w_out, xc.astype(jnp.float32), Bc.astype(jnp.float32))
+
+    # inter-chunk scan over nc
+    if h0 is None:
+        h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def body(h, inp):
+        st, ltot = inp                                                # [B,H,P,N], [B,H]
+        h_prev = h
+        h = jnp.exp(ltot)[:, :, None, None] * h + st
+        return h, h_prev
+
+    (h_fin, h_prevs) = jax.lax.scan(
+        body, h0, (chunk_state.transpose(1, 0, 2, 3, 4), Ltot.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                        # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_t += C_t · (exp(L_t) h_prev)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc.astype(jnp.float32), jnp.exp(L), h_prevs)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)[:, :S_orig]
+    return y.astype(x.dtype), h_fin
+
+
+def ssm_block(params: Dict, u: jnp.ndarray, cfg: ModelConfig,
+              cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """One Mamba2 block.  u: [B, S, d].  With ``cache`` and S == 1: decode step.
+
+    cache = {"conv": [B, Kw-1, Ch], "state": [B, H, P, N]}.
+    """
+    B, S, d = u.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = jnp.einsum("bsd,dn->bsn", u, params["in_proj"])
+    zxbcdt = shard(zxbcdt, dp(), None, tp())
+    z, xr, Bm, Cm, dtr = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)
+
+    if cache is not None and S == 1:
+        # ---- decode: O(1) state update --------------------------------------
+        Kw = cfg.ssm_conv
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)       # [B,Kw,Ch]
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                              params["conv"].astype(jnp.float32))
+        conv_out = jax.nn.silu(conv_out + params["conv_bias"].astype(jnp.float32))
+        xr1 = conv_out[:, :di].reshape(B, H, Pd)
+        Bm1 = conv_out[:, di:di + N]
+        Cm1 = conv_out[:, di + N:]
+        dt1 = jax.nn.softplus(dtr[:, 0].astype(jnp.float32)
+                              + params["dt_bias"])                    # [B,H]
+        a = jnp.exp(-jnp.exp(params["A_log"])[None] * dt1)            # [B,H]
+        h = cache["state"]
+        h = a[:, :, None, None] * h + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt1, xr1.astype(jnp.float32),
+            Bm1.astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cm1.astype(jnp.float32), h)
+        y = y + params["D"][None, :, None] * xr1.astype(jnp.float32)
+        y = y.reshape(B, 1, di)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y = rms_norm(y.astype(u.dtype), params["norm"], cfg.norm_eps)
+        out = jnp.einsum("bsn,nd->bsd", y, params["out_proj"])
+        new_cache = {"conv": window[:, 1:], "state": h}
+        return out, new_cache
+
+    # ---- full sequence -------------------------------------------------------
+    xbc = _causal_conv(xbc, params["conv"], params["conv_bias"])
+    xr = xbc[..., :di].reshape(B, S, H, Pd)
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:]
+    dtf = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])
+    y, h_fin = ssd_chunked(xr, dtf, params["A_log"], Bm, Cm, cfg)
+    y = y.reshape(B, S, di)
+    y = (y.astype(jnp.float32) + (params["D"][None, None, :, None]
+                                  * xr.astype(jnp.float32)).reshape(B, S, di))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(u.dtype), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsn,nd->bsd", y, params["out_proj"])
+    new_cache = None
+    if cache is not None:
+        Kw = cfg.ssm_conv
+        new_cache = {"conv": xbc_tail(u, params, cfg, Kw),
+                     "state": h_fin}
+    return shard(out, dp(), None, None), new_cache
+
+
+def xbc_tail(u, params, cfg, Kw):
+    """Last Kw-1 pre-conv features (for seeding a decode cache after prefill)."""
+    di, N = cfg.d_inner, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,dn->bsn", u[:, -(Kw - 1):], params["in_proj"])
+    _, xr, Bm, Cm, _ = _split_proj(cfg, zxbcdt)
+    return jnp.concatenate([xr, Bm, Cm], axis=-1)
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        "state": jnp.zeros((batch, H, Pd, N), jnp.float32),
+    }

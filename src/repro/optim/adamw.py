@@ -1,0 +1,89 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Optimizer state leaves (master/mu/nu) carry an extra data-axis sharding when
+divisible (ZeRO-1 style — see launch/partition.opt_specs), so the update step
+reduce-scatters gradients and all-gathers fresh params under SPMD instead of
+keeping 3 full fp32 copies per chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {
+        "master": f32(params),
+        "mu": zeros(params),
+        "nu": zeros(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule(step, cfg: OptConfig):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = opt_state["step"]
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        m = m - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * m)
+        return mu, nu, m
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    flat_m = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, mu, nu, m) for g, mu, nu, m in
+           zip(flat_g, flat_mu, flat_nu, flat_m)]
+    new_mu = treedef.unflatten([o[0] for o in out])
+    new_nu = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    flat_p = treedef.flatten_up_to(params)
+    new_params = treedef.unflatten(
+        [m.astype(p.dtype) for m, p in
+         zip([o[2] for o in out], flat_p)])
+    new_state = {"master": new_master, "mu": new_mu, "nu": new_nu,
+                 "step": step + 1}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

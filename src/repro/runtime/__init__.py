@@ -1,0 +1,12 @@
+from .compression import (
+    CompressionState,
+    init_compression,
+    topk_compress_with_feedback,
+)
+from .elastic import reshard_checkpoint
+from .failure import ResilientTrainer, StragglerMonitor
+
+__all__ = [
+    "CompressionState", "init_compression", "topk_compress_with_feedback",
+    "reshard_checkpoint", "ResilientTrainer", "StragglerMonitor",
+]

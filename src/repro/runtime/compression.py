@@ -1,0 +1,93 @@
+"""Distributed-optimization tricks: gradient compression + quantized reduce.
+
+* ``topk_compress_with_feedback`` — per-leaf magnitude top-k sparsification
+  with error feedback (Strom'15 / Aji-Heafield'17): the un-sent residual is
+  accumulated locally and re-added next step, preserving convergence.
+  At k=1% this cuts DP all-reduce bytes ~50x (values + indices).
+* ``quantized_psum`` — int8 block-quantized all-reduce emulation: quantize to
+  int8 with a per-block scale, sum, dequantize.  On the wire this is a 4x
+  reduction vs f32; here we model the numerics exactly (the sum is computed
+  on the quantized representatives) so tests can bound the quantization error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CompressionState:
+    error: Any   # pytree like grads — residual feedback
+
+
+def init_compression(params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params))
+
+
+def _topk_mask(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
+    n = x.size
+    k = max(1, int(round(k_frac * n)))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def topk_compress_with_feedback(
+    grads, state: CompressionState, k_frac: float = 0.01,
+) -> Tuple[Any, CompressionState, Any]:
+    """Returns (sparse_grads, new_state, metrics).
+
+    sparse_grads carries only the top-k fraction by magnitude (rest zero);
+    the residual goes into the error-feedback accumulator.
+    """
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        mask = _topk_mask(acc, k_frac)
+        sent = acc * mask
+        return sent, acc - sent
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    sent = treedef.unflatten([o[0] for o in outs])
+    err = treedef.unflatten([o[1] for o in outs])
+    density = sum(float(jnp.mean((o[0] != 0).astype(jnp.float32)))
+                  for o in outs) / max(1, len(outs))
+    return sent, CompressionState(error=err), {"sent_density": density}
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256):
+    """Block-wise symmetric int8 quantization.  Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, x.shape, pad
+
+
+def dequantize_int8(q, scale, shape, pad):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def quantized_psum(x: jnp.ndarray, axis_name, block: int = 256) -> jnp.ndarray:
+    """int8-on-the-wire psum: quantize locally, sum representatives, dequant.
+
+    Inside shard_map/pmap only.  Wire bytes: 1B/elem + 4B/block vs 4B/elem.
+    """
+    q, scale, shape, pad = quantize_int8(x, block)
+    deq = (q.astype(jnp.float32) * scale)
+    summed = jax.lax.psum(deq, axis_name)  # numerics of int8 representatives
+    flat = summed.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)

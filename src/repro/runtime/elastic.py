@@ -1,0 +1,47 @@
+"""Elastic scaling: restore any checkpoint onto a different mesh.
+
+Checkpoints are stored as host-complete arrays (checkpoint.store), so scaling
+from N to M devices is a re-shard at load: build the param/opt specs for the
+NEW mesh and device_put each leaf.  This is the recovery path when a pod is
+lost (shrink) or capacity returns (grow) — training resumes from the last
+good step with the same numerics modulo data order.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.launch import partition
+from repro.models.sharding import axes_from_mesh
+
+
+def shardings_for(mesh, cfg, params_shape, opt_shape=None):
+    p_specs = partition.params_specs(mesh, params_shape)
+    p_shard = partition.to_named(mesh, p_specs)
+    if opt_shape is None:
+        return p_shard, None
+    o_specs = partition.opt_specs(mesh, opt_shape, p_specs)
+    o_shard = partition.to_named(mesh, o_specs)
+    return p_shard, o_shard
+
+
+def reshard_checkpoint(
+    ckpt: CheckpointManager,
+    cfg,
+    new_mesh,
+    params_shape,
+    opt_shape,
+    step: Optional[int] = None,
+) -> Tuple[Any, Any]:
+    """Load (params, opt_state) from ``ckpt`` resharded onto ``new_mesh``."""
+    axes_from_mesh(new_mesh)
+    p_shard, o_shard = shardings_for(new_mesh, cfg, params_shape, opt_shape)
+    tree = ckpt.restore(
+        {"params": params_shape, "opt": opt_shape},
+        step=step,
+        target_shardings={"params": p_shard, "opt": o_shard},
+    )
+    return tree["params"], tree["opt"]

@@ -1,0 +1,241 @@
+"""Tests for the paper's core contribution: bounds, simulator, CR, CG.
+
+Each test names the paper statement it checks.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    connection_reordering,
+    generate,
+    random_ffnn,
+    simulate,
+    theorem1_bounds,
+)
+from repro.core.bounds import (
+    chain_order,
+    lemma1_net,
+    lemma2_net,
+    lemma3_net,
+    proposition2_net,
+)
+from repro.core.compact_growth import bandwidth_order
+from repro.core.graph import from_layer_sizes
+from repro.core.iosim import simulate as simulate_io
+from repro.core.reorder import _apply_move
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+small_nets = st.builds(
+    random_ffnn,
+    width=st.integers(4, 40),
+    depth=st.integers(2, 5),
+    density=st.floats(0.05, 0.6),
+    seed=st.integers(0, 10_000),
+)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(net=small_nets, M=st.integers(3, 120))
+def test_theorem1_bounds_hold_for_theorem1_order_min(net, M):
+    """Thm 1: the constructive order under MIN stays within all six bounds."""
+    b = theorem1_bounds(net)
+    s = simulate(net, net.theorem1_order(), M, "min")
+    assert b.reads_lo <= s.reads <= b.reads_hi
+    assert b.writes_lo <= s.writes <= b.writes_hi
+    assert b.total_lo <= s.total <= b.total_hi
+
+
+@settings(max_examples=25, deadline=None)
+@given(net=small_nets, M=st.integers(3, 120))
+def test_lower_bounds_hold_for_any_topological_order(net, M):
+    """Thm 1 lower bounds hold for *every* strategy, here the layer order."""
+    b = theorem1_bounds(net)
+    for policy in ("min", "lru", "rr"):
+        s = simulate(net, net.layer_order(), M, policy)
+        assert s.reads >= b.reads_lo
+        assert s.writes >= b.writes_lo
+
+
+def test_lemma1_attains_lower_bound_exactly():
+    net = lemma1_net(M=60)
+    b = theorem1_bounds(net)
+    s = simulate(net, net.theorem1_order(), M=60, policy="min")
+    assert (s.reads, s.writes) == (b.reads_lo, b.writes_lo)
+
+
+def test_lemma2_star_attains_read_upper_bound():
+    net = lemma2_net(500)
+    b = theorem1_bounds(net)
+    s = simulate(net, net.theorem1_order(), M=3, policy="min")
+    assert s.reads == b.reads_hi
+    assert s.total == b.total_hi
+
+
+def test_lemma3_write_heavy_net():
+    net = lemma3_net(n_inputs=20, hidden=5, n_outputs=200)
+    b = theorem1_bounds(net)
+    s = simulate(net, net.theorem1_order(), M=10, policy="min")
+    # S outputs must be written; with S >> h this approaches N - I
+    assert s.writes >= net.S
+    assert s.writes <= b.writes_hi
+
+
+def test_proposition2_layer_order_write_blowup():
+    """Prop 2: layer-by-layer needs >= M*c writes; chain-by-chain needs 1."""
+    M, c = 12, 6
+    net = proposition2_net(M, c)
+    layer_writes = simulate(net, net.layer_order(), M, "min").writes
+    chainw = simulate(net, chain_order(net), M, "min").writes
+    assert layer_writes >= M * c
+    assert chainw == 1
+
+
+# ---------------------------------------------------------------------------
+# Eviction policies
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(net=small_nets, M=st.integers(3, 100), use_layer=st.booleans())
+def test_min_is_optimal_among_policies(net, M, use_layer):
+    """Belady (MIN) never does worse than LRU or RR on the same order."""
+    order = net.layer_order() if use_layer else net.theorem1_order()
+    m = simulate(net, order, M, "min").total
+    assert m <= simulate(net, order, M, "lru").total
+    assert m <= simulate(net, order, M, "rr").total
+
+
+@settings(max_examples=20, deadline=None)
+@given(net=small_nets, M=st.integers(3, 100),
+       policy=st.sampled_from(["min", "lru", "rr"]))
+def test_c_accelerator_matches_python(net, M, policy):
+    a = simulate_io(net, net.theorem1_order(), M, policy, force_python=True)
+    b = simulate_io(net, net.theorem1_order(), M, policy)
+    assert (a.reads, a.writes) == (b.reads, b.writes)
+
+
+@settings(max_examples=15, deadline=None)
+@given(net=small_nets, policy=st.sampled_from(["min", "lru"]))
+def test_monotone_in_memory_size(net, policy):
+    """More fast memory never costs more I/Os (for stack policies)."""
+    order = net.theorem1_order()
+    prev = None
+    for M in (3, 8, 20, 60, 200):
+        cur = simulate(net, order, M, policy).total
+        if prev is not None and policy == "min":
+            assert cur <= prev
+        prev = cur
+
+
+def test_large_memory_reaches_lower_bound():
+    net = random_ffnn(width=30, depth=3, density=0.3, seed=7)
+    b = theorem1_bounds(net)
+    s = simulate(net, net.theorem1_order(), M=net.N + 2, policy="min")
+    assert (s.reads, s.writes) == (b.reads_lo, b.writes_lo)
+
+
+# ---------------------------------------------------------------------------
+# Connection Reordering (paper IV)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(net=small_nets, seed=st.integers(0, 1000),
+       i_frac=st.floats(0, 1), w=st.integers(0, 40),
+       direction=st.integers(0, 1))
+def test_moves_preserve_topological_validity(net, seed, i_frac, w, direction):
+    order = net.theorem1_order().astype(np.int64).tolist()
+    i = min(net.W - 1, int(i_frac * net.W))
+    new = _apply_move(list(order), net.src.tolist(), net.dst.tolist(), i, w, direction)
+    assert sorted(new) == list(range(net.W))
+    assert net.is_topological_connection_order(np.array(new))
+
+
+@settings(max_examples=8, deadline=None)
+@given(net=small_nets, M=st.integers(4, 60), seed=st.integers(0, 100))
+def test_cr_never_returns_worse_than_initial(net, M, seed):
+    order = net.theorem1_order()
+    res = connection_reordering(net, order, M, T=60, seed=seed)
+    assert res.ios <= res.initial_ios
+    assert net.is_topological_connection_order(res.order)
+
+
+def test_cr_preserves_network_function():
+    net = random_ffnn(width=25, depth=3, density=0.3, seed=11)
+    order = net.theorem1_order()
+    res = connection_reordering(net, order, M=10, T=150, seed=3)
+    x = np.random.default_rng(0).standard_normal(net.I)
+    np.testing.assert_allclose(net.forward(x, order), net.forward(x, res.order),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cr_reduces_ios_on_memory_pressure():
+    """With tight memory the initial 2-optimal order is improvable (paper VI.A.1)."""
+    net = random_ffnn(width=120, depth=4, density=0.1, seed=0)
+    res = connection_reordering(net, net.theorem1_order(), M=20, T=800, seed=0)
+    assert res.ios < res.initial_ios  # strictly improves on this instance
+
+
+# ---------------------------------------------------------------------------
+# Compact Growth (paper V)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(Mg=st.integers(5, 120), iters=st.integers(10, 300),
+       indeg=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_compact_growth_attains_lower_bound_at_Mg(Mg, iters, indeg, seed):
+    """Thm 2 'if' direction: CG nets run at the exact lower bound with M >= M_g."""
+    cg = generate(M_g=Mg, n_iters=iters, in_degree=indeg, seed=seed)
+    b = theorem1_bounds(cg.net)
+    s = simulate(cg.net, cg.order, Mg, "min")
+    assert (s.reads, s.writes) == (b.reads_lo, b.writes_lo)
+    # also with any larger memory
+    s2 = simulate(cg.net, cg.order, Mg + 50, "min")
+    assert (s2.reads, s2.writes) == (b.reads_lo, b.writes_lo)
+
+
+def test_compact_growth_below_Mg_needs_more_ios():
+    cg = generate(M_g=100, n_iters=400, in_degree=5, seed=1)
+    b = theorem1_bounds(cg.net)
+    tight = simulate(cg.net, cg.order, 20, "min")
+    assert tight.total > b.total_lo  # memory starvation costs extra I/Os
+
+
+@settings(max_examples=10, deadline=None)
+@given(net=small_nets)
+def test_corollary1_bandwidth_order(net):
+    """Cor 1: with M = bandwidth+2, the bandwidth order hits the lower bound."""
+    order, M = bandwidth_order(net)
+    b = theorem1_bounds(net)
+    s = simulate(net, order, M, "min")
+    assert (s.reads, s.writes) == (b.reads_lo, b.writes_lo)
+
+
+# ---------------------------------------------------------------------------
+# Graph / forward invariance
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(net=small_nets, seed=st.integers(0, 100))
+def test_forward_invariant_under_any_topological_order(net, seed):
+    x = np.random.default_rng(seed).standard_normal(net.I)
+    y1 = net.forward(x, net.theorem1_order())
+    y2 = net.forward(x, net.layer_order())
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+
+
+def test_order_validation_rejects_non_topological():
+    net = from_layer_sizes([2, 2, 1], [np.ones((2, 2), bool), np.ones((2, 1), bool)])
+    order = net.theorem1_order()
+    bad = order[::-1].copy()
+    assert not net.is_topological_connection_order(bad)
+    with pytest.raises(ValueError):
+        simulate(net, bad, 5, validate_order=True)

@@ -1,0 +1,38 @@
+"""Data pipeline: determinism across restarts (fault-tolerance contract)."""
+
+import numpy as np
+
+from repro.data import SyntheticLM, TokenBatcher
+
+
+def test_batcher_deterministic_in_step():
+    src = SyntheticLM(vocab=128, seed=3)
+    b1 = TokenBatcher(src, batch=4, seq_len=16, seed=9)
+    b2 = TokenBatcher(SyntheticLM(vocab=128, seed=3), batch=4, seq_len=16, seed=9)
+    for step in (0, 5, 17):
+        x1, x2 = b1(step), b2(step)
+        np.testing.assert_array_equal(x1["tokens"], x2["tokens"])
+        np.testing.assert_array_equal(x1["labels"], x2["labels"])
+
+
+def test_labels_are_shifted_tokens():
+    src = SyntheticLM(vocab=64, seed=0)
+    b = TokenBatcher(src, batch=2, seq_len=8, seed=0)(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+    # markov structure: labels[t] follows tokens[t] in the chain
+    assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
+
+
+def test_stream_has_learnable_structure():
+    """Transition entropy must be well below uniform (so training can learn)."""
+    src = SyntheticLM(vocab=32, seed=1)
+    rng = np.random.default_rng(0)
+    seqs = src.sample(rng, 64, 256)
+    # empirical bigram counts
+    joint = np.zeros((32, 32))
+    for row in seqs:
+        for a, b in zip(row[:-1], row[1:]):
+            joint[a, b] += 1
+    cond = joint / np.maximum(1, joint.sum(1, keepdims=True))
+    ent = -np.nansum(np.where(cond > 0, cond * np.log(cond), 0), axis=1).mean()
+    assert ent < 0.8 * np.log(32)

@@ -1,0 +1,70 @@
+"""HLO text analysis: shape parsing, trip-count-aware collective accounting."""
+
+import numpy as np
+
+from repro.launch.hlo_analysis import (
+    analyze_module,
+    model_flops_for,
+    shape_bytes,
+)
+from repro.models.config import LM_SHAPES
+from repro.configs import get_config
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,64]{1,0}") == 128 * 64 * 4
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("pred[8]") == 8
+    assert shape_bytes("(f32[4], s32[2,2])") == 16 + 16
+    assert shape_bytes("s32[]") == 4
+
+
+SYNTH = """
+HloModule test
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %ar = f32[8,8] all-reduce(%x), to_apply=%add_comp
+  %d = f32[8,8] dot(%ar, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[8,8]) tuple(%z, %a)
+  %w = (s32[], f32[8,8]) while(%tup), condition=%cond, body=%body
+  %ag = f32[16,8] all-gather(%a), dimensions={0}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_aware_collectives_and_flops():
+    mc = analyze_module(SYNTH)
+    # while trips 7x: all-reduce 7 * 256B; top-level all-gather operand 256B
+    assert mc.coll_by_op["all-reduce"] == 7 * 8 * 8 * 4
+    assert mc.coll_by_op["all-gather"] == 8 * 8 * 4
+    # dot: 2 * 8*8 (result) * 8 (contraction) = 1024 flops, 7 trips
+    assert mc.flops == 7 * 2 * 8 * 8 * 8
+    assert 7 in mc.trip_counts
+
+
+def test_model_flops_kinds():
+    cfg = get_config("codeqwen1.5-7b")
+    n = cfg.n_params()
+    t = LM_SHAPES["train_4k"]
+    assert model_flops_for(cfg, t) == 6.0 * n * t.global_batch * t.seq_len
+    d = LM_SHAPES["decode_32k"]
+    assert model_flops_for(cfg, d) == 2.0 * n * d.global_batch
+    moe = get_config("deepseek-moe-16b")
+    assert moe.n_active_params() < moe.n_params()

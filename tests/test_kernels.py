@@ -1,0 +1,118 @@
+"""Pallas kernel tests: interpret-mode allclose vs pure-jnp oracles,
+sweeping shapes / dtypes / densities, plus the schedule contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocksparse import to_bsr
+from repro.kernels.moe_ffn import moe_ffn
+from repro.kernels.ops import bsr_layer_ref, compile_schedule, scheduled_bsr_layer
+
+CASES = [
+    # (n_in, n_out, bm, bn, density, dtype, batch)
+    (256, 384, 128, 128, 0.5, jnp.float32, 16),
+    (256, 256, 64, 128, 0.3, jnp.bfloat16, 8),
+    (512, 256, 128, 64, 0.15, jnp.float32, 32),
+    (384, 512, 64, 64, 0.10, jnp.bfloat16, 8),
+    (128, 128, 128, 128, 1.0, jnp.float32, 8),
+    (512, 512, 64, 64, 0.05, jnp.float32, 8),
+    (256, 640, 128, 128, 0.25, jnp.bfloat16, 16),
+    (640, 256, 128, 128, 0.4, jnp.float32, 8),
+]
+
+
+@pytest.mark.parametrize("n_in,n_out,bm,bn,density,dtype,batch", CASES)
+def test_bsr_matmul_matches_ref(n_in, n_out, bm, bn, density, dtype, batch):
+    rng = np.random.default_rng(hash((n_in, n_out, bm, bn)) % 2**31)
+    w = rng.standard_normal((n_in, n_out)).astype(np.float32) * 0.1
+    b = rng.standard_normal(n_out).astype(np.float32) * 0.1
+    lay = to_bsr(w, bm, bn, density=density, bias=b)
+    perm = np.lexsort((lay.rows, lay.cols))  # theorem-1 grouped order
+    sch = compile_schedule(lay, perm)
+    x = jnp.asarray(rng.standard_normal((batch, n_in)), dtype=dtype)
+    y = scheduled_bsr_layer(x, lay, sch, activation=jax.nn.relu, interpret=True)
+    yr = bsr_layer_ref(x, lay, activation=jax.nn.relu)
+    a, r = y.astype(jnp.float32), yr.astype(jnp.float32)
+    err = float(jnp.max(jnp.abs(a - r) / (1.0 + jnp.abs(r))))
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    assert err < tol, err
+    assert y.dtype == x.dtype
+
+
+def test_bsr_matmul_no_activation_and_bias():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((256, 256)).astype(np.float32)
+    bias = rng.standard_normal(256).astype(np.float32)
+    lay = to_bsr(w, 64, 64, density=0.4, bias=bias)
+    sch = compile_schedule(lay, np.lexsort((lay.rows, lay.cols)))
+    x = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32)
+    y = scheduled_bsr_layer(x, lay, sch, activation=None, interpret=True)
+    yr = bsr_layer_ref(x, lay, activation=None)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_schedule_rejects_non_contiguous():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((256, 256)).astype(np.float32)
+    lay = to_bsr(w, 64, 64, density=0.8)
+    # row-major order interleaves output tiles -> must be rejected
+    perm = np.lexsort((lay.cols, lay.rows))
+    cols = lay.cols[perm]
+    if len(set(cols.tolist())) > 1 and not all(
+            cols[i] <= cols[i + 1] for i in range(len(cols) - 1)):
+        with pytest.raises(ValueError, match="contiguous"):
+            compile_schedule(lay, perm)
+
+
+def test_empty_output_tiles_get_bias():
+    """Output tiles with no nonzero block must still produce act(bias)."""
+    w = np.zeros((128, 256), np.float32)
+    w[:64, :64] = 1.0  # only the first output tile has mass
+    bias = np.arange(256, dtype=np.float32) * 0.01
+    lay = to_bsr(w, 64, 64, density=None, bias=bias)
+    assert lay.grid_out == 4 and lay.nnz_blocks < 4
+    sch = compile_schedule(lay, np.lexsort((lay.rows, lay.cols)))
+    x = jnp.ones((4, 128), jnp.float32)
+    y = scheduled_bsr_layer(x, lay, sch, activation=jax.nn.relu, interpret=True)
+    yr = bsr_layer_ref(x, lay, activation=jax.nn.relu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+
+
+MOE_CASES = [
+    (4, 16, 64, 256, 64, jnp.float32),
+    (2, 32, 128, 512, 128, jnp.float32),
+    (8, 8, 64, 128, 64, jnp.bfloat16),
+    (3, 16, 96, 384, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("E,C,d,f,f_tile,dtype", MOE_CASES)
+def test_moe_ffn_matches_ref(E, C, d, f, f_tile, dtype):
+    rng = np.random.default_rng(E * 100 + C)
+    x = jnp.asarray(rng.standard_normal((E, C, d)), dtype)
+    wu = jnp.asarray(rng.standard_normal((E, d, f)) * 0.05, dtype)
+    wd = jnp.asarray(rng.standard_normal((E, f, d)) * 0.05, dtype)
+    y = moe_ffn(x, wu, wd, activation=jax.nn.gelu, f_tile=f_tile,
+                interpret=True)
+    h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                               wu.astype(jnp.float32)))
+    yr = jnp.einsum("ecf,efd->ecd", h, wd.astype(jnp.float32))
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - yr) / (1 + jnp.abs(yr))))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    assert err < tol, err
+
+
+def test_moe_ffn_f_tile_invariance():
+    """Result must not depend on the VMEM tiling choice."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 16, 64)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((2, 64, 256)) * 0.05, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((2, 256, 64)) * 0.05, jnp.float32)
+    y1 = moe_ffn(x, wu, wd, f_tile=64, interpret=True)
+    y2 = moe_ffn(x, wu, wd, f_tile=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-6)

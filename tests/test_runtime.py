@@ -1,0 +1,202 @@
+"""Runtime tests: checkpointing, fault tolerance, stragglers, compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.runtime.compression import (
+    dequantize_int8,
+    init_compression,
+    quantize_int8,
+    topk_compress_with_feedback,
+)
+from repro.runtime.failure import (
+    FaultInjector,
+    ResilientTrainer,
+    StragglerMonitor,
+)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+        "b16": jnp.asarray(rng.standard_normal((4, 4)), jnp.bfloat16),
+        "nested": {"s": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip_with_bf16(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t)
+    out = load_checkpoint(str(tmp_path), t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    t = _tree()
+    path = save_checkpoint(str(tmp_path), 2, t)
+    # corrupt one leaf
+    victim = os.path.join(path, "leaf_00000.npy")
+    raw = bytearray(open(victim, "rb").read())
+    raw[-1] ^= 0xFF
+    open(victim, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="crc"):
+        load_checkpoint(str(tmp_path), t, step=2)
+
+
+def test_manager_retention_and_async(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        m.async_save(s, t)
+    m.wait()
+    steps = sorted(int(n[5:]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_restore_mismatched_tree_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), {"only": jnp.zeros((2,))}, step=1)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def _toy_step():
+    """y = w*x regression; returns a train_step-compatible callable."""
+
+    def step(params, opt_state, batch):
+        def loss(p):
+            return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+        lval, g = jax.value_and_grad(loss)(params)
+        new = {"w": params["w"] - 0.05 * g["w"]}
+        return new, opt_state, {"loss": lval}
+
+    return jax.jit(step)
+
+
+def _toy_batches(step):
+    rng = np.random.default_rng(step)
+    x = rng.standard_normal((16, 4)).astype(np.float32)
+    w_true = np.arange(4, dtype=np.float32)[:, None]
+    return {"x": jnp.asarray(x), "y": jnp.asarray(x @ w_true)}
+
+
+def test_resilient_trainer_recovers_from_injected_faults(tmp_path):
+    params = {"w": jnp.zeros((4, 1), jnp.float32)}
+    trainer = ResilientTrainer(
+        _toy_step(), params, {}, CheckpointManager(str(tmp_path)),
+        ckpt_every=5, fault_injector=FaultInjector([7, 13]))
+    out = trainer.run(_toy_batches, 25)
+    assert out["restarts"] == 2
+    assert out["final_loss"] < out["losses"][0]
+    assert trainer.step == 25
+    fails = [h for h in out["history"] if h[0] == "failure"]
+    assert len(fails) == 2
+
+
+def test_resilient_trainer_determinism_vs_no_faults(tmp_path):
+    """Replayed batches after restart give the same final weights."""
+    p0 = {"w": jnp.zeros((4, 1), jnp.float32)}
+    t_fault = ResilientTrainer(
+        _toy_step(), p0, {}, CheckpointManager(str(tmp_path / "a")),
+        ckpt_every=5, fault_injector=FaultInjector([8]))
+    out_f = t_fault.run(_toy_batches, 20)
+    t_clean = ResilientTrainer(
+        _toy_step(), p0, {}, CheckpointManager(str(tmp_path / "b")),
+        ckpt_every=5)
+    out_c = t_clean.run(_toy_batches, 20)
+    np.testing.assert_allclose(np.asarray(t_fault.params["w"]),
+                               np.asarray(t_clean.params["w"]), rtol=1e-6)
+    assert out_f["restarts"] == 1 and out_c["restarts"] == 0
+
+
+def test_nan_loss_triggers_restart(tmp_path):
+    calls = {"n": 0}
+
+    def step(params, opt_state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            return params, opt_state, {"loss": jnp.asarray(float("nan"))}
+        return params, opt_state, {"loss": jnp.asarray(1.0)}
+
+    trainer = ResilientTrainer(step, {"w": jnp.zeros(2)}, {},
+                               CheckpointManager(str(tmp_path)), ckpt_every=2)
+    out = trainer.run(lambda s: {}, 5)
+    assert out["restarts"] == 1
+    assert trainer.step == 5
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(factor=3.0, warmup=2)
+    for i, dt in enumerate([1.0, 1.0, 1.0, 1.0, 10.0, 1.0]):
+        mon.observe(i, dt)
+    assert len(mon.events) == 1
+    assert mon.events[0].step == 4
+    assert mon.events[0].factor > 3
+    # outlier did not poison the EMA
+    assert mon.ema < 2.0
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_topk_error_feedback_conservation():
+    """sum(sent over steps) + final residual == sum(grads): nothing is lost."""
+    params = {"a": jnp.zeros((64,)), "b": jnp.zeros((8, 8))}
+    state = init_compression(params)
+    rng = np.random.default_rng(0)
+    total_g = jax.tree.map(jnp.zeros_like, state.error)
+    total_sent = jax.tree.map(jnp.zeros_like, state.error)
+    for step in range(10):
+        g = {"a": jnp.asarray(rng.standard_normal(64), jnp.float32),
+             "b": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+        sent, state, metrics = topk_compress_with_feedback(g, state,
+                                                           k_frac=0.05)
+        total_g = jax.tree.map(lambda t, x: t + x, total_g, g)
+        total_sent = jax.tree.map(lambda t, x: t + x, total_sent, sent)
+        assert metrics["sent_density"] <= 0.2
+    for ts, tg, e in zip(jax.tree.leaves(total_sent), jax.tree.leaves(total_g),
+                         jax.tree.leaves(state.error)):
+        np.testing.assert_allclose(np.asarray(ts + e), np.asarray(tg),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), block=st.sampled_from([32, 256]))
+def test_int8_quantization_error_bound(seed, block):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(500) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    q, scale, shape, pad = quantize_int8(x, block)
+    out = dequantize_int8(q, scale, shape, pad)
+    # error per element bounded by half a quantization bin of its block
+    blocks = np.pad(np.asarray(x), (0, pad)).reshape(-1, block)
+    bins = np.abs(blocks).max(1, keepdims=True) / 127.0
+    err = np.abs(np.pad(np.asarray(x - out), (0, pad)).reshape(-1, block))
+    assert (err <= bins * 0.5 + 1e-6).all()

@@ -1,0 +1,92 @@
+"""End-to-end sparse pipeline: prune -> schedule -> (CR) -> kernel execution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulate, theorem1_bounds, to_block_ffnn, to_bsr
+from repro.core.blocksparse import is_contiguous_by_output, schedule_arrays
+from repro.kernels.ops import bsr_layer_ref
+from repro.sparse import ScheduledSparseFFNN, prune_dense_stack
+from repro.sparse.layers import _regroup_by_output
+
+
+def _stack(seed=0, sizes=(256, 512, 256, 128), density=0.3, bs=64):
+    rng = np.random.default_rng(seed)
+    ws = [rng.standard_normal((sizes[i], sizes[i + 1])).astype(np.float32) * 0.05
+          for i in range(len(sizes) - 1)]
+    bss = [rng.standard_normal(sizes[i + 1]).astype(np.float32) * 0.1
+           for i in range(len(sizes) - 1)]
+    return prune_dense_stack(ws, bss, density=density, block_m=bs, block_n=bs)
+
+
+def _oracle(layers, x):
+    h = x
+    for k, lay in enumerate(layers):
+        act = jax.nn.relu if k < len(layers) - 1 else None
+        h = bsr_layer_ref(h, lay, activation=act)
+    return h
+
+
+def test_scheduled_ffnn_matches_oracle():
+    layers = _stack()
+    net = ScheduledSparseFFNN.build(layers, activation=jax.nn.relu)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 256)),
+                    jnp.float32)
+    y, yr = net(x), _oracle(layers, x)
+    err = float(jnp.max(jnp.abs(y - yr) / (1 + jnp.abs(yr))))
+    assert err < 1e-4
+
+
+def test_reordered_ffnn_matches_oracle_and_reduces_tile_ios():
+    layers = _stack(density=0.35)
+    base = ScheduledSparseFFNN.build(layers, activation=jax.nn.relu)
+    opt = ScheduledSparseFFNN.build(layers, activation=jax.nn.relu,
+                                    reorder=True, reorder_iters=400, seed=0)
+    assert opt.block_ffnn.net.is_topological_connection_order(opt.order)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((8, 256)),
+                    jnp.float32)
+    yr = _oracle(layers, x)
+    err = float(jnp.max(jnp.abs(opt(x) - yr) / (1 + jnp.abs(yr))))
+    assert err < 1e-4
+    assert opt.simulated_ios().total <= base.simulated_ios().total
+
+
+def test_block_dag_obeys_theorem1_bounds():
+    from repro.core.graph import drop_isolated
+
+    layers = _stack(density=0.25)
+    bf = to_block_ffnn(layers)
+    net = drop_isolated(bf.net)  # Thm 1 assumes a connected FFNN
+    b = theorem1_bounds(net)
+    s = simulate(net, net.theorem1_order(), M=6, policy="min")
+    assert b.reads_lo <= s.reads <= b.reads_hi
+    assert b.writes_lo <= s.writes <= b.writes_hi
+
+
+def test_schedule_arrays_first_last_flags():
+    layers = _stack(density=0.4, sizes=(128, 256, 128), bs=64)
+    bf = to_block_ffnn(layers)
+    order = bf.net.theorem1_order()
+    for layer in range(len(layers)):
+        perm, rows, cols, first, last = schedule_arrays(bf, order, layer)
+        assert is_contiguous_by_output(cols)
+        # each output tile: exactly one first and one last
+        for c in set(cols.tolist()):
+            idx = np.flatnonzero(cols == c)
+            assert first[idx[0]] == 1 and last[idx[-1]] == 1
+            assert first[idx[1:]].sum() == 0 and last[idx[:-1]].sum() == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), m=st.integers(3, 30), t=st.integers(10, 120))
+def test_regroup_by_output_preserves_topology(seed, m, t):
+    from repro.core import connection_reordering, random_ffnn
+
+    net = random_ffnn(width=12, depth=3, density=0.4, seed=seed)
+    res = connection_reordering(net, net.theorem1_order(), M=m, T=t, seed=seed)
+    regrouped = _regroup_by_output(net, res.order)
+    assert net.is_topological_connection_order(regrouped)
+    # grouped: every dst's occurrences contiguous
+    assert is_contiguous_by_output(net.dst[regrouped])
