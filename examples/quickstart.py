@@ -22,8 +22,9 @@ from repro.core import (
     simulate,
     theorem1_bounds,
 )
+from repro.engine import Engine
 from repro.kernels.ops import bsr_layer_ref
-from repro.sparse import ScheduledSparseFFNN, prune_dense_stack
+from repro.sparse import prune_dense_stack
 
 M = 64  # fast-memory budget (words)
 
@@ -58,20 +59,22 @@ s = simulate(cg.net, cg.order, M, "min")
 print(f"  grown net: W={cg.net.W} N={cg.net.N}; IOs={s.total} "
       f"== lower bound {bb.total_lo}: {s.total == bb.total_lo}")
 
-print("\n== 6. TPU tile granularity: scheduled block-sparse kernel ==")
+print("\n== 6. TPU tile granularity: the fused inference engine ==")
 rng = np.random.default_rng(0)
 sizes = [256, 512, 256]
 ws = [rng.standard_normal((sizes[i], sizes[i + 1])).astype(np.float32) * 0.05
       for i in range(2)]
 bs = [np.zeros(sizes[i + 1], np.float32) for i in range(2)]
 layers = prune_dense_stack(ws, bs, density=0.3, block_m=64, block_n=64)
-sp = ScheduledSparseFFNN.build(layers, reorder=True, reorder_iters=300)
+# compile once: block DAG -> Theorem-1 order -> CR -> one fused plan
+plan = Engine(reorder=True, reorder_iters=300).compile(layers)
+print(f"  {plan.describe()}")
 xb = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
-y = sp(xb)
+y = plan(xb)  # run many: a single jitted dispatch for the whole net
 ref = xb
 for i, lay in enumerate(layers):
     ref = bsr_layer_ref(ref, lay, activation=jax.nn.relu if i < 1 else None)
 err = float(jnp.max(jnp.abs(y - ref) / (1 + jnp.abs(ref))))
-print(f"  kernel vs dense oracle rel-err: {err:.2e}")
-print(f"  simulated VMEM tile I/Os (M=3 tiles): {sp.simulated_ios().total}")
+print(f"  engine vs dense oracle rel-err: {err:.2e}")
+assert plan.io.within_bounds, "simulated I/O must sit inside Theorem 1"
 print("\nquickstart OK")

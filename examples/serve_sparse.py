@@ -1,13 +1,15 @@
 """End-to-end driver: serve a magnitude-pruned BERT-style FFNN with batched
-requests through the paper-scheduled sparse executor (the paper's deployment
-scenario: sparse FFNN inference).
+requests through the fused inference engine (the paper's deployment scenario:
+sparse FFNN inference).
 
     PYTHONPATH=src python examples/serve_sparse.py [--requests 64] [--density 0.1]
 
 A request = one feature vector through the pruned 1024-4096-1024 FFNN (the
-BERT encoder MLP the paper targets).  Requests are batched (batch=32), the
-connection schedule is Theorem-1-ordered and CR-optimized offline, and the
-exact simulated I/O counts are reported next to wall time.
+BERT encoder MLP the paper targets).  Requests are batched (batch=32); the
+whole network is compiled ONCE into an execution plan (Theorem-1 ordered and
+CR-optimized offline, all layers fused into a single jitted program) and every
+batch then runs the plan.  The plan's exact simulated I/O is reported next to
+the Theorem-1 bounds and wall time.
 """
 
 import argparse
@@ -17,9 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import theorem1_bounds
-from repro.core.graph import drop_isolated
-from repro.sparse import ScheduledSparseFFNN, prune_dense_stack
+from repro.engine import Engine
+from repro.sparse import prune_dense_stack
 
 
 def main():
@@ -28,6 +29,8 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--density", type=float, default=0.1)
     ap.add_argument("--reorder-iters", type=int, default=500)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "interpret", "jnp"))
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -39,17 +42,14 @@ def main():
     print(f"pruning BERT FFNN to density {args.density} ...")
     layers = prune_dense_stack([w1, w2], [b1, b2], density=args.density,
                                block_m=128, block_n=128)
+    engine = Engine(backend=args.backend, activation=jax.nn.gelu,
+                    reorder=True, reorder_iters=args.reorder_iters)
     t0 = time.time()
-    model = ScheduledSparseFFNN.build(layers, activation=jax.nn.gelu,
-                                      reorder=True,
-                                      reorder_iters=args.reorder_iters)
-    print(f"offline schedule build (+CR): {time.time()-t0:.1f}s")
-    ios = model.simulated_ios(M_tiles=3)
-    bounds = theorem1_bounds(drop_isolated(model.block_ffnn.net))
-    print(f"schedule tile-I/O: {ios.total} (lower bound {bounds.total_lo}, "
-          f"2-opt upper {bounds.total_hi})")
+    plan = engine.compile(layers)
+    print(f"engine compile (schedule + CR + lowering): {time.time()-t0:.1f}s")
+    print(plan.describe())
 
-    # request loop (continuous batches)
+    # request loop (continuous batches) — run-many against the cached plan
     done = 0
     t0 = time.time()
     lat = []
@@ -57,14 +57,14 @@ def main():
         n = min(args.batch, args.requests - done)
         x = jnp.asarray(rng.standard_normal((args.batch, 1024)), jnp.float32)
         t1 = time.time()
-        y = model(x)
+        y = plan(x)
         y.block_until_ready()
         lat.append(time.time() - t1)
         done += n
     dt = time.time() - t0
     print(f"served {done} requests in {dt:.2f}s "
           f"(p50 batch latency {1e3*np.median(lat):.1f} ms, "
-          f"{done/dt:.1f} req/s)")
+          f"{done/dt:.1f} req/s, {plan.calls} plan calls)")
     print("output sample:", np.asarray(y[0, :4]).round(3).tolist())
 
 

@@ -13,6 +13,7 @@ from .blocksparse import (
     BSRLayer,
     BlockFFNN,
     is_contiguous_by_output,
+    regroup_by_output,
     schedule_arrays,
     simulated_tile_traffic,
     to_block_ffnn,

@@ -175,6 +175,25 @@ def schedule_arrays(bffnn: BlockFFNN, order: np.ndarray, layer: int):
     return blk.astype(np.int32), rows, cols, first, last
 
 
+def regroup_by_output(net: FFNN, order: np.ndarray) -> np.ndarray:
+    """Stable-regroup a connection order by output neuron, ranking groups by
+    their *last* appearance; the internal order within groups is preserved
+    (keeps CR's input-locality gains kernel-compatible).
+
+    Ranking by last appearance keeps the result topological: for any edge
+    B -> A, every B-incoming connection precedes the consuming connection in
+    the input order, so last(B) < last(A) and group B lands wholly before
+    group A — i.e. the group sequence is a topological order of the neurons,
+    which is exactly the Theorem-1 family."""
+    order = np.asarray(order)
+    dst = net.dst[order]
+    last_seen: dict = {}
+    for idx, d in enumerate(dst):
+        last_seen[int(d)] = idx
+    group_rank = np.array([last_seen[int(d)] for d in dst])
+    return order[np.argsort(group_rank, kind="stable")]
+
+
 def is_contiguous_by_output(cols: np.ndarray) -> bool:
     """True iff every output tile's visits form one contiguous run."""
     seen = set()

@@ -1,0 +1,22 @@
+"""Fused multi-layer sparse inference engine (compile once, run many).
+
+    from repro.engine import Engine
+
+    plan = Engine(reorder=True).compile(layers)
+    y = plan(x)
+    print(plan.describe())
+"""
+
+from .backends import BACKENDS, make_forward, resolve_backend
+from .engine import ACTIVATIONS, Engine
+from .plan import ExecutionPlan, IOReport
+
+__all__ = [
+    "ACTIVATIONS",
+    "BACKENDS",
+    "Engine",
+    "ExecutionPlan",
+    "IOReport",
+    "make_forward",
+    "resolve_backend",
+]

@@ -1,0 +1,120 @@
+"""Execution backends for compiled plans.
+
+Three ways to run the same schedule:
+
+  * ``pallas``    — the scheduled Pallas TPU kernel (``kernels/bsr_matmul``),
+                    compiled; the production path.
+  * ``interpret`` — the identical Pallas body run in interpret mode; exact
+                    kernel semantics on any host (the correctness path).
+  * ``jnp``       — a pure-``jnp`` lowering of the schedule (gather blocks →
+                    batched block matmul → segment-sum by output tile); runs
+                    fast on CPU/GPU and is fully jittable.
+
+All three consume the same ``CompiledSchedule`` arrays, so the connection
+order — the thing the paper is about — is identical across backends; only the
+machinery that walks it differs.  ``auto`` resolves to ``pallas`` on TPU and
+``jnp`` elsewhere.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocksparse import BSRLayer
+from repro.kernels.bsr_matmul import bsr_matmul
+from repro.kernels.ops import CompiledSchedule
+
+BACKENDS = ("pallas", "interpret", "jnp")
+
+
+def resolve_backend(name: str) -> str:
+    """Resolve ``auto`` (and validate) to a concrete backend name."""
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; pick from {('auto',) + BACKENDS}")
+    return name
+
+
+def _jnp_layer(
+    x: jnp.ndarray,
+    layer: BSRLayer,
+    schedule: CompiledSchedule,
+    activation: Optional[Callable],
+) -> jnp.ndarray:
+    """One layer of the schedule as gather → block matmul → segment-sum.
+
+    Accumulates in float32 (like the kernel's VMEM accumulator) and walks the
+    blocks in schedule order, so the arithmetic is the schedule's.
+    """
+    B = x.shape[0]
+    bm, bn = layer.block_m, layer.block_n
+    grid_in, grid_out = layer.grid_in, layer.grid_out
+    xt = x.reshape(B, grid_in, bm).transpose(1, 0, 2)          # [gi, B, bm]
+    gathered = jnp.take(xt, schedule.rows, axis=0)             # [nnz, B, bm]
+    contrib = jnp.einsum(
+        "gbm,gmn->gbn",
+        gathered.astype(jnp.float32),
+        schedule.blocks.astype(jnp.float32),
+    )                                                          # [nnz, B, bn]
+    y = jax.ops.segment_sum(contrib, schedule.cols,
+                            num_segments=grid_out)             # [go, B, bn]
+    y = y.transpose(1, 0, 2).reshape(B, grid_out * bn)
+    y = y + jnp.asarray(layer.bias).astype(jnp.float32)
+    if activation is not None:
+        y = activation(y)
+    return y.astype(x.dtype)
+
+
+def _pallas_layer(
+    x: jnp.ndarray,
+    layer: BSRLayer,
+    schedule: CompiledSchedule,
+    activation: Optional[Callable],
+    interpret: bool,
+) -> jnp.ndarray:
+    return bsr_matmul(
+        x,
+        schedule.blocks,
+        schedule.rows,
+        schedule.cols,
+        schedule.first,
+        schedule.last,
+        jnp.asarray(layer.bias),
+        grid_out=schedule.grid_out,
+        activation=activation,
+        interpret=interpret,
+    )
+
+
+def make_forward(
+    layers: Sequence[BSRLayer],
+    schedules: Sequence[CompiledSchedule],
+    activations: Sequence[Optional[Callable]],
+    backend: str,
+    jit: bool = True,
+) -> Callable:
+    """Build the whole-network forward for one backend: x [B, n_in] -> [B, n_out].
+
+    The per-layer loop is unrolled at trace time, so the chain of layers —
+    including every activation epilogue — fuses into one compiled program:
+    one dispatch per request instead of one per layer.
+    """
+    layers = list(layers)
+    schedules = list(schedules)
+    activations = list(activations)
+
+    def forward(x):
+        h = x
+        for layer, schedule, act in zip(layers, schedules, activations):
+            if backend == "jnp":
+                h = _jnp_layer(h, layer, schedule, act)
+            else:
+                h = _pallas_layer(h, layer, schedule, act,
+                                  interpret=(backend == "interpret"))
+        return h
+
+    return jax.jit(forward) if jit else forward

@@ -1,0 +1,113 @@
+"""Execution plans: the compile-once/run-many artifact of ``Engine.compile``.
+
+A plan owns everything derived offline from a ``BlockFFNN``:
+
+  * the whole-network connection order (Theorem-1 grouped, optionally
+    Connection-Reordered) and its per-layer kernel schedules;
+  * the fused per-layer activation epilogues;
+  * a jitted forward function for the chosen backend;
+  * an :class:`IOReport` — the exact simulated tile traffic of the compiled
+    order next to the Theorem-1 bounds it must sit inside.
+
+Calling the plan runs inference; nothing is re-derived per call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocksparse import BlockFFNN, BSRLayer
+from repro.core.bounds import Bounds
+from repro.core.iosim import IOStats
+from repro.kernels.ops import CompiledSchedule
+
+
+@dataclasses.dataclass(frozen=True)
+class IOReport:
+    """Predicted I/O of a compiled plan vs. the paper's Theorem-1 window.
+
+    ``simulated`` is the exact tile traffic of the plan's connection order
+    under the single-resident-tile VMEM model (``core.iosim.simulate`` on the
+    block DAG); ``bounds`` are Theorem 1's bounds for the same (connected)
+    DAG.  A correct plan always satisfies ``within_bounds``.
+    """
+
+    simulated: IOStats
+    bounds: Bounds
+    M_tiles: int
+    policy: str
+
+    @property
+    def within_total_bound(self) -> bool:
+        return self.simulated.total <= self.bounds.total_hi
+
+    @property
+    def within_write_bounds(self) -> bool:
+        return (self.bounds.writes_lo <= self.simulated.writes
+                <= self.bounds.writes_hi)
+
+    @property
+    def within_bounds(self) -> bool:
+        return self.within_total_bound and self.within_write_bounds
+
+    @property
+    def optimality_ratio(self) -> float:
+        """simulated / lower bound — Theorem 1 guarantees ≤ 2 is achievable."""
+        return self.simulated.total / max(1, self.bounds.total_lo)
+
+    def summary(self) -> str:
+        s, b = self.simulated, self.bounds
+        return (f"tile I/O {s.total} (r={s.reads} w={s.writes}) in "
+                f"[{b.total_lo}, {b.total_hi}] "
+                f"(x{self.optimality_ratio:.2f} of lower bound, "
+                f"M={self.M_tiles} tiles, {self.policy.upper()})")
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """A compiled whole-network inference plan.  Call it on inputs."""
+
+    layers: List[BSRLayer]
+    schedules: List[CompiledSchedule]
+    activations: List[Optional[Callable]]   # fused epilogue per layer
+    backend: str                            # resolved backend name
+    order: np.ndarray                       # block-DAG connection order
+    block_ffnn: BlockFFNN
+    io: IOReport
+    _forward: Callable = dataclasses.field(repr=False, default=None)
+    calls: int = dataclasses.field(default=0, compare=False)
+
+    @property
+    def n_in(self) -> int:
+        return self.layers[0].n_in
+
+    @property
+    def n_out(self) -> int:
+        return self.layers[-1].n_out
+
+    def __call__(self, x) -> jnp.ndarray:
+        """Run inference.  ``x`` is ``[n_in]`` or batched ``[B, n_in]``."""
+        x = jnp.asarray(x)
+        single = x.ndim == 1
+        if single:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] != self.n_in:
+            raise ValueError(
+                f"expected input [B, {self.n_in}] or [{self.n_in}], "
+                f"got {tuple(x.shape)}"
+            )
+        y = self._forward(x)
+        self.calls += 1
+        return y[0] if single else y
+
+    def describe(self) -> str:
+        shapes = " -> ".join(
+            [str(self.n_in)] + [str(l.n_out) for l in self.layers])
+        nnz = sum(l.nnz_blocks for l in self.layers)
+        return (f"ExecutionPlan[{self.backend}] {shapes} "
+                f"({len(self.layers)} layers, {nnz} nonzero blocks); "
+                + self.io.summary())

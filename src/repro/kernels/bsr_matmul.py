@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _kernel(
     # scalar prefetch
@@ -109,7 +111,7 @@ def bsr_matmul(
         functools.partial(_kernel, activation=activation),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, n_out), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

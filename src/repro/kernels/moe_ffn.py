@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _kernel(x_ref, wu_ref, wd_ref, o_ref, acc_ref, *, activation: Callable,
             f_tiles: int):
@@ -71,7 +73,7 @@ def moe_ffn(
         functools.partial(_kernel, activation=activation, f_tiles=f_tiles),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((E, C, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -21,6 +21,7 @@ import traceback     # noqa: E402
 
 import jax           # noqa: E402
 
+from repro.compat import named_shardings, set_mesh                  # noqa: E402
 from repro.configs import ARCH_IDS, get_config                      # noqa: E402
 from repro.launch import hlo_analysis, partition, specs, steps      # noqa: E402
 from repro.launch.mesh import make_production_mesh                  # noqa: E402
@@ -66,7 +67,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     shape = LM_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes_from_mesh(mesh)
-    jax.set_mesh(mesh)
+    set_mesh(mesh)
     n_chips = mesh.size
     t0 = time.time()
 
@@ -80,8 +81,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         b_specs = partition.batch_specs(mesh, batch)
         step = steps.make_train_step(cfg, OptConfig(), mesh,
                                      grad_specs=o_specs["master"])
-        jitted = jax.jit(step, in_shardings=(p_specs, o_specs, b_specs),
-                         out_shardings=(p_specs, o_specs, None),
+        jitted = jax.jit(step,
+                         in_shardings=named_shardings(mesh, (p_specs, o_specs, b_specs)),
+                         out_shardings=named_shardings(mesh, (p_specs, o_specs, None)),
                          donate_argnums=(0, 1))
         lowered = jitted.lower(p_shape, opt_shape, batch)
     elif shape.kind == "prefill":
@@ -93,16 +95,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             out_caches = partition.cache_specs(mesh, cfg, out_shape[1])
         else:  # encdec: enc_out [B, S, d] — batch-sharded
             out_caches = partition.batch_specs(mesh, out_shape[1])
-        jitted = jax.jit(step, in_shardings=(p_specs, b_specs),
-                         out_shardings=(None, out_caches))
+        jitted = jax.jit(step,
+                         in_shardings=named_shardings(mesh, (p_specs, b_specs)),
+                         out_shardings=named_shardings(mesh, (None, out_caches)))
         lowered = jitted.lower(p_shape, batch)
     else:  # decode
         caches, tok = specs.decode_inputs(cfg, shape)
         c_specs = partition.cache_specs(mesh, cfg, caches)
         t_specs = partition.batch_specs(mesh, tok)["tokens"]
         step = steps.make_serve_step(cfg, mesh)
-        jitted = jax.jit(step, in_shardings=(p_specs, c_specs, t_specs),
-                         out_shardings=(None, c_specs), donate_argnums=(1,))
+        jitted = jax.jit(step,
+                         in_shardings=named_shardings(mesh, (p_specs, c_specs, t_specs)),
+                         out_shardings=named_shardings(mesh, (None, c_specs)),
+                         donate_argnums=(1,))
         lowered = jitted.lower(p_shape, caches, tok["tokens"])
 
     t_lower = time.time() - t0

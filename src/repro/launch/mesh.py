@@ -1,26 +1,27 @@
 """Production meshes.
 
 Defined as FUNCTIONS so importing this module never touches jax device state
-(the dry-run must set XLA_FLAGS before any jax initialization).
+(the dry-run must set XLA_FLAGS before any jax initialization).  All mesh
+construction goes through ``repro.compat`` so the same code runs on JAX
+versions with and without ``jax.sharding.AxisType`` / ``axis_types``.
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (uses however many host devices exist)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
 
 
 def dp_axes(mesh) -> tuple:

@@ -22,6 +22,7 @@ from repro.configs import ARCH_IDS, get_config, reduced
 from repro.data import SyntheticLM, TokenBatcher
 from repro.launch import partition
 from repro.launch.mesh import dp_axes, make_test_mesh
+from repro.compat import named_shardings, set_mesh
 from repro.launch.steps import make_train_step
 from repro.models import encdec, lm
 from repro.models.sharding import axes_from_mesh
@@ -32,7 +33,7 @@ from repro.runtime.failure import FaultInjector, ResilientTrainer, StragglerMoni
 def build(cfg, mesh, opt_cfg, seed=0, dtype=jnp.bfloat16):
     mod = encdec if cfg.family == "encdec" else lm
     axes_from_mesh(mesh)
-    jax.set_mesh(mesh)
+    set_mesh(mesh)
     params = mod.init(jax.random.PRNGKey(seed), cfg, dtype=dtype)
     p_specs = partition.params_specs(mesh, jax.eval_shape(lambda: params))
     params = jax.device_put(params, partition.to_named(mesh, p_specs))
@@ -42,8 +43,8 @@ def build(cfg, mesh, opt_cfg, seed=0, dtype=jnp.bfloat16):
     opt_state = jax.device_put(opt_state, partition.to_named(mesh, o_specs))
     step = jax.jit(make_train_step(cfg, opt_cfg, mesh,
                                    grad_specs=o_specs["master"]),
-                   in_shardings=(p_specs, o_specs, None),
-                   out_shardings=(p_specs, o_specs, None),
+                   in_shardings=named_shardings(mesh, (p_specs, o_specs, None)),
+                   out_shardings=named_shardings(mesh, (p_specs, o_specs, None)),
                    donate_argnums=(0, 1))
     return params, opt_state, step
 

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import LEGACY_JAX, axis_size, get_abstract_mesh
+
 from .common import ACTIVATIONS, apply_rope, dense_init, rms_norm, split_keys
 from .config import ModelConfig
 from .sharding import div_or_none, dp, shard, tp
@@ -41,7 +43,7 @@ def row_parallel_matmul(h: jnp.ndarray, w: jnp.ndarray, cfg: ModelConfig):
         return jnp.einsum("bsn,nd->bsd", h, w)
     from jax.experimental.shard_map import shard_map
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or tp() not in mesh.axis_names:
         return jnp.einsum("bsn,nd->bsd", h, w)
     tp_axis = tp()
@@ -417,7 +419,11 @@ def moe_dense(params: Dict, x: jnp.ndarray, cfg: ModelConfig):
 
     xg = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xf[tok])
     yg = _expert_ffn(params, xg[:-1].reshape(E, C, d), cfg)
-    yg = shard(yg, tp(), None, None)
+    if not LEGACY_JAX:
+        # on old XLA this constraint makes GSPMD miscompile the surrounding
+        # sort/scatter dispatch on multi-axis meshes (wrong values, no error);
+        # it is only a partitioning hint, so drop it there
+        yg = shard(yg, tp(), None, None)
     y_sorted = jnp.concatenate([yg.reshape(E * C, d),
                                 jnp.zeros((1, d), yg.dtype)])[slot]
     gsel = gates.reshape(-1)[sidx]
@@ -471,7 +477,7 @@ def moe_a2a(params: Dict, x: jnp.ndarray, cfg: ModelConfig, mesh):
         tok = sidx // kk
         xg = jnp.zeros((E * C + 1, d), x_loc.dtype).at[slot].set(xf[tok])
         xg = xg[:-1].reshape(E, C, d)
-        ep = jax.lax.axis_size(tp_axis)
+        ep = axis_size(tp_axis)
         # [E, C, d] -a2a-> [E/ep, ep*C, d]: local slots for this shard's experts
         xg = jax.lax.all_to_all(xg, tp_axis, split_axis=0, concat_axis=1,
                                 tiled=True)

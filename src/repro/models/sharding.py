@@ -16,6 +16,8 @@ from typing import Optional, Tuple, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
+
 _state = threading.local()
 
 
@@ -61,7 +63,7 @@ def tp_size(mesh=None) -> int:
 
 
 def _current_mesh():
-    m = jax.sharding.get_abstract_mesh()
+    m = get_abstract_mesh()
     if m is not None and not m.empty:
         return m
     return None

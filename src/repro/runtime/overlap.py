@@ -18,10 +18,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size
+
 
 def _ring_body(x_loc, w_loc, axis_name: str):
     """x_loc: [B, S/tp, D]; w_loc: [D, F/tp]  ->  y_loc: [B, S, F/tp]."""
-    tp = jax.lax.axis_size(axis_name)
+    tp = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     B, s_loc, D = x_loc.shape
     F_loc = w_loc.shape[1]

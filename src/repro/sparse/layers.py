@@ -1,10 +1,12 @@
 """Scheduled sparse FFNN execution: the paper's pipeline end to end.
 
 prune -> BSR -> block DAG -> Theorem-1 schedule -> (optional) Connection
-Reordering -> Pallas kernels per layer.
+Reordering -> fused execution plan.
 
-``ScheduledSparseFFNN`` is the inference module used by the serving example
-and the fig7/8 runtime benchmarks.
+``ScheduledSparseFFNN`` is the legacy-shaped wrapper kept for existing call
+sites and tests; since the engine refactor it is a thin veneer over
+``repro.engine.Engine`` — the schedule is compiled once for the whole network
+and every call runs the fused plan instead of dispatching layer by layer.
 """
 
 from __future__ import annotations
@@ -19,13 +21,11 @@ import numpy as np
 from repro.core.blocksparse import (
     BlockFFNN,
     BSRLayer,
-    schedule_arrays,
     simulated_tile_traffic,
-    to_block_ffnn,
     to_bsr,
 )
-from repro.core.reorder import connection_reordering
-from repro.kernels.ops import CompiledSchedule, compile_schedule, scheduled_bsr_layer
+from repro.engine import Engine, ExecutionPlan
+from repro.kernels.ops import CompiledSchedule
 
 
 def prune_dense_stack(
@@ -51,6 +51,8 @@ class ScheduledSparseFFNN:
     block_ffnn: BlockFFNN
     order: np.ndarray          # block-DAG connection order in effect
     activation: Callable = jax.nn.relu
+    plan: ExecutionPlan = None
+    engine: Engine = None
 
     @classmethod
     def build(
@@ -61,57 +63,50 @@ class ScheduledSparseFFNN:
         M_tiles: int = 3,
         reorder_iters: int = 2000,
         seed: int = 0,
+        backend: str = "auto",
     ) -> "ScheduledSparseFFNN":
-        """Build with the Theorem-1 schedule; optionally improve it with CR.
+        """Compile with the Theorem-1 schedule; optionally improve it with CR.
 
         ``M_tiles`` is the VMEM budget in tiles used as the CR objective
         (M=3 matches the kernel's single-resident-tile residency model).
         CR proposals that break the contiguous-by-output contract are unusable
-        by the kernel, so we re-group the CR result by output tile, keeping
-        CR's improved *input-tile locality* within each group.
+        by the kernel, so the engine re-groups the CR result by output tile,
+        keeping CR's improved *input-tile locality* within each group.
         """
-        bffnn = to_block_ffnn(list(layers))
-        order = bffnn.net.theorem1_order()
-        if reorder:
-            res = connection_reordering(
-                bffnn.net, order, M=M_tiles, T=reorder_iters, seed=seed,
-            )
-            order = _regroup_by_output(bffnn.net, res.order)
-        schedules = []
-        for k in range(len(layers)):
-            perm, _, _, _, _ = schedule_arrays(bffnn, order, k)
-            schedules.append(compile_schedule(layers[k], perm))
+        engine = Engine(
+            backend=backend, activation=activation, final_activation=None,
+            reorder=reorder, M_tiles=M_tiles, reorder_iters=reorder_iters,
+            seed=seed,
+        )
+        plan = engine.compile(list(layers))
         return cls(
-            layers=list(layers), schedules=schedules, block_ffnn=bffnn,
-            order=order, activation=activation,
+            layers=plan.layers, schedules=plan.schedules,
+            block_ffnn=plan.block_ffnn, order=plan.order,
+            activation=activation, plan=plan, engine=engine,
         )
 
     def __call__(self, x: jnp.ndarray, interpret: Optional[bool] = None) -> jnp.ndarray:
-        h = x
-        for k, (lay, sch) in enumerate(zip(self.layers, self.schedules)):
-            act = self.activation if k < len(self.layers) - 1 else None
-            h = scheduled_bsr_layer(h, lay, sch, activation=act, interpret=interpret)
-        return h
+        """Run the fused plan.  ``interpret`` forces the Pallas interpret-mode
+        backend (True) or the compiled Pallas kernel (False); None keeps the
+        engine's resolved backend.
+
+        Instances constructed directly from the dataclass fields (the
+        pre-engine API) have no plan; they fall back to per-layer dispatch
+        with the stored schedules, exactly the old behavior."""
+        if self.plan is None:
+            from repro.kernels.ops import scheduled_bsr_layer
+
+            h = x
+            for k, (lay, sch) in enumerate(zip(self.layers, self.schedules)):
+                act = self.activation if k < len(self.layers) - 1 else None
+                h = scheduled_bsr_layer(h, lay, sch, activation=act,
+                                        interpret=interpret)
+            return h
+        if interpret is None:
+            return self.plan(x)
+        backend = "interpret" if interpret else "pallas"
+        return self.engine.compile(self.block_ffnn, backend=backend)(x)
 
     def simulated_ios(self, M_tiles: int = 3, policy: str = "min"):
         """Exact simulated tile I/Os of the current order (paper's cost model)."""
         return simulated_tile_traffic(self.block_ffnn, self.order, M_tiles, policy)
-
-
-def _regroup_by_output(net, order: np.ndarray) -> np.ndarray:
-    """Stable-regroup a connection order by output neuron, ranking groups by
-    their *last* appearance; the internal order within groups is preserved
-    (keeps CR's input-locality gains kernel-compatible).
-
-    Ranking by last appearance keeps the result topological: for any edge
-    B -> A, every B-incoming connection precedes the consuming connection in
-    the input order, so last(B) < last(A) and group B lands wholly before
-    group A — i.e. the group sequence is a topological order of the neurons,
-    which is exactly the Theorem-1 family."""
-    order = np.asarray(order)
-    dst = net.dst[order]
-    last_seen: dict = {}
-    for idx, d in enumerate(dst):
-        last_seen[int(d)] = idx
-    group_rank = np.array([last_seen[int(d)] for d in dst])
-    return order[np.argsort(group_rank, kind="stable")]

@@ -5,7 +5,7 @@ Each test names the paper statement it checks.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     connection_reordering,

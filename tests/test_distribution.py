@@ -30,15 +30,15 @@ def run_py(body: str, devices: int = 8, timeout: int = 520) -> str:
 def test_moe_a2a_matches_dense_dispatch():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_config, reduced
         from repro.models.layers import init_moe, moe_dense, moe_a2a
         from repro.models.sharding import axes_from_mesh
         cfg = reduced(get_config('granite-moe-1b-a400m'))
         cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
-        mesh = jax.make_mesh((2, 2), ('data', 'model'),
+        mesh = make_mesh((2, 2), ('data', 'model'),
                              axis_types=(AxisType.Auto,)*2)
-        axes_from_mesh(mesh); jax.set_mesh(mesh)
+        axes_from_mesh(mesh); set_mesh(mesh)
         rng = np.random.default_rng(0)
         p = init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
         x = jnp.asarray(rng.standard_normal((4, 16, cfg.d_model)), jnp.float32)
@@ -57,7 +57,7 @@ def test_moe_a2a_matches_dense_dispatch():
 def test_sharded_train_step_runs_and_matches_single_device():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, named_shardings, set_mesh
         from repro.configs import get_config, reduced
         from repro.launch import partition
         from repro.launch.steps import make_train_step
@@ -70,9 +70,9 @@ def test_sharded_train_step_runs_and_matches_single_device():
                  'labels': jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)))}
         results = {}
         for shape, name in [((1, 1), 'single'), ((2, 2), 'sharded')]:
-            mesh = jax.make_mesh(shape, ('data', 'model'),
+            mesh = make_mesh(shape, ('data', 'model'),
                                  axis_types=(AxisType.Auto,)*2)
-            axes_from_mesh(mesh); jax.set_mesh(mesh)
+            axes_from_mesh(mesh); set_mesh(mesh)
             params = lm.init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
             p_specs = partition.params_specs(mesh, jax.eval_shape(lambda: params))
             params = jax.device_put(params, partition.to_named(mesh, p_specs))
@@ -80,8 +80,8 @@ def test_sharded_train_step_runs_and_matches_single_device():
             o_specs = partition.opt_specs(mesh, jax.eval_shape(lambda: opt), p_specs)
             opt = jax.device_put(opt, partition.to_named(mesh, o_specs))
             step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3), mesh),
-                           in_shardings=(p_specs, o_specs, None),
-                           out_shardings=(p_specs, o_specs, None))
+                           in_shardings=named_shardings(mesh, (p_specs, o_specs, None)),
+                           out_shardings=named_shardings(mesh, (p_specs, o_specs, None)))
             p2, o2, m = step(params, opt, batch)
             results[name] = (float(m['loss']), jax.device_get(p2))
         l1, w1 = results['single']; l2, w2 = results['sharded']
@@ -99,7 +99,7 @@ def test_sharded_train_step_runs_and_matches_single_device():
 def test_elastic_reshard_4_to_2_devices(tmp_path):
     out = run_py(f"""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.checkpoint import CheckpointManager
         from repro.configs import get_config, reduced
         from repro.launch import partition
@@ -108,16 +108,16 @@ def test_elastic_reshard_4_to_2_devices(tmp_path):
         from repro.optim import adamw_init
         from repro.runtime.elastic import reshard_checkpoint
         cfg = reduced(get_config('mamba2-1.3b'))
-        mesh4 = jax.make_mesh((2, 2), ('data', 'model'),
+        mesh4 = make_mesh((2, 2), ('data', 'model'),
                               axis_types=(AxisType.Auto,)*2)
-        axes_from_mesh(mesh4); jax.set_mesh(mesh4)
+        axes_from_mesh(mesh4); set_mesh(mesh4)
         params = lm.init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
         p_specs = partition.params_specs(mesh4, jax.eval_shape(lambda: params))
         params = jax.device_put(params, partition.to_named(mesh4, p_specs))
         opt = adamw_init(params)
         ck = CheckpointManager({str(tmp_path)!r}, keep=2)
         ck.save(3, {{'params': params, 'opt': opt}})
-        mesh2 = jax.make_mesh((2, 1), ('data', 'model'),
+        mesh2 = make_mesh((2, 1), ('data', 'model'),
                               axis_types=(AxisType.Auto,)*2)
         p_shape = jax.eval_shape(lambda: params)
         o_shape = jax.eval_shape(lambda: opt)
@@ -136,11 +136,11 @@ def test_elastic_reshard_4_to_2_devices(tmp_path):
 def test_ring_matmul_matches_allgather_matmul():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.runtime.overlap import ring_ag_matmul
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+        mesh = make_mesh((2, 4), ('data', 'model'),
                              axis_types=(AxisType.Auto,)*2)
-        jax.set_mesh(mesh)
+        set_mesh(mesh)
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.standard_normal((4, 16, 32)), jnp.float32)
         w = jnp.asarray(rng.standard_normal((32, 64)) * 0.1, jnp.float32)
@@ -156,11 +156,12 @@ def test_ring_matmul_matches_allgather_matmul():
 def test_quantized_psum_on_mesh():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np, functools
-        from jax.sharding import AxisType, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_mesh, set_mesh
         from jax.experimental.shard_map import shard_map
         from repro.runtime.compression import quantized_psum
-        mesh = jax.make_mesh((4,), ('data',), axis_types=(AxisType.Auto,))
-        jax.set_mesh(mesh)
+        mesh = make_mesh((4,), ('data',), axis_types=(AxisType.Auto,))
+        set_mesh(mesh)
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32)
         fn = shard_map(lambda x: quantized_psum(x[0], 'data'), mesh=mesh,

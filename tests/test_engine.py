@@ -1,0 +1,202 @@
+"""Fused inference engine tests.
+
+Two families, matching the engine's two contracts:
+
+  * parity — ``Engine.compile(net)(x)`` equals the dense layer-by-layer
+    reference (``kernels/ref.py``) within 1e-5, across batch sizes, block
+    sizes, activations, depths 1-4, and both CPU backends;
+  * I/O invariants — every compiled plan's simulated tile traffic sits inside
+    the Theorem-1 window (``S <= writes <= N - I``,
+    ``total <= 2 (W + N - I)``) and its per-layer schedules are
+    contiguous-by-output (the 2-optimal family the kernel requires).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import theorem1_bounds
+from repro.core.blocksparse import is_contiguous_by_output
+from repro.core.graph import drop_isolated
+from repro.core.iosim import simulate
+from repro.engine import Engine, resolve_backend
+from repro.kernels.ops import bsr_layer_ref
+
+# CPU-runnable backends; "pallas" (compiled) needs a TPU host.
+CPU_BACKENDS = ("jnp", "interpret")
+
+
+def _oracle(layers, x, activation, final_activation=None):
+    h = x
+    for k, lay in enumerate(layers):
+        act = activation if k < len(layers) - 1 else final_activation
+        h = bsr_layer_ref(h, lay, activation=act)
+    return h
+
+
+def _max_err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+# --------------------------------------------------------------------------- #
+# parity vs the dense reference
+# --------------------------------------------------------------------------- #
+
+PARITY_CASES = [
+    # (sizes, block, density, batch, activation)
+    ((128, 128), 32, 0.5, 1, "relu"),                 # 1 layer, batch 1
+    ((128, 256, 128), 32, 0.4, 8, "relu"),            # 2 layers
+    ((128, 256, 128), 64, 0.3, 3, "gelu"),            # odd batch, gelu
+    ((192, 192, 192, 192), 32, 0.25, 16, "silu"),     # 3 layers
+    ((128, 192, 256, 192, 128), 64, 0.35, 4, "tanh"), # 4 layers, mixed dims
+    ((256, 128), 128, 1.0, 8, None),                  # dense blocks, linear
+]
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+@pytest.mark.parametrize("sizes,block,density,batch,activation", PARITY_CASES)
+def test_engine_matches_dense_reference(make_stack, sizes, block, density,
+                                        batch, activation, backend):
+    layers = make_stack(sizes=sizes, density=density, block=block,
+                        seed=hash((sizes, block)) % 2**31)
+    plan = Engine(backend=backend, activation=activation).compile(layers)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((batch, sizes[0])), jnp.float32)
+    y = plan(x)
+    act = None if activation is None else getattr(jax.nn, activation, jnp.tanh)
+    yr = _oracle(layers, x, act)
+    assert y.shape == yr.shape and y.dtype == x.dtype
+    assert _max_err(y, yr) < 1e-5
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+def test_engine_with_reordering_matches_reference(make_stack, backend):
+    layers = make_stack(sizes=(128, 256, 128), density=0.4)
+    plan = Engine(backend=backend, reorder=True,
+                  reorder_iters=150).compile(layers)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((8, 128)), jnp.float32)
+    assert _max_err(plan(x), _oracle(layers, x, jax.nn.relu)) < 1e-5
+
+
+def test_backends_agree(make_stack):
+    layers = make_stack(sizes=(128, 192, 128), density=0.3)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    ys = [Engine(backend=b, activation="gelu").compile(layers)(x)
+          for b in CPU_BACKENDS]
+    assert _max_err(ys[0], ys[1]) < 1e-5
+
+
+def test_engine_bf16_inputs(make_stack):
+    layers = make_stack(sizes=(128, 256, 128), density=0.4)
+    plan = Engine(backend="jnp").compile(layers)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((8, 128)), jnp.bfloat16)
+    y = plan(x)
+    assert y.dtype == jnp.bfloat16
+    err = _max_err(y, _oracle(layers, x, jax.nn.relu))
+    assert err < 3e-2  # bf16 output rounding
+
+
+# --------------------------------------------------------------------------- #
+# batched input handling + API contract
+# --------------------------------------------------------------------------- #
+
+def test_single_vector_and_batched_inputs_agree(make_stack):
+    layers = make_stack()
+    plan = Engine(backend="jnp").compile(layers)
+    rng = np.random.default_rng(5)
+    xb = rng.standard_normal((4, 128)).astype(np.float32)
+    yb = plan(xb)
+    y0 = plan(xb[0])  # 1-D input: engine adds/removes the batch dim
+    assert y0.shape == (layers[-1].n_out,)
+    assert _max_err(y0, yb[0]) < 1e-6
+
+
+def test_bad_input_shape_raises(make_stack):
+    plan = Engine(backend="jnp").compile(make_stack())
+    with pytest.raises(ValueError, match="expected input"):
+        plan(jnp.zeros((4, 64)))
+    with pytest.raises(ValueError, match="expected input"):
+        plan(jnp.zeros((2, 4, 128)))
+
+
+def test_compile_once_run_many_cache(make_stack):
+    layers = make_stack()
+    engine = Engine(backend="jnp")
+    plan = engine.compile(layers)
+    assert engine.compile(layers) is plan            # cached
+    # keyed on layer identity: the plan's own DAG wrapper hits the same entry
+    assert engine.compile(plan.block_ffnn) is plan
+    other = engine.compile(layers, backend="interpret")
+    assert other is not plan and other.backend == "interpret"
+    x = jnp.zeros((2, 128), jnp.float32)
+    calls0 = plan.calls
+    plan(x); plan(x)
+    assert plan.calls == calls0 + 2
+
+
+def test_unknown_backend_and_activation_raise(make_stack):
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("cuda")
+    with pytest.raises(ValueError, match="unknown activation"):
+        Engine(backend="jnp", activation="swish9").compile(make_stack())
+
+
+# --------------------------------------------------------------------------- #
+# I/O invariants: every plan sits inside the Theorem-1 window
+# --------------------------------------------------------------------------- #
+
+IO_CASES = [
+    ((128, 256, 128), 32, 0.4, False),
+    ((128, 256, 128), 32, 0.4, True),
+    ((192, 192, 192, 192), 32, 0.2, True),
+    ((128, 128), 64, 0.6, False),
+    ((128, 192, 256, 192, 128), 64, 0.35, True),
+]
+
+
+@pytest.mark.parametrize("sizes,block,density,reorder", IO_CASES)
+def test_plan_io_satisfies_theorem1(make_stack, sizes, block, density, reorder):
+    layers = make_stack(sizes=sizes, density=density, block=block)
+    plan = Engine(backend="jnp", reorder=reorder,
+                  reorder_iters=150).compile(layers)
+    io = plan.io
+    b = io.bounds
+    # S <= writes <= N - I
+    assert b.writes_lo <= io.simulated.writes <= b.writes_hi
+    # total <= 2 (W + N - I)
+    assert io.simulated.total <= b.total_hi
+    assert io.within_bounds
+    # the report is the exact simulator on the connected block DAG
+    net = drop_isolated(plan.block_ffnn.net)
+    assert io.simulated == simulate(net, plan.order, 3, "min")
+    assert b == theorem1_bounds(net)
+
+
+@pytest.mark.parametrize("reorder", [False, True])
+def test_plan_schedules_contiguous_by_output(make_stack, reorder):
+    layers = make_stack(sizes=(128, 256, 128), density=0.4)
+    plan = Engine(backend="jnp", reorder=reorder,
+                  reorder_iters=150).compile(layers)
+    # whole-DAG order must stay a topological connection order
+    assert plan.block_ffnn.net.is_topological_connection_order(plan.order)
+    for sch in plan.schedules:
+        assert is_contiguous_by_output(np.asarray(sch.cols))
+        # first/last flags mark exactly one contiguous run per output tile
+        cols = np.asarray(sch.cols)
+        first = np.asarray(sch.first)
+        last = np.asarray(sch.last)
+        assert first.sum() == last.sum() == len(set(cols.tolist()))
+    # every output tile is produced exactly once across the last layer
+    assert set(np.asarray(plan.schedules[-1].cols).tolist()) == \
+        set(range(layers[-1].grid_out))
+
+
+def test_io_report_summary_strings(make_stack):
+    plan = Engine(backend="jnp").compile(make_stack())
+    s = plan.describe()
+    assert "ExecutionPlan[jnp]" in s and "tile I/O" in s
+    assert plan.io.optimality_ratio >= 1.0

@@ -3,13 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import simulate, theorem1_bounds, to_block_ffnn, to_bsr
 from repro.core.blocksparse import is_contiguous_by_output, schedule_arrays
 from repro.kernels.ops import bsr_layer_ref
 from repro.sparse import ScheduledSparseFFNN, prune_dense_stack
-from repro.sparse.layers import _regroup_by_output
+from repro.core.blocksparse import regroup_by_output as _regroup_by_output
 
 
 def _stack(seed=0, sizes=(256, 512, 256, 128), density=0.3, bs=64):

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.compat import named_shardings, set_mesh
 from repro.configs import get_config, reduced
 from repro.core import simulate, theorem1_bounds
 from repro.core.graph import drop_isolated
@@ -55,15 +56,15 @@ def test_training_system_with_failure_recovery(tmp_path):
     cfg = reduced(get_config("codeqwen1.5-7b"))
     mesh = make_test_mesh(1, 1)
     axes_from_mesh(mesh)
-    jax.set_mesh(mesh)
+    set_mesh(mesh)
     params = lm.init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
     p_specs = partition.params_specs(mesh, jax.eval_shape(lambda: params))
     opt = adamw_init(params)
     o_specs = partition.opt_specs(mesh, jax.eval_shape(lambda: opt), p_specs)
     step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3, warmup_steps=2),
                                    mesh, grad_specs=o_specs["master"]),
-                   in_shardings=(p_specs, o_specs, None),
-                   out_shardings=(p_specs, o_specs, None))
+                   in_shardings=named_shardings(mesh, (p_specs, o_specs, None)),
+                   out_shardings=named_shardings(mesh, (p_specs, o_specs, None)))
 
     def batches(s):
         r = np.random.default_rng(s)
