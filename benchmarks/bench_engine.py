@@ -1,29 +1,41 @@
-"""Engine vs. layer-by-layer dispatch latency.
+"""Megakernel vs. layer-by-layer dispatch latency + annealer delta speedup.
 
     PYTHONPATH=src python benchmarks/bench_engine.py [--density 0.2] [--batch 32]
 
 Measures, for the same pruned multi-layer FFNN and the same connection
 schedule:
 
-  * layer-by-layer: one ``scheduled_bsr_layer`` dispatch per layer (the
-    pre-engine call pattern — per-layer ``pallas_call``/jit boundaries);
-  * engine: the fused plan from ``Engine.compile`` (single jitted program);
+  * layered: one dispatch per layer (the PR-1 call pattern — per-layer
+    ``pallas_call``/jnp boundaries, hidden state through HBM each boundary);
+  * fused: the flat cross-layer schedule from ``Engine.compile`` — the
+    megakernel on pallas/interpret, one segment pass on jnp;
+  * reorder: per-proposal cost of the annealer's windowed incremental I/O
+    delta evaluation (``core.iosim.IncrementalSimulator``) vs a full O(W)
+    ``simulate()`` per proposal, on the same proposal stream;
 
-and reports wall latency plus the plan's simulated tile I/O next to the
-Theorem-1 bounds.  On CPU hosts the comparison runs on the ``jnp`` backend
-(the Pallas interpret mode is a correctness path, not a perf path); on TPU
-pass ``--backend pallas``.
+and reports simulated tile I/O next to the Theorem-1 bounds plus the fused
+plan's cross-layer savings.  Results are printed AND written to a
+machine-readable ``BENCH_engine.json`` so the perf trajectory is tracked
+across PRs (CI uploads it as an artifact).
+
+On CPU hosts the latency comparison runs on the ``jnp`` backend (the Pallas
+interpret mode is a correctness path, not a perf path); on TPU pass
+``--backend pallas``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.iosim import IncrementalSimulator, simulate
+from repro.core import _iosim_c
 from repro.engine import Engine, make_forward
 from repro.sparse import prune_dense_stack
 
@@ -40,17 +52,65 @@ def timeit(fn, x, iters: int, warmup: int = 3) -> float:
     return float(np.median(ts))
 
 
+def bench_reorder(net, order, M: int, iters: int, seed: int = 0) -> dict:
+    """Per-proposal cost: windowed incremental delta vs full re-simulation.
+
+    Replays the identical proposal stream through both evaluators (the delta
+    totals are exact, so both see the same accept/reject costs)."""
+    rng = np.random.default_rng(seed)
+    src32 = np.ascontiguousarray(net.src, dtype=np.int32)
+    dst32 = np.ascontiguousarray(net.dst, dtype=np.int32)
+    avg_in = net.W / max(1, net.N - net.I)
+    ws = max(1, int(round(4 * avg_in)))
+    cur = np.ascontiguousarray(order, dtype=np.int64).copy()
+    moves = []
+    for _ in range(iters):
+        i = int(rng.integers(0, net.W))
+        w = int(rng.integers(0, ws))
+        d = 0 if rng.random() < 0.5 else 1
+        cand = cur.copy()
+        if not _iosim_c.propose_move_c(cand, src32, dst32, i, w, d):
+            from repro.core.reorder import _apply_move
+            cand = np.array(_apply_move(cur.tolist(), net.src.tolist(),
+                                        net.dst.tolist(), i, w, d), np.int64)
+        moves.append(cand)
+
+    sim = IncrementalSimulator(net, cur, M)
+    t0 = time.perf_counter()
+    delta_totals = [sim.propose(c) for c in moves]
+    t_delta = (time.perf_counter() - t0) / len(moves)
+    t0 = time.perf_counter()
+    full_totals = [simulate(net, c, M, "min").total for c in moves]
+    t_full = (time.perf_counter() - t0) / len(moves)
+    assert delta_totals == full_totals, "delta evaluation diverged from full"
+    return {
+        "proposals": len(moves),
+        "W_blocks": int(net.W),
+        "delta_ms_per_proposal": 1e3 * t_delta,
+        "full_ms_per_proposal": 1e3 * t_full,
+        "speedup": t_full / max(t_delta, 1e-12),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+",
-                    default=[1024, 4096, 2048, 1024])
+                    default=[768, 1536, 1536, 1536, 1536, 768])
     ap.add_argument("--density", type=float, default=0.2)
     ap.add_argument("--block", type=int, default=128)
-    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--iters", type=int, default=20)
-    ap.add_argument("--reorder-iters", type=int, default=300)
+    ap.add_argument("--reorder-iters", type=int, default=300,
+                    help="annealing budget for the compiled plan AND the "
+                         "proposal count of the delta-vs-full comparison")
+    ap.add_argument("--reorder-block", type=int, default=16,
+                    help="tile size for the delta-evaluation benchmark DAG "
+                         "(finer tiles -> the 10k+-block regime the "
+                         "incremental evaluator targets)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "interpret", "jnp"))
+    ap.add_argument("--out", default="BENCH_engine.json",
+                    help="where to write the machine-readable results")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -65,33 +125,96 @@ def main():
                     reorder_iters=args.reorder_iters)
     t0 = time.time()
     plan = engine.compile(layers)
-    print(f"compile: {time.time()-t0:.2f}s — {plan.describe()}")
+    compile_s = time.time() - t0
+    print(f"compile: {compile_s:.2f}s — {plan.describe()}")
+    assert plan.fused, "expected the fused flat-schedule plan"
 
-    x = jnp.asarray(rng.standard_normal((args.batch, sizes[0])), jnp.float32)
-
-    # layer-by-layer: same schedules/backend, but one jitted dispatch per
-    # layer — the pre-engine call pattern.
+    # the layered baseline: same layers, same schedule arrays, same backend,
+    # but one *jitted dispatch per layer* — the PR-1 call pattern the
+    # megakernel replaces (hidden state crosses HBM at every boundary)
     per_layer = [
         make_forward([lay], [sch], [act], plan.backend)
-        for lay, sch, act in zip(plan.layers, plan.schedules, plan.activations)
+        for lay, sch, act in zip(plan.layers, plan.schedules,
+                                 plan.activations)
     ]
 
-    def layer_by_layer(h):
+    def layered(h):
         for fn in per_layer:
             h = fn(h)
         return h
 
-    t_layered = timeit(layer_by_layer, x, args.iters)
-    t_engine = timeit(plan, x, args.iters)
+    x = jnp.asarray(rng.standard_normal((args.batch, sizes[0])), jnp.float32)
+    t_layered = timeit(layered, x, args.iters)
+    t_fused = timeit(plan, x, args.iters)
+    speedup = t_layered / max(t_fused, 1e-12)
 
-    np.testing.assert_allclose(np.asarray(layer_by_layer(x)),
+    np.testing.assert_allclose(np.asarray(layered(x)),
                                np.asarray(plan(x)), rtol=1e-5, atol=1e-5)
 
     print(f"backend={plan.backend} batch={args.batch} "
           f"net={'x'.join(map(str, sizes))} density={args.density}")
-    print(f"  layer-by-layer: {1e3*t_layered:8.2f} ms/batch")
-    print(f"  engine (fused): {1e3*t_engine:8.2f} ms/batch "
-          f"({t_layered/max(t_engine,1e-12):.2f}x)")
+    print(f"  layered (per-layer dispatch): {1e3*t_layered:8.2f} ms/batch")
+    print(f"  fused   (megakernel path):    {1e3*t_fused:8.2f} ms/batch "
+          f"({speedup:.2f}x)")
+
+    # delta evaluation: benchmark on a finer-grained block DAG of the same
+    # net — the 10k+-block regime "CR at scale" targets
+    from repro.core.blocksparse import to_block_ffnn
+    from repro.core.graph import drop_isolated
+    fine_layers = prune_dense_stack(ws, bs, density=args.density,
+                                    block_m=args.reorder_block,
+                                    block_n=args.reorder_block)
+    fine_net = to_block_ffnn(fine_layers).net
+    fine_order = fine_net.theorem1_order()
+    reorder_stats = bench_reorder(fine_net, fine_order, engine.M_tiles,
+                                  iters=args.reorder_iters)
+    print(f"  reorder: {reorder_stats['delta_ms_per_proposal']:.3f} ms/proposal "
+          f"(delta) vs {reorder_stats['full_ms_per_proposal']:.3f} ms (full) "
+          f"-> {reorder_stats['speedup']:.1f}x over "
+          f"{reorder_stats['proposals']} proposals, "
+          f"W={reorder_stats['W_blocks']} blocks")
+
+    io = plan.io
+    result = {
+        "net": {
+            "sizes": sizes,
+            "density": args.density,
+            "block": args.block,
+            "batch": args.batch,
+            "nnz_blocks": int(sum(l.nnz_blocks for l in layers)),
+        },
+        "backend": plan.backend,
+        "fused": plan.fused,
+        "compile_s": compile_s,
+        "latency_ms": {
+            "layered": 1e3 * t_layered,
+            "fused": 1e3 * t_fused,
+        },
+        "fused_vs_layered_speedup": speedup,
+        "io": {
+            "simulated_reads": io.simulated.reads,
+            "simulated_writes": io.simulated.writes,
+            "simulated_total": io.simulated.total,
+            "bound_total_lo": io.bounds.total_lo,
+            "bound_total_hi": io.bounds.total_hi,
+            "optimality_ratio": io.optimality_ratio,
+            "within_bounds": io.within_bounds,
+            "layered_total": io.layered_total,
+            "cross_layer_savings": io.cross_layer_savings,
+            "hidden_tiles_kept": io.hidden_tiles_kept,
+            "hidden_bytes_kept_per_row": io.hidden_bytes_kept_per_row,
+        },
+        "reorder": reorder_stats,
+        "env": {
+            "jax": jax.__version__,
+            "jax_backend": jax.default_backend(),
+            "python": platform.python_version(),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

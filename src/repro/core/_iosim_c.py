@@ -158,6 +158,80 @@ fail:
     return -1;
 }
 
+/* MIN-policy segment executor for the incremental (windowed) evaluator.
+   Runs Algorithm-1 accounting over trace_seg[0..L) with explicit per-access
+   next-use keys nxt_seg[], starting from the given cache state; the state
+   arrays (in_cache, dirty, remaining) are mutated in place so the caller can
+   chain segments.  The Belady heap is rebuilt from (cached_ids, cached_nu) —
+   decision-equivalent to a heap carried across the boundary, because
+   decisions only ever depend on the valid entries.
+   Records one (t_off, victim_key, runner_key, victim, runner) row per
+   eviction into ev_out (caller allocates >= 5*L).
+   out[0] += reads, out[1] += writes, out[2] = rows written.
+   Returns 0 ok, -1 alloc failure. */
+int resume_min_segment(const int64_t *trace_seg, const int64_t *nxt_seg,
+                       int64_t L, int64_t n, int64_t capacity,
+                       const uint8_t *is_output,
+                       uint8_t *in_cache, uint8_t *dirty, int64_t *remaining,
+                       const int64_t *cached_ids, const int64_t *cached_nu,
+                       int64_t n_cached, int64_t *ev_out, int64_t *out)
+{
+    int64_t *aux = malloc(n * sizeof(int64_t));
+    heapent *heap = malloc((L + n_cached + 16) * sizeof(heapent));
+    if (!aux || !heap) { free(aux); free(heap); return -1; }
+    for (int64_t v = 0; v < n; v++) aux[v] = INF;
+    int64_t hsz = 0;
+    int64_t cached = 0;
+    for (int64_t i = 0; i < n_cached; i++) {
+        int64_t v = cached_ids[i];
+        aux[v] = cached_nu[i];
+        heap_push(heap, &hsz, -cached_nu[i], v);
+        cached++;
+    }
+    int64_t reads = 0, writes = 0, n_ev = 0;
+    for (int64_t t = 0; t < L; t++) {
+        int64_t v = trace_seg[t];
+        int64_t nu = nxt_seg[t];
+        if (in_cache[v]) {
+            aux[v] = nu;
+            heap_push(heap, &hsz, -nu, v);
+        } else {
+            if (cached >= capacity) {
+                int64_t u;
+                int64_t negnu;
+                for (;;) {
+                    heapent e = heap_pop(heap, &hsz);
+                    if (in_cache[e.val] && aux[e.val] == -e.key) {
+                        u = e.val; negnu = e.key; break;
+                    }
+                }
+                if (dirty[u] && (remaining[u] > 0 || is_output[u])) {
+                    writes++; dirty[u] = 0;
+                }
+                in_cache[u] = 0; cached--;
+                while (hsz > 0 &&
+                       !(in_cache[heap[0].val] && aux[heap[0].val] == -heap[0].key))
+                    heap_pop(heap, &hsz);
+                ev_out[5 * n_ev] = t;
+                ev_out[5 * n_ev + 1] = -negnu;
+                ev_out[5 * n_ev + 2] = hsz > 0 ? -heap[0].key : -1;
+                ev_out[5 * n_ev + 3] = u;
+                ev_out[5 * n_ev + 4] = hsz > 0 ? heap[0].val : -1;
+                n_ev++;
+            }
+            reads++;
+            in_cache[v] = 1; cached++;
+            aux[v] = nu;
+            heap_push(heap, &hsz, -nu, v);
+        }
+        remaining[v]--;
+        if (t & 1) dirty[v] = 1;  /* caller aligns segments to even t */
+    }
+    out[0] += reads; out[1] += writes; out[2] = n_ev;
+    free(aux); free(heap);
+    return 0;
+}
+
 /* One windowed CR move (paper IV.A), in place on order[].
    dir: 0 = left, 1 = right.  Window = positions [i, min(i+w, W-1)]. */
 void propose_move(int64_t *order, int64_t W, const int32_t *src,
@@ -239,6 +313,10 @@ def _build() -> Optional[ctypes.CDLL]:
     lib.propose_move.restype = None
     lib.propose_move.argtypes = [i64p, ctypes.c_int64, i32p, i32p,
                                  ctypes.c_int64, ctypes.c_int64, ctypes.c_int]
+    lib.resume_min_segment.restype = ctypes.c_int
+    lib.resume_min_segment.argtypes = [
+        i64p, i64p, ctypes.c_int64, ctypes.c_int64, ctypes.c_int64, u8p,
+        u8p, u8p, i64p, i64p, i64p, ctypes.c_int64, i64p, i64p]
     return lib
 
 
@@ -271,6 +349,34 @@ def simulate_c(trace: np.ndarray, n: int, capacity: int,
     if rc != 0:
         return None
     return int(out[0]), int(out[1])
+
+
+def resume_min_segment_c(trace_seg: np.ndarray, nxt_seg: np.ndarray,
+                         n: int, capacity: int, is_output: np.ndarray,
+                         in_cache: np.ndarray, dirty: np.ndarray,
+                         remaining: np.ndarray, cached_ids: np.ndarray,
+                         cached_nu: np.ndarray, ev_out: np.ndarray,
+                         out: np.ndarray) -> bool:
+    """Run one MIN segment in C; mutates state arrays in place.
+
+    ``out`` is int64[3]: reads are ADDED to out[0], writes to out[1], and
+    out[2] is set to the number of eviction rows written to ``ev_out``.
+    Returns False if the accelerator is unavailable (caller falls back)."""
+    if not available():
+        return False
+    i64p = ctypes.POINTER(ctypes.c_int64)
+    u8p = ctypes.POINTER(ctypes.c_uint8)
+    rc = _lib.resume_min_segment(
+        trace_seg.ctypes.data_as(i64p), nxt_seg.ctypes.data_as(i64p),
+        len(trace_seg), n, capacity,
+        is_output.ctypes.data_as(u8p),
+        in_cache.ctypes.data_as(u8p), dirty.ctypes.data_as(u8p),
+        remaining.ctypes.data_as(i64p),
+        cached_ids.ctypes.data_as(i64p), cached_nu.ctypes.data_as(i64p),
+        len(cached_ids), ev_out.ctypes.data_as(i64p),
+        out.ctypes.data_as(i64p),
+    )
+    return rc == 0
 
 
 def propose_move_c(order: np.ndarray, src: np.ndarray, dst: np.ndarray,

@@ -27,7 +27,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from .graph import FFNN
-from .iosim import IOStats, simulate
+from .iosim import IncrementalSimulator, IOStats, simulate
 
 
 @dataclasses.dataclass
@@ -110,14 +110,25 @@ def connection_reordering(
     ws: Optional[int] = None,
     seed: int = 0,
     callback: Optional[Callable[[int, int, int], None]] = None,
+    incremental: Optional[bool] = None,
 ) -> ReorderResult:
     """Run Connection Reordering for ``T`` iterations.
 
     ``ws`` defaults to four times the average in-degree (paper §VI.A.1).
     ``callback(t, cur_ios, best_ios)`` is invoked every iteration if given.
+
+    ``incremental`` selects the windowed delta evaluator
+    (:class:`core.iosim.IncrementalSimulator`): each proposal is charged
+    O(window + affected suffix) instead of a full O(W) re-simulation.  The
+    delta totals are exact, so results are bit-identical to the full path
+    for the same seed.  Default (None): on for the MIN policy, off for
+    LRU/RR (whose recency state does not admit the cheap convergence
+    splice).  Forcing ``incremental=True`` with a non-MIN policy raises.
     """
     from . import _iosim_c
 
+    if incremental is None:
+        incremental = policy.lower() == "min"
     rng = np.random.default_rng(seed)
     if ws is None:
         avg_in = net.W / max(1, net.N - net.I)
@@ -130,7 +141,9 @@ def connection_reordering(
         src_l, dst_l = net.src.tolist(), net.dst.tolist()
 
     cur = np.ascontiguousarray(order, dtype=np.int64).copy()
-    cur_ios = simulate(net, cur, M, policy).total
+    inc_sim = IncrementalSimulator(net, cur, M, policy) if incremental else None
+    cur_ios = inc_sim.total if inc_sim is not None \
+        else simulate(net, cur, M, policy).total
     best = cur.copy()
     best_ios = cur_ios
     initial = cur_ios
@@ -152,7 +165,8 @@ def connection_reordering(
                 _apply_move(cur.tolist(), src_l, dst_l, i, w, direction),
                 dtype=np.int64,
             )
-        ios = simulate(net, cand, M, policy).total
+        ios = inc_sim.propose(cand) if inc_sim is not None \
+            else simulate(net, cand, M, policy).total
         if ios < cur_ios:
             accept = True
         else:
@@ -160,6 +174,8 @@ def connection_reordering(
         if accept:
             cur, cur_ios = cand, ios
             accepted += 1
+            if inc_sim is not None:
+                inc_sim.commit()
             if ios < best_ios:
                 best, best_ios = cand.copy(), ios
         history[t] = cur_ios

@@ -7,7 +7,13 @@
     print(plan.describe())
 """
 
-from .backends import BACKENDS, make_forward, resolve_backend
+from .backends import (
+    BACKENDS,
+    make_forward,
+    make_fused_forward,
+    pad_batch,
+    resolve_backend,
+)
 from .engine import ACTIVATIONS, Engine
 from .plan import ExecutionPlan, IOReport
 
@@ -18,5 +24,7 @@ __all__ = [
     "ExecutionPlan",
     "IOReport",
     "make_forward",
+    "make_fused_forward",
+    "pad_batch",
     "resolve_backend",
 ]

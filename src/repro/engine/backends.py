@@ -1,19 +1,30 @@
 """Execution backends for compiled plans.
 
-Three ways to run the same schedule:
+Three ways to run the same flat cross-layer schedule:
 
-  * ``pallas``    — the scheduled Pallas TPU kernel (``kernels/bsr_matmul``),
-                    compiled; the production path.
-  * ``interpret`` — the identical Pallas body run in interpret mode; exact
-                    kernel semantics on any host (the correctness path).
-  * ``jnp``       — a pure-``jnp`` lowering of the schedule (gather blocks →
-                    batched block matmul → segment-sum by output tile); runs
-                    fast on CPU/GPU and is fully jittable.
+  * ``pallas``    — the whole-network Pallas megakernel
+                    (``kernels/bsr_matmul.bsr_megakernel``): ONE grid over
+                    every nonzero block of every layer, hidden state resident
+                    in VMEM across layer boundaries; the production path.
+  * ``interpret`` — the identical megakernel body run in interpret mode;
+                    exact kernel semantics on any host (the correctness path).
+  * ``jnp``       — a pure-``jnp`` lowering of the same flat schedule: one
+                    gather → batched block matmul → segment-sum pass per
+                    layer segment of the flat arrays; runs fast on CPU/GPU
+                    and is fully jittable.
 
-All three consume the same ``CompiledSchedule`` arrays, so the connection
-order — the thing the paper is about — is identical across backends; only the
+All three consume the same ``FlatSchedule`` arrays, so the connection order —
+the thing the paper is about — is identical across backends; only the
 machinery that walks it differs.  ``auto`` resolves to ``pallas`` on TPU and
 ``jnp`` elsewhere.
+
+Nets whose tile shapes cannot be flattened (non-uniform block sizes) fall
+back to the per-layer dispatch path (``make_forward``), which is also what
+``benchmarks/bench_engine.py`` uses as the layered baseline.
+
+The TPU kernels tile the batch dimension, so ``B`` is padded up to the
+sublane multiple of the dtype before a ``pallas``/``interpret`` launch and
+the result is sliced back — odd batch sizes work on every backend.
 """
 
 from __future__ import annotations
@@ -24,8 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocksparse import BSRLayer
-from repro.kernels.bsr_matmul import bsr_matmul
-from repro.kernels.ops import CompiledSchedule
+from repro.kernels.bsr_matmul import bsr_matmul, bsr_megakernel
+from repro.kernels.ops import CompiledSchedule, FlatSchedule
 
 BACKENDS = ("pallas", "interpret", "jnp")
 
@@ -39,6 +50,30 @@ def resolve_backend(name: str) -> str:
     return name
 
 
+def sublane_multiple(dtype) -> int:
+    """Minimum TPU sublane count for ``dtype`` (second-to-last dim tiling)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    if itemsize == 2:
+        return 16
+    if itemsize == 1:
+        return 32
+    return 8
+
+
+def pad_batch(x: jnp.ndarray) -> jnp.ndarray:
+    """Pad the batch dim up to the sublane multiple (TPU tiling constraint)."""
+    B = x.shape[0]
+    m = sublane_multiple(x.dtype)
+    pad = (-B) % m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# per-layer dispatch (layered baseline + fallback for non-uniform tiles)
+# --------------------------------------------------------------------------- #
+
 def _jnp_layer(
     x: jnp.ndarray,
     layer: BSRLayer,
@@ -50,20 +85,37 @@ def _jnp_layer(
     Accumulates in float32 (like the kernel's VMEM accumulator) and walks the
     blocks in schedule order, so the arithmetic is the schedule's.
     """
+    return _jnp_segment(
+        x, schedule.rows, schedule.cols, schedule.blocks,
+        jnp.asarray(layer.bias), layer.block_m, layer.block_n,
+        layer.grid_in, layer.grid_out, activation,
+    )
+
+
+def _jnp_segment(
+    x: jnp.ndarray,
+    rows: jnp.ndarray,
+    cols: jnp.ndarray,
+    blocks: jnp.ndarray,
+    bias: jnp.ndarray,
+    bm: int,
+    bn: int,
+    grid_in: int,
+    grid_out: int,
+    activation: Optional[Callable],
+) -> jnp.ndarray:
     B = x.shape[0]
-    bm, bn = layer.block_m, layer.block_n
-    grid_in, grid_out = layer.grid_in, layer.grid_out
     xt = x.reshape(B, grid_in, bm).transpose(1, 0, 2)          # [gi, B, bm]
-    gathered = jnp.take(xt, schedule.rows, axis=0)             # [nnz, B, bm]
+    gathered = jnp.take(xt, rows, axis=0)                      # [nnz, B, bm]
     contrib = jnp.einsum(
         "gbm,gmn->gbn",
         gathered.astype(jnp.float32),
-        schedule.blocks.astype(jnp.float32),
+        blocks.astype(jnp.float32),
     )                                                          # [nnz, B, bn]
-    y = jax.ops.segment_sum(contrib, schedule.cols,
+    y = jax.ops.segment_sum(contrib, cols,
                             num_segments=grid_out)             # [go, B, bn]
     y = y.transpose(1, 0, 2).reshape(B, grid_out * bn)
-    y = y + jnp.asarray(layer.bias).astype(jnp.float32)
+    y = y + bias.astype(jnp.float32)
     if activation is not None:
         y = activation(y)
     return y.astype(x.dtype)
@@ -97,24 +149,100 @@ def make_forward(
     backend: str,
     jit: bool = True,
 ) -> Callable:
-    """Build the whole-network forward for one backend: x [B, n_in] -> [B, n_out].
+    """Per-layer dispatch forward: x [B, n_in] -> [B, n_out].
 
-    The per-layer loop is unrolled at trace time, so the chain of layers —
-    including every activation epilogue — fuses into one compiled program:
-    one dispatch per request instead of one per layer.
+    One ``pallas_call`` (or jnp pass) per layer inside one jitted program —
+    the PR-1 call pattern, kept as the layered baseline the megakernel is
+    benchmarked against and as the fallback for nets the flat schedule
+    cannot express (non-uniform tile sizes).
     """
     layers = list(layers)
     schedules = list(schedules)
     activations = list(activations)
 
     def forward(x):
+        B = x.shape[0]
         h = x
+        if backend != "jnp":
+            h = pad_batch(h)
         for layer, schedule, act in zip(layers, schedules, activations):
             if backend == "jnp":
                 h = _jnp_layer(h, layer, schedule, act)
             else:
                 h = _pallas_layer(h, layer, schedule, act,
                                   interpret=(backend == "interpret"))
-        return h
+        return h[:B]
+
+    return jax.jit(forward) if jit else forward
+
+
+# --------------------------------------------------------------------------- #
+# fused dispatch: the whole net as one flat schedule
+# --------------------------------------------------------------------------- #
+
+def make_fused_forward(
+    layers: Sequence[BSRLayer],
+    flat: FlatSchedule,
+    activations: Sequence[Optional[Callable]],
+    backend: str,
+    jit: bool = True,
+) -> Callable:
+    """Whole-network fused forward over one ``FlatSchedule``.
+
+    ``pallas``/``interpret``: a single ``bsr_megakernel`` dispatch — one grid
+    for all layers, hidden state in VMEM end to end.  ``jnp``: the identical
+    flat arrays consumed segment-by-segment (segment views are materialized
+    once here, outside the trace, so no per-call slicing of the big block
+    array survives into the compiled program).
+    """
+    layers = list(layers)
+    activations = list(activations)
+    hidden = set(activations[:-1])
+    if len(hidden) > 1:
+        raise ValueError(
+            "the megakernel fuses ONE hidden-layer activation; got "
+            f"{len(hidden)} distinct hidden epilogues — use fuse=False "
+            "(per-layer dispatch) for heterogeneous activations"
+        )
+    act = activations[0] if len(activations) > 1 else None
+    fact = activations[-1]
+
+    if backend == "jnp":
+        bs = flat.block
+        segs = []
+        bias_row = 0
+        for k, (s, e) in enumerate(flat.segments):
+            lay = layers[k]
+            bias = flat.bias_tiles[bias_row:bias_row + lay.grid_out] \
+                .reshape(-1)
+            segs.append((flat.rows[s:e], flat.cols[s:e], flat.blocks[s:e],
+                         bias, lay.grid_in, lay.grid_out, activations[k]))
+            bias_row += lay.grid_out
+
+        def forward_jnp(x):
+            h = x
+            for rows, cols, blocks, bias, gi, go, a in segs:
+                h = _jnp_segment(h, rows, cols, blocks, bias,
+                                 bs, bs, gi, go, a)
+            return h
+
+        return jax.jit(forward_jnp) if jit else forward_jnp
+
+    def forward(x):
+        B = x.shape[0]
+        xp = pad_batch(x)
+        y = bsr_megakernel(
+            xp, flat.blocks, flat.rows, flat.cols, flat.first, flat.last,
+            flat.layer_id, flat.hbm_row, flat.out_tile, flat.bias_idx,
+            flat.bias_tiles,
+            n_layers=flat.n_layers,
+            block=flat.block,
+            grid_out_final=flat.grid_out_final,
+            hidden_tiles=flat.hidden_tiles,
+            activation=act,
+            final_activation=fact,
+            interpret=(backend == "interpret"),
+        )
+        return y[:B]
 
     return jax.jit(forward) if jit else forward

@@ -37,10 +37,10 @@ from repro.core.bounds import theorem1_bounds
 from repro.core.graph import drop_isolated
 from repro.core.iosim import simulate
 from repro.core.reorder import connection_reordering
-from repro.kernels.ops import compile_schedule
+from repro.kernels.ops import compile_flat_schedule, compile_schedule
 from repro.models.common import ACTIVATIONS as _MODEL_ACTIVATIONS
 
-from .backends import make_forward, resolve_backend
+from .backends import make_forward, make_fused_forward, resolve_backend
 from .plan import ExecutionPlan, IOReport
 
 # name -> activation callable (None = identity / linear output); extends the
@@ -84,6 +84,12 @@ class Engine:
         plan's I/O report; 3 matches the kernel's single-resident-tile model.
       reorder_iters / seed: annealing budget and RNG seed.
       policy: eviction policy for the simulated I/O report.
+      fuse: lower the whole net into ONE flat cross-layer dispatch (the
+        Pallas megakernel on pallas/interpret; one segment pass on jnp) with
+        the hidden state VMEM-resident across layer boundaries.  Nets whose
+        tile shapes cannot be flattened (non-uniform block sizes) silently
+        fall back to per-layer dispatch; ``fuse=False`` forces that layered
+        path.
     """
 
     backend: str = "auto"
@@ -94,6 +100,7 @@ class Engine:
     reorder_iters: int = 2000
     seed: int = 0
     policy: str = "min"
+    fuse: bool = True
     jit: bool = True
     _cache: Dict[Tuple, ExecutionPlan] = dataclasses.field(
         default_factory=dict, repr=False)
@@ -126,7 +133,7 @@ class Engine:
         return (
             tuple(id(l) for l in bffnn.layers), backend, act, fact,
             self.reorder, self.M_tiles, self.reorder_iters, self.seed,
-            self.policy, self.jit,
+            self.policy, self.fuse, self.jit,
         )
 
     # ------------------------------------------------------------------ #
@@ -143,8 +150,18 @@ class Engine:
         activations: List[Optional[Callable]] = \
             [act] * (len(layers) - 1) + [fact]
 
-        forward = make_forward(layers, schedules, activations, backend,
-                               jit=self.jit)
+        flat = None
+        if self.fuse:
+            try:
+                flat = compile_flat_schedule(layers, schedules)
+            except ValueError:
+                flat = None  # non-uniform tiles: per-layer dispatch fallback
+        if flat is not None:
+            forward = make_fused_forward(layers, flat, activations, backend,
+                                         jit=self.jit)
+        else:
+            forward = make_forward(layers, schedules, activations, backend,
+                                   jit=self.jit)
         return ExecutionPlan(
             layers=list(layers),
             schedules=schedules,
@@ -152,7 +169,9 @@ class Engine:
             backend=backend,
             order=order,
             block_ffnn=bffnn,
-            io=self.io_report(bffnn, order),
+            io=self.io_report(bffnn, order,
+                              schedules if flat is not None else None),
+            flat=flat,
             _forward=forward,
         )
 
@@ -168,17 +187,34 @@ class Engine:
             order = regroup_by_output(bffnn.net, res.order)
         return order
 
-    def io_report(self, bffnn: BlockFFNN, order: np.ndarray) -> IOReport:
+    def io_report(self, bffnn: BlockFFNN, order: np.ndarray,
+                  schedules: Optional[List] = None) -> IOReport:
         """Exact simulated tile traffic of ``order`` next to Theorem 1.
 
         Theorem 1 assumes a connected FFNN, so isolated tiles (dead blocks
         left by pruning) are dropped from the analysis — connection indices
-        are unaffected."""
+        are unaffected.  With per-layer ``schedules`` the report also carries
+        the layered-dispatch traffic (each boundary round-trips the hidden
+        state through HBM) so the fused plan's cross-layer savings are
+        visible next to the Theorem-1 bounds."""
         net = drop_isolated(bffnn.net)
         sim = simulate(net, order, self.M_tiles, self.policy)
+        layered_reads = layered_writes = 0
+        hidden_tiles = hidden_bytes = 0
+        if schedules is not None:
+            layered_reads = sum(s.sim_reads for s in schedules)
+            layered_writes = sum(s.sim_writes for s in schedules)
+            for lay in bffnn.layers[:-1]:
+                hidden_tiles += lay.grid_out
+                # one write out plus one read back avoided per feature
+                hidden_bytes += 2 * lay.n_out * 4
         return IOReport(
             simulated=sim,
             bounds=theorem1_bounds(net),
             M_tiles=self.M_tiles,
             policy=self.policy,
+            layered_reads=layered_reads,
+            layered_writes=layered_writes,
+            hidden_tiles_kept=hidden_tiles,
+            hidden_bytes_kept_per_row=hidden_bytes,
         )

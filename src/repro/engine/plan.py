@@ -23,7 +23,7 @@ import numpy as np
 from repro.core.blocksparse import BlockFFNN, BSRLayer
 from repro.core.bounds import Bounds
 from repro.core.iosim import IOStats
-from repro.kernels.ops import CompiledSchedule
+from repro.kernels.ops import CompiledSchedule, FlatSchedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,12 +34,25 @@ class IOReport:
     under the single-resident-tile VMEM model (``core.iosim.simulate`` on the
     block DAG); ``bounds`` are Theorem 1's bounds for the same (connected)
     DAG.  A correct plan always satisfies ``within_bounds``.
+
+    The cross-layer fields quantify what fusing the whole net into one
+    kernel saves over per-layer dispatch: ``layered_reads``/``layered_writes``
+    are the summed per-layer simulated tile traffic (each layer boundary
+    forces the hidden state through HBM there), ``hidden_tiles_kept`` is the
+    number of intermediate activation tiles that stay VMEM-resident in the
+    fused plan, and ``hidden_bytes_kept_per_row`` the HBM bytes that saves
+    per batch row (one write plus one read-back per intermediate feature, at
+    the kernel's float32 accumulator/hidden-buffer precision — 4 B/feature).
     """
 
     simulated: IOStats
     bounds: Bounds
     M_tiles: int
     policy: str
+    layered_reads: int = 0
+    layered_writes: int = 0
+    hidden_tiles_kept: int = 0
+    hidden_bytes_kept_per_row: int = 0
 
     @property
     def within_total_bound(self) -> bool:
@@ -59,12 +72,27 @@ class IOReport:
         """simulated / lower bound — Theorem 1 guarantees ≤ 2 is achievable."""
         return self.simulated.total / max(1, self.bounds.total_lo)
 
+    @property
+    def layered_total(self) -> int:
+        return self.layered_reads + self.layered_writes
+
+    @property
+    def cross_layer_savings(self) -> int:
+        """Tile transfers the fused whole-net schedule avoids vs per-layer
+        dispatch (hidden state kept in VMEM across layer boundaries)."""
+        return max(0, self.layered_total - self.simulated.total)
+
     def summary(self) -> str:
         s, b = self.simulated, self.bounds
-        return (f"tile I/O {s.total} (r={s.reads} w={s.writes}) in "
-                f"[{b.total_lo}, {b.total_hi}] "
-                f"(x{self.optimality_ratio:.2f} of lower bound, "
-                f"M={self.M_tiles} tiles, {self.policy.upper()})")
+        msg = (f"tile I/O {s.total} (r={s.reads} w={s.writes}) in "
+               f"[{b.total_lo}, {b.total_hi}] "
+               f"(x{self.optimality_ratio:.2f} of lower bound, "
+               f"M={self.M_tiles} tiles, {self.policy.upper()})")
+        if self.layered_total:
+            msg += (f"; fused saves {self.cross_layer_savings} tile I/Os vs "
+                    f"layered ({self.hidden_tiles_kept} hidden tiles / "
+                    f"{self.hidden_bytes_kept_per_row} B/row VMEM-resident)")
+        return msg
 
 
 @dataclasses.dataclass
@@ -78,8 +106,15 @@ class ExecutionPlan:
     order: np.ndarray                       # block-DAG connection order
     block_ffnn: BlockFFNN
     io: IOReport
+    flat: Optional[FlatSchedule] = None     # cross-layer schedule (fused)
     _forward: Callable = dataclasses.field(repr=False, default=None)
     calls: int = dataclasses.field(default=0, compare=False)
+
+    @property
+    def fused(self) -> bool:
+        """True when the plan executes as one flat cross-layer dispatch (the
+        megakernel on pallas/interpret, one segment pass on jnp)."""
+        return self.flat is not None
 
     @property
     def n_in(self) -> int:
@@ -108,6 +143,7 @@ class ExecutionPlan:
         shapes = " -> ".join(
             [str(self.n_in)] + [str(l.n_out) for l in self.layers])
         nnz = sum(l.nnz_blocks for l in self.layers)
-        return (f"ExecutionPlan[{self.backend}] {shapes} "
+        mode = "fused" if self.fused else "layered"
+        return (f"ExecutionPlan[{self.backend}/{mode}] {shapes} "
                 f"({len(self.layers)} layers, {nnz} nonzero blocks); "
                 + self.io.summary())

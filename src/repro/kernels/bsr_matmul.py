@@ -117,3 +117,169 @@ def bsr_matmul(
         interpret=interpret,
     )
     return fn(rows, cols, first, last, x, blocks, bias.reshape(1, -1))
+
+
+# --------------------------------------------------------------------------- #
+# the whole-network megakernel
+# --------------------------------------------------------------------------- #
+
+def _megakernel(
+    # scalar prefetch
+    layer_ref, rows_ref, cols_ref, first_ref, last_ref,
+    hbm_row_ref, out_tile_ref, bias_idx_ref,
+    # inputs
+    x_ref, w_ref, b_ref,
+    # outputs
+    o_ref,
+    # scratch
+    acc_ref, h0_ref, h1_ref,
+    *,
+    n_layers: int,
+    activation: Optional[Callable],
+    final_activation: Optional[Callable],
+):
+    """One grid step per nonzero block of ANY layer, in whole-net Theorem-1
+    order.  The hidden state ping-pongs between two VMEM buffers across layer
+    boundaries (layer k reads h[(k-1) % 2], writes h[k % 2]); activations
+    never touch HBM between layers.  Weight blocks stream through the Pallas
+    pipeline, which double-buffers the ``w_ref`` fetch of step g+1 behind the
+    multiply of step g."""
+    g = pl.program_id(0)
+    lid = layer_ref[g]
+
+    @pl.when(first_ref[g] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # multiply-accumulate from this step's input tile
+    @pl.when(lid == 0)
+    def _from_hbm():
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+        )
+
+    if n_layers > 1:
+        r = rows_ref[g]
+
+        @pl.when((lid > 0) & (lid % 2 == 1))
+        def _from_h0():
+            acc_ref[...] += jnp.dot(
+                h0_ref[r], w_ref[0], preferred_element_type=jnp.float32
+            )
+
+        @pl.when((lid > 0) & (lid % 2 == 0))
+        def _from_h1():
+            acc_ref[...] += jnp.dot(
+                h1_ref[r], w_ref[0], preferred_element_type=jnp.float32
+            )
+
+    # epilogue on the last visit of the current output tile
+    is_final = lid == n_layers - 1
+
+    @pl.when((last_ref[g] == 1) & is_final)
+    def _emit():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if final_activation is not None:
+            y = final_activation(y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+    if n_layers > 1:
+        c = cols_ref[g]
+
+        @pl.when((last_ref[g] == 1) & ~is_final & (lid % 2 == 0))
+        def _stash_h0():
+            y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+            if activation is not None:
+                y = activation(y)
+            h0_ref[c] = y
+
+        @pl.when((last_ref[g] == 1) & ~is_final & (lid % 2 == 1))
+        def _stash_h1():
+            y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+            if activation is not None:
+                y = activation(y)
+            h1_ref[c] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_layers", "block", "grid_out_final", "hidden_tiles",
+                     "activation", "final_activation", "interpret"),
+)
+def bsr_megakernel(
+    x: jnp.ndarray,           # [B, n_in]
+    blocks: jnp.ndarray,      # [nnz_total, bs, bs] flat scheduled order
+    rows: jnp.ndarray,        # int32 [nnz_total] layer-local input tile
+    cols: jnp.ndarray,        # int32 [nnz_total] layer-local output tile
+    first: jnp.ndarray,       # int32 [nnz_total]
+    last: jnp.ndarray,        # int32 [nnz_total]
+    layer_id: jnp.ndarray,    # int32 [nnz_total]
+    hbm_row: jnp.ndarray,     # int32 [nnz_total] x-BlockSpec index
+    out_tile: jnp.ndarray,    # int32 [nnz_total] out-BlockSpec index
+    bias_idx: jnp.ndarray,    # int32 [nnz_total] bias-tile index
+    bias_tiles: jnp.ndarray,  # [total_out_tiles, bs]
+    n_layers: int,
+    block: int,
+    grid_out_final: int,
+    hidden_tiles: int,
+    activation: Optional[Callable] = None,
+    final_activation: Optional[Callable] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Run a whole multi-layer net as ONE ``pallas_call``.
+
+    The grid is the flat cross-layer schedule (``kernels.ops.FlatSchedule``);
+    see ``_megakernel`` for the VMEM residency story.  The batch dimension
+    must already be padded to the sublane multiple (the engine does this).
+    """
+    B, n_in = x.shape
+    nnz = blocks.shape[0]
+    bs = block
+    n_out = grid_out_final * bs
+    if n_in % bs:
+        raise ValueError("n_in must be a multiple of the block size")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=8,
+        grid=(nnz,),
+        in_specs=[
+            # input tile: only layer-0 steps move this index; afterwards it
+            # is frozen, so the block stays in VMEM untouched
+            pl.BlockSpec(
+                (B, bs),
+                lambda g, lid, r, c, f, l, hbm, out, bidx: (0, hbm[g])),
+            # weight block of step g: streamed, double-buffered by the
+            # Pallas pipeline
+            pl.BlockSpec(
+                (1, bs, bs),
+                lambda g, lid, r, c, f, l, hbm, out, bidx: (g, 0, 0)),
+            # bias tile of the current output tile (any layer)
+            pl.BlockSpec(
+                (1, bs),
+                lambda g, lid, r, c, f, l, hbm, out, bidx: (bidx[g], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (B, bs),
+            lambda g, lid, r, c, f, l, hbm, out, bidx: (0, out[g])),
+        scratch_shapes=[
+            pltpu.VMEM((B, bs), jnp.float32),                  # accumulator
+            pltpu.VMEM((hidden_tiles, B, bs), jnp.float32),    # hidden ping
+            pltpu.VMEM((hidden_tiles, B, bs), jnp.float32),    # hidden pong
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(
+            _megakernel,
+            n_layers=n_layers,
+            activation=activation,
+            final_activation=final_activation,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_out), x.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )
+    return fn(layer_id, rows, cols, first, last, hbm_row, out_tile, bias_idx,
+              x, blocks, bias_tiles)

@@ -4,12 +4,18 @@
 block schedule (from ``core.blocksparse.schedule_arrays``), enforces the
 Theorem-1 contiguity contract, patches empty output tiles, and dispatches to
 the Pallas kernel (TPU) or the jnp oracle (non-TPU backends).
+
+``compile_flat_schedule`` concatenates the per-layer schedules of a whole
+network into one cross-layer :class:`FlatSchedule` — the input of the
+megakernel (``bsr_matmul.bsr_megakernel``), which walks every nonzero block
+of every layer in one Pallas grid and keeps the hidden state VMEM-resident
+across layer boundaries.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +90,151 @@ def compile_schedule(
         grid_out=layer.grid_out,
         sim_reads=sim_reads,
         sim_writes=sim_writes,
+    )
+
+
+@dataclasses.dataclass
+class FlatSchedule:
+    """One whole-network block schedule: all layers' steps in one flat grid.
+
+    The per-step arrays are the per-layer ``CompiledSchedule`` arrays
+    concatenated in layer order (each layer segment keeps its Theorem-1
+    contiguous-by-output grouping), plus the cross-layer scalar-prefetch
+    arrays the megernel's index maps need:
+
+      * ``layer_id[g]`` — which layer step ``g`` belongs to;
+      * ``hbm_row[g]``  — the HBM input tile to map into VMEM: ``rows[g]``
+        during layer 0, then frozen (no index change => no re-fetch) since
+        later layers read the VMEM-resident hidden state instead;
+      * ``out_tile[g]`` — the HBM output tile to map: ``cols[g]`` during the
+        final layer, else pinned to the final layer's first output tile so
+        the out buffer is never flushed before it holds real data;
+      * ``bias_idx[g]`` — row of ``bias_tiles`` ([total output tiles, bs])
+        holding the bias of step ``g``'s output tile.
+
+    ``segments[k] = (start, end)`` delimits layer ``k``'s steps; the ``jnp``
+    lowering consumes exactly these flat arrays one segment at a time, so
+    all backends execute the identical connection order.
+    """
+
+    blocks: jnp.ndarray       # [nnz_total, bs, bs] scheduled order
+    rows: jnp.ndarray         # int32 [nnz_total] layer-local input tile
+    cols: jnp.ndarray         # int32 [nnz_total] layer-local output tile
+    first: jnp.ndarray        # int32 [nnz_total]
+    last: jnp.ndarray         # int32 [nnz_total]
+    layer_id: jnp.ndarray     # int32 [nnz_total]
+    hbm_row: jnp.ndarray      # int32 [nnz_total]
+    out_tile: jnp.ndarray     # int32 [nnz_total]
+    bias_idx: jnp.ndarray     # int32 [nnz_total]
+    bias_tiles: jnp.ndarray   # [sum(grid_out_k), bs]
+    segments: Tuple[Tuple[int, int], ...]
+    n_layers: int
+    block: int                # uniform tile size
+    grid_out_final: int
+    n_out: int
+    hidden_tiles: int         # max tile count of any intermediate activation
+    # simulated per-layer tile traffic (reads, writes) — flat totals are the
+    # sums, which tests check against the per-layer reports
+    per_layer_io: Tuple[Tuple[int, int], ...]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def sim_reads(self) -> int:
+        return sum(r for r, _ in self.per_layer_io)
+
+    @property
+    def sim_writes(self) -> int:
+        return sum(w for _, w in self.per_layer_io)
+
+
+def compile_flat_schedule(
+    layers: Sequence[BSRLayer],
+    schedules: Sequence[CompiledSchedule],
+) -> FlatSchedule:
+    """Concatenate per-layer schedules into one megakernel-ready flat schedule.
+
+    Requires a uniform tile size: all layers must share ``block_m`` /
+    ``block_n`` (and square tiles when depth > 1, since layer k's output
+    tiles are layer k+1's input tiles).  Raises ``ValueError`` otherwise —
+    the engine falls back to per-layer dispatch in that case.
+    """
+    if not layers or len(layers) != len(schedules):
+        raise ValueError("need one schedule per layer")
+    bs = layers[0].block_m
+    for lay in layers:
+        if lay.block_m != bs or lay.block_n != bs:
+            raise ValueError(
+                "flat schedule requires one uniform square tile size across "
+                f"layers; got ({lay.block_m}, {lay.block_n}) vs {bs}"
+            )
+
+    rows_l: List[np.ndarray] = []
+    cols_l: List[np.ndarray] = []
+    first_l: List[np.ndarray] = []
+    last_l: List[np.ndarray] = []
+    lid_l: List[np.ndarray] = []
+    segments: List[Tuple[int, int]] = []
+    per_layer_io: List[Tuple[int, int]] = []
+    off = 0
+    for k, sch in enumerate(schedules):
+        n = int(sch.rows.shape[0])
+        rows_l.append(np.asarray(sch.rows, dtype=np.int32))
+        cols_l.append(np.asarray(sch.cols, dtype=np.int32))
+        first_l.append(np.asarray(sch.first, dtype=np.int32))
+        last_l.append(np.asarray(sch.last, dtype=np.int32))
+        lid_l.append(np.full(n, k, dtype=np.int32))
+        segments.append((off, off + n))
+        per_layer_io.append((sch.sim_reads, sch.sim_writes))
+        off += n
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    first = np.concatenate(first_l)
+    last = np.concatenate(last_l)
+    layer_id = np.concatenate(lid_l)
+
+    # hbm_row: live during layer 0, frozen afterwards (constant index map
+    # result => Pallas keeps the current block in VMEM, no extra fetch)
+    n0 = segments[0][1]
+    hbm_row = rows.copy()
+    if off > n0:
+        hbm_row[n0:] = hbm_row[n0 - 1]
+    # out_tile: live during the final layer, pinned to its first output tile
+    # before that (the buffer holds garbage until the final layer's first
+    # epilogue overwrites it in place, so nothing bogus is ever flushed)
+    fs, fe = segments[-1]
+    out_tile = np.full(off, int(cols[fs]), dtype=np.int32)
+    out_tile[fs:fe] = cols[fs:fe]
+    # flat bias tiles + per-step bias row
+    bias_off = np.zeros(len(layers) + 1, dtype=np.int64)
+    for k, lay in enumerate(layers):
+        bias_off[k + 1] = bias_off[k] + lay.grid_out
+    bias_idx = (bias_off[layer_id] + cols).astype(np.int32)
+    bias_tiles = np.concatenate(
+        [np.asarray(lay.bias, dtype=np.float32).reshape(lay.grid_out, -1)
+         for lay in layers])
+
+    hidden_tiles = max([lay.grid_out for lay in layers[:-1]] or [1])
+    return FlatSchedule(
+        blocks=jnp.concatenate([sch.blocks for sch in schedules]),
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(cols),
+        first=jnp.asarray(first),
+        last=jnp.asarray(last),
+        layer_id=jnp.asarray(layer_id),
+        hbm_row=jnp.asarray(hbm_row),
+        out_tile=jnp.asarray(out_tile),
+        bias_idx=jnp.asarray(bias_idx),
+        bias_tiles=jnp.asarray(bias_tiles),
+        segments=tuple(segments),
+        n_layers=len(layers),
+        block=bs,
+        grid_out_final=layers[-1].grid_out,
+        n_out=layers[-1].n_out,
+        hidden_tiles=int(hidden_tiles),
+        per_layer_io=tuple(per_layer_io),
     )
 
 

@@ -51,7 +51,8 @@ def serve_sparse_ffnn(args) -> None:
     layers = prune_dense_stack(ws, bs, density=args.density,
                                block_m=args.block, block_n=args.block)
     engine = Engine(backend=args.backend, activation="gelu", reorder=True,
-                    reorder_iters=args.reorder_iters)
+                    reorder_iters=args.reorder_iters,
+                    fuse=not args.no_fuse)
     t0 = time.time()
     plan = engine.compile(layers)
     print(f"engine compile: {time.time()-t0:.1f}s — {plan.describe()}")
@@ -95,6 +96,9 @@ def main():
     ap.add_argument("--density", type=float, default=0.1)
     ap.add_argument("--block", type=int, default=128)
     ap.add_argument("--reorder-iters", type=int, default=300)
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="serve with per-layer dispatch instead of the fused "
+                         "whole-network megakernel plan")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "interpret", "jnp"))
     args = ap.parse_args()

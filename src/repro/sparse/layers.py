@@ -64,6 +64,7 @@ class ScheduledSparseFFNN:
         reorder_iters: int = 2000,
         seed: int = 0,
         backend: str = "auto",
+        fuse: bool = True,
     ) -> "ScheduledSparseFFNN":
         """Compile with the Theorem-1 schedule; optionally improve it with CR.
 
@@ -72,11 +73,15 @@ class ScheduledSparseFFNN:
         CR proposals that break the contiguous-by-output contract are unusable
         by the kernel, so the engine re-groups the CR result by output tile,
         keeping CR's improved *input-tile locality* within each group.
+
+        With ``fuse=True`` (default) the whole net lowers to ONE flat
+        cross-layer dispatch — the Pallas megakernel on TPU backends, with
+        hidden states VMEM-resident across layer boundaries.
         """
         engine = Engine(
             backend=backend, activation=activation, final_activation=None,
             reorder=reorder, M_tiles=M_tiles, reorder_iters=reorder_iters,
-            seed=seed,
+            seed=seed, fuse=fuse,
         )
         plan = engine.compile(list(layers))
         return cls(
@@ -84,6 +89,11 @@ class ScheduledSparseFFNN:
             block_ffnn=plan.block_ffnn, order=plan.order,
             activation=activation, plan=plan, engine=engine,
         )
+
+    @property
+    def fused(self) -> bool:
+        """True when the compiled plan runs as one flat cross-layer dispatch."""
+        return self.plan is not None and self.plan.fused
 
     def __call__(self, x: jnp.ndarray, interpret: Optional[bool] = None) -> jnp.ndarray:
         """Run the fused plan.  ``interpret`` forces the Pallas interpret-mode

@@ -198,5 +198,7 @@ def test_plan_schedules_contiguous_by_output(make_stack, reorder):
 def test_io_report_summary_strings(make_stack):
     plan = Engine(backend="jnp").compile(make_stack())
     s = plan.describe()
-    assert "ExecutionPlan[jnp]" in s and "tile I/O" in s
+    assert "ExecutionPlan[jnp/fused]" in s and "tile I/O" in s
     assert plan.io.optimality_ratio >= 1.0
+    assert Engine(backend="jnp", fuse=False).compile(make_stack()) \
+        .describe().count("layered")

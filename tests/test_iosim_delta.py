@@ -1,0 +1,118 @@
+"""Windowed/incremental I/O delta evaluation tests (``IncrementalSimulator``).
+
+The contract is exactness: for ANY candidate order produced by the annealer's
+windowed moves, ``propose(cand)`` must equal a full ``simulate()`` — on both
+the C-accelerated and the pure-Python segment runners, across chained
+commits, memory sizes, and DAG shapes (random FFNNs and real block DAGs).
+``connection_reordering`` with the delta evaluator must therefore be
+bit-identical to the full-re-simulation path for the same seed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.blocksparse import to_block_ffnn
+from repro.core.graph import random_ffnn
+from repro.core.iosim import IncrementalSimulator, simulate
+from repro.core.reorder import _apply_move, connection_reordering
+from repro.sparse import prune_dense_stack
+
+
+def _random_move(net, cur, rng, ws=8):
+    src_l, dst_l = net.src.tolist(), net.dst.tolist()
+    i = int(rng.integers(0, net.W))
+    w = int(rng.integers(0, ws))
+    d = 0 if rng.random() < 0.5 else 1
+    return np.array(_apply_move(cur.tolist(), src_l, dst_l, i, w, d),
+                    dtype=np.int64)
+
+
+@pytest.mark.parametrize("use_c", [True, False])
+@pytest.mark.parametrize("M", [3, 4, 6])
+def test_delta_equals_full_simulation(use_c, M):
+    for trial in range(3):
+        net = random_ffnn(width=14, depth=4, density=0.35, seed=trial)
+        order = net.theorem1_order()
+        sim = IncrementalSimulator(net, order, M)
+        if not use_c:
+            sim._use_c = False
+            sim._rebuild(np.ascontiguousarray(order, dtype=np.int64))
+        assert sim.total == simulate(net, order, M, "min").total
+        rng = np.random.default_rng(100 + trial)
+        cur = np.asarray(order, dtype=np.int64).copy()
+        for _ in range(40):
+            cand = _random_move(net, cur, rng)
+            got = sim.propose(cand)
+            want = simulate(net, cand, M, "min", force_python=True).total
+            assert got == want
+            if rng.random() < 0.5:  # chained commits
+                sim.commit()
+                cur = cand
+                assert sim.total == want
+
+
+def test_delta_on_real_block_dag():
+    rng = np.random.default_rng(0)
+    sizes = (256, 512, 384, 256)
+    ws = [rng.standard_normal((sizes[i], sizes[i + 1])).astype(np.float32)
+          for i in range(3)]
+    bs = [np.zeros(s, np.float32) for s in sizes[1:]]
+    layers = prune_dense_stack(ws, bs, density=0.3, block_m=32, block_n=32)
+    net = to_block_ffnn(layers).net
+    order = net.theorem1_order()
+    sim = IncrementalSimulator(net, order, 3)
+    rng = np.random.default_rng(1)
+    cur = np.asarray(order, dtype=np.int64).copy()
+    avg_in = net.W / max(1, net.N - net.I)
+    ws_win = max(1, int(round(4 * avg_in)))
+    for it in range(25):
+        cand = _random_move(net, cur, rng, ws=ws_win)
+        assert sim.propose(cand) == simulate(net, cand, 3, "min").total
+        if it % 3 == 0:
+            sim.commit()
+            cur = cand
+
+
+def test_propose_without_commit_leaves_baseline_intact():
+    net = random_ffnn(width=12, depth=3, density=0.4, seed=9)
+    order = net.theorem1_order()
+    sim = IncrementalSimulator(net, order, 3)
+    base = sim.total
+    rng = np.random.default_rng(0)
+    cur = np.asarray(order, dtype=np.int64)
+    for _ in range(10):  # rejected proposals must not perturb the baseline
+        sim.propose(_random_move(net, cur, rng))
+    assert sim.total == base
+    assert sim.propose(cur.copy()) == base  # no-op proposal
+
+
+def test_non_min_policy_rejected():
+    net = random_ffnn(width=10, depth=3, density=0.4, seed=0)
+    with pytest.raises(ValueError, match="MIN"):
+        IncrementalSimulator(net, net.theorem1_order(), 3, policy="lru")
+    with pytest.raises(ValueError, match="M >= 3"):
+        IncrementalSimulator(net, net.theorem1_order(), 2)
+
+
+def test_reordering_incremental_is_bit_identical():
+    net = random_ffnn(width=16, depth=4, density=0.3, seed=4)
+    order = net.theorem1_order()
+    inc = connection_reordering(net, order, M=3, T=250, seed=11,
+                                incremental=True)
+    full = connection_reordering(net, order, M=3, T=250, seed=11,
+                                 incremental=False)
+    assert inc.ios == full.ios
+    assert inc.accepted == full.accepted
+    np.testing.assert_array_equal(inc.order, full.order)
+    np.testing.assert_array_equal(inc.history, full.history)
+
+
+def test_reordering_incremental_forced_on_lru_raises():
+    net = random_ffnn(width=10, depth=3, density=0.4, seed=0)
+    with pytest.raises(ValueError, match="MIN"):
+        connection_reordering(net, net.theorem1_order(), M=3, T=10,
+                              policy="lru", incremental=True)
+    # default: LRU silently uses the full evaluator
+    res = connection_reordering(net, net.theorem1_order(), M=3, T=10,
+                                policy="lru")
+    assert res.proposed == 10

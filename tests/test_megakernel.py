@@ -1,0 +1,195 @@
+"""Whole-network megakernel (flat cross-layer schedule) tests.
+
+Three families:
+
+  * parity — the fused flat-schedule forward equals both the PR-1 per-layer
+    dispatch path and the dense layer-by-layer reference (``kernels/ref.py``)
+    within 1e-5, on every CPU-runnable backend, including odd batch sizes
+    (the engine pads B to the sublane multiple and slices the result);
+  * flat-schedule invariants — flattening preserves each layer's
+    contiguous-by-output grouping, segment arrays equal the per-layer
+    schedule arrays, the cross-layer scalar-prefetch arrays (hbm_row,
+    out_tile, bias_idx) obey their freezing/pinning contracts, and the flat
+    simulated I/O equals the sum of the per-layer reports;
+  * fallback — non-uniform tile sizes cannot flatten and the engine lowers
+    the layered path instead, with identical numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocksparse import is_contiguous_by_output
+from repro.engine import Engine
+from repro.kernels.ops import bsr_layer_ref, compile_flat_schedule
+
+CPU_BACKENDS = ("jnp", "interpret")
+
+
+def _oracle(layers, x, activation, final_activation=None):
+    h = x
+    for k, lay in enumerate(layers):
+        act = activation if k < len(layers) - 1 else final_activation
+        h = bsr_layer_ref(h, lay, activation=act)
+    return h
+
+
+def _max_err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+
+
+# --------------------------------------------------------------------------- #
+# parity: fused == layered == dense reference
+# --------------------------------------------------------------------------- #
+
+FUSED_CASES = [
+    # (sizes, block, density, batch, activation, reorder)
+    ((128, 128), 32, 0.5, 1, "relu", False),          # single layer
+    ((128, 256, 128), 32, 0.4, 8, "relu", False),
+    ((128, 256, 128), 32, 0.4, 8, "relu", True),      # with CR
+    ((192, 192, 192, 192), 32, 0.25, 16, "silu", False),
+    ((128, 192, 256, 192, 128), 64, 0.35, 4, "gelu", False),  # 4 layers
+    ((128, 256, 128), 64, 0.4, 3, "relu", False),     # odd batch
+    ((128, 256, 192, 128), 32, 0.4, 5, "tanh", False),  # odd batch, 3 layers
+]
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+@pytest.mark.parametrize("sizes,block,density,batch,activation,reorder",
+                         FUSED_CASES)
+def test_fused_matches_layered_and_reference(make_stack, sizes, block,
+                                             density, batch, activation,
+                                             reorder, backend):
+    layers = make_stack(sizes=sizes, density=density, block=block,
+                        seed=hash((sizes, block)) % 2**31)
+    kw = dict(backend=backend, activation=activation, reorder=reorder,
+              reorder_iters=100)
+    fused = Engine(fuse=True, **kw).compile(layers)
+    layered = Engine(fuse=False, **kw).compile(layers)
+    assert fused.fused and not layered.fused
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((batch, sizes[0])), jnp.float32)
+    yf = fused(x)
+    yl = layered(x)
+    act = None if activation is None else getattr(jax.nn, activation, jnp.tanh)
+    yr = _oracle(layers, x, act)
+    assert yf.shape == yr.shape and yf.dtype == x.dtype
+    assert _max_err(yf, yl) < 1e-5     # fused == per-layer dispatch
+    assert _max_err(yf, yr) < 1e-5     # fused == dense reference
+
+
+def test_fused_backends_agree(make_stack):
+    layers = make_stack(sizes=(128, 192, 128), density=0.3)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    ys = [Engine(backend=b, activation="gelu").compile(layers)(x)
+          for b in CPU_BACKENDS]
+    assert _max_err(ys[0], ys[1]) < 1e-5
+
+
+@pytest.mark.parametrize("batch", [1, 3, 5, 7, 9])
+def test_odd_batch_sizes_on_kernel_backend(make_stack, batch):
+    """B is padded to the sublane multiple inside the engine; odd batches
+    must work (and match) on the Pallas-semantics backend."""
+    layers = make_stack(sizes=(128, 256, 128), density=0.4)
+    plan = Engine(backend="interpret").compile(layers)
+    rng = np.random.default_rng(batch)
+    x = jnp.asarray(rng.standard_normal((batch, 128)), jnp.float32)
+    y = plan(x)
+    assert y.shape == (batch, 128)
+    assert _max_err(y, _oracle(layers, x, jax.nn.relu)) < 1e-5
+
+
+# --------------------------------------------------------------------------- #
+# flat-schedule invariants
+# --------------------------------------------------------------------------- #
+
+def test_flat_schedule_preserves_per_layer_grouping(make_stack):
+    layers = make_stack(sizes=(128, 256, 192, 128), density=0.4)
+    plan = Engine(backend="jnp", reorder=True, reorder_iters=150) \
+        .compile(layers)
+    flat = plan.flat
+    assert flat is not None
+    assert flat.nnz == sum(int(s.rows.shape[0]) for s in plan.schedules)
+    for k, (s, e) in enumerate(flat.segments):
+        sch = plan.schedules[k]
+        # each layer segment IS that layer's schedule, verbatim
+        np.testing.assert_array_equal(np.asarray(flat.rows[s:e]),
+                                      np.asarray(sch.rows))
+        np.testing.assert_array_equal(np.asarray(flat.cols[s:e]),
+                                      np.asarray(sch.cols))
+        np.testing.assert_array_equal(np.asarray(flat.first[s:e]),
+                                      np.asarray(sch.first))
+        np.testing.assert_array_equal(np.asarray(flat.last[s:e]),
+                                      np.asarray(sch.last))
+        assert is_contiguous_by_output(np.asarray(flat.cols[s:e]))
+        assert set(np.asarray(flat.layer_id[s:e]).tolist()) == {k}
+
+
+def test_flat_io_equals_sum_of_per_layer_reports(make_stack):
+    layers = make_stack(sizes=(128, 256, 192, 128), density=0.4)
+    plan = Engine(backend="jnp").compile(layers)
+    flat = plan.flat
+    assert flat.sim_reads == sum(s.sim_reads for s in plan.schedules)
+    assert flat.sim_writes == sum(s.sim_writes for s in plan.schedules)
+    assert flat.per_layer_io == tuple(
+        (s.sim_reads, s.sim_writes) for s in plan.schedules)
+    # and the plan's IOReport carries exactly these as the layered baseline
+    assert plan.io.layered_reads == flat.sim_reads
+    assert plan.io.layered_writes == flat.sim_writes
+
+
+def test_flat_prefetch_array_contracts(make_stack):
+    layers = make_stack(sizes=(128, 256, 192, 128), density=0.4)
+    plan = Engine(backend="jnp").compile(layers)
+    flat = plan.flat
+    n0 = flat.segments[0][1]
+    hbm_row = np.asarray(flat.hbm_row)
+    rows = np.asarray(flat.rows)
+    cols = np.asarray(flat.cols)
+    lid = np.asarray(flat.layer_id)
+    out_tile = np.asarray(flat.out_tile)
+    # hbm_row live during layer 0, frozen after (no index change, no fetch)
+    np.testing.assert_array_equal(hbm_row[:n0], rows[:n0])
+    assert len(set(hbm_row[n0:].tolist()) | {int(hbm_row[n0 - 1])}) == 1
+    # out_tile pinned to the final layer's first output tile before it
+    fs, fe = flat.segments[-1]
+    np.testing.assert_array_equal(out_tile[fs:fe], cols[fs:fe])
+    assert set(out_tile[:fs].tolist()) <= {int(cols[fs])}
+    # bias_idx points at the right global bias tile
+    offs = np.concatenate([[0], np.cumsum([l.grid_out for l in layers])])
+    np.testing.assert_array_equal(np.asarray(flat.bias_idx),
+                                  offs[lid] + cols)
+    assert flat.bias_tiles.shape == (int(offs[-1]), flat.block)
+
+
+def test_cross_layer_savings_reported(make_stack):
+    layers = make_stack(sizes=(128, 256, 192, 128), density=0.4)
+    io = Engine(backend="jnp").compile(layers).io
+    # whole-net schedule never moves more tiles than per-layer dispatch
+    assert io.simulated.total <= io.layered_total
+    assert io.cross_layer_savings == io.layered_total - io.simulated.total
+    assert io.hidden_tiles_kept == sum(l.grid_out for l in layers[:-1])
+    assert io.hidden_bytes_kept_per_row == \
+        sum(2 * 4 * l.n_out for l in layers[:-1])
+    assert "fused saves" in io.summary()
+
+
+# --------------------------------------------------------------------------- #
+# fallback for nets the flat schedule cannot express
+# --------------------------------------------------------------------------- #
+
+def test_non_uniform_tiles_fall_back_to_layered():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((128, 128)).astype(np.float32) * 0.1
+    b = rng.standard_normal(128).astype(np.float32) * 0.1
+    from repro.sparse import prune_dense_stack
+    (layer,) = prune_dense_stack([w], [b], density=0.5,
+                                 block_m=32, block_n=64)
+    plan = Engine(backend="jnp").compile([layer])
+    assert not plan.fused and plan.flat is None
+    with pytest.raises(ValueError, match="uniform square tile"):
+        compile_flat_schedule(plan.layers, plan.schedules)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    assert _max_err(plan(x), _oracle([layer], x, None)) < 1e-5
