@@ -1,0 +1,218 @@
+"""Serving-runtime benchmark: cold vs warm compile + bucketed vs fixed batching.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--max-batch 32]
+
+Measures the two amortizations the serving subsystem adds on top of the
+engine:
+
+  * **plan persistence** — the same network compiled cold (Theorem-1
+    schedule + Connection Reordering + lowering, then persisted) and warm
+    (content-addressed plan-store hit: rebuilt from the stored connection
+    order with ZERO annealer iterations).  Outputs are checked bit-identical
+    across the two plans;
+  * **bucketed plans** — a mixed-batch-size request trace served through
+    power-of-two buckets (pad only up to the smallest bucket that fits)
+    vs the old fixed-batch policy (every batch padded to ``max_batch``).
+    Per-batch latency p50/p99 for both; small batches dominate real traces,
+    so bucketed p50 must beat fixed p50.
+
+Results are printed AND written to machine-readable ``BENCH_serving.json``
+(committed + uploaded as a CI artifact) so the serving perf trajectory is
+tracked across PRs.  On CPU hosts the latency comparison runs on the ``jnp``
+backend; on TPU pass ``--backend pallas``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.engine import Engine
+from repro.serving import BucketedPlanSet, PlanStore, SparseServer
+from repro.serving.metrics import percentile
+from repro.sparse import prune_dense_stack
+
+
+def make_layers(sizes, density, block, seed=0):
+    rng = np.random.default_rng(seed)
+    ws = [rng.standard_normal((sizes[i], sizes[i + 1])).astype(np.float32) * 0.03
+          for i in range(len(sizes) - 1)]
+    bs = [np.zeros(s, np.float32) for s in sizes[1:]]
+    return prune_dense_stack(ws, bs, density=density,
+                             block_m=block, block_n=block)
+
+
+def make_engine(args):
+    return Engine(backend=args.backend, activation="gelu", reorder=True,
+                  reorder_iters=args.reorder_iters)
+
+
+def mixed_trace(rng, n_batches, max_batch):
+    """Batch sizes of a bursty request trace: mostly small, some full."""
+    sizes = [s for s in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32) if s <= max_batch]
+    probs = np.array([0.22, 0.18, 0.12, 0.12, 0.08, 0.08, 0.06, 0.06,
+                      0.04, 0.04][:len(sizes)])
+    probs = probs / probs.sum()
+    return [int(rng.choice(sizes, p=probs)) for _ in range(n_batches)]
+
+
+def time_trace(run, trace, xs, iters_warm=2):
+    """Per-batch wall latencies of ``run(x_n)`` over the trace sizes."""
+    for n in sorted(set(trace)):
+        for _ in range(iters_warm):
+            run(xs[n])  # trace/warm every shape outside the timed loop
+    lats = []
+    for n in trace:
+        t0 = time.perf_counter()
+        run(xs[n])
+        lats.append(time.perf_counter() - t0)
+    return lats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[768, 1536, 1536, 768])
+    ap.add_argument("--density", type=float, default=0.2)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--batches", type=int, default=60,
+                    help="mixed-size trace length (in batches)")
+    ap.add_argument("--reorder-iters", type=int, default=200)
+    ap.add_argument("--slo-ms", type=float, default=50.0)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "interpret", "jnp"))
+    ap.add_argument("--plan-dir", default=None,
+                    help="plan-store dir (default: fresh temp dir, so the "
+                         "cold/warm comparison is reproducible)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    layers = make_layers(args.sizes, args.density, args.block)
+
+    plan_dir = args.plan_dir or tempfile.mkdtemp(prefix="plan_store_")
+    store = PlanStore(plan_dir)
+    # a reused --plan-dir may already hold this entry; evict it so the cold
+    # measurement is genuinely cold on every run
+    store.evict(make_engine(args), layers)
+
+    # ---- cold start: schedule + CR + lowering, then persisted ---------- #
+    t0 = time.perf_counter()
+    plan_cold, hit = store.get_or_compile(make_engine(args), layers)
+    cold_s = time.perf_counter() - t0
+    assert not hit, "expected a cold start against a fresh plan store"
+    print(f"cold compile:  {cold_s:6.2f}s "
+          f"({plan_cold.annealer_iters} annealer iters)")
+
+    # ---- warm start: content-addressed hit, zero annealing ------------- #
+    t0 = time.perf_counter()
+    plan_warm, hit = store.get_or_compile(make_engine(args), layers)
+    warm_s = time.perf_counter() - t0
+    assert hit, "expected a plan-store hit on the second compile"
+    assert plan_warm.annealer_iters == 0, "warm start must skip annealing"
+    print(f"warm compile:  {warm_s:6.2f}s (plan-store hit, "
+          f"{plan_warm.annealer_iters} annealer iters, "
+          f"{cold_s / max(warm_s, 1e-9):.0f}x faster)")
+
+    x_full = rng.standard_normal(
+        (args.max_batch, args.sizes[0])).astype(np.float32)
+    y_cold = np.asarray(plan_cold(x_full))
+    y_warm = np.asarray(plan_warm(x_full))
+    assert np.array_equal(y_cold, y_warm), \
+        "warm-start outputs must be bit-identical to the cold compile"
+    print("warm outputs bit-identical to cold: OK")
+
+    # ---- bucketed vs fixed-batch latency on a mixed-size trace --------- #
+    plans = BucketedPlanSet.compile(layers, engine=make_engine(args),
+                                    max_batch=args.max_batch,
+                                    plan_store=store)
+    plans.warmup()
+    trace = mixed_trace(rng, args.batches, args.max_batch)
+    xs = {n: rng.standard_normal((n, args.sizes[0])).astype(np.float32)
+          for n in sorted(set(trace))}
+
+    lat_bucketed = time_trace(plans, trace, xs)
+
+    # the old fixed-batch policy: every batch padded up to max_batch
+    def fixed(x):
+        n = x.shape[0]
+        if n < args.max_batch:
+            x = np.concatenate(
+                [x, np.zeros((args.max_batch - n, x.shape[1]), x.dtype)])
+        return np.asarray(plans.plans[args.max_batch](x))[:n]
+
+    lat_fixed = time_trace(fixed, trace, xs)
+
+    b50, b99 = percentile(lat_bucketed, 50), percentile(lat_bucketed, 99)
+    f50, f99 = percentile(lat_fixed, 50), percentile(lat_fixed, 99)
+    print(f"trace: {len(trace)} batches, sizes p50={percentile([float(t) for t in trace], 50):.0f}, "
+          f"mean={np.mean(trace):.1f}, max={max(trace)}")
+    print(f"  bucketed: p50 {1e3*b50:7.2f} ms  p99 {1e3*b99:7.2f} ms")
+    print(f"  fixed:    p50 {1e3*f50:7.2f} ms  p99 {1e3*f99:7.2f} ms "
+          f"(pad to {args.max_batch})")
+    assert b50 < f50, "bucketed p50 must beat fixed-batch p50 on a mixed trace"
+
+    # ---- end-to-end serve loop through the scheduler ------------------- #
+    server = SparseServer(plans, slo_ms=args.slo_ms)
+    for n in trace:
+        for _ in range(n):
+            server.submit(rng.standard_normal(
+                args.sizes[0]).astype(np.float32))
+        server.poll()
+    server.drain()
+    print("serve loop:", server.metrics.summary())
+
+    result = {
+        "net": {
+            "sizes": args.sizes,
+            "density": args.density,
+            "block": args.block,
+            "nnz_blocks": int(sum(l.nnz_blocks for l in layers)),
+        },
+        "backend": plan_cold.backend,
+        "reorder_iters": args.reorder_iters,
+        "compile_s": {
+            "cold": cold_s,
+            "warm": warm_s,
+            "warm_speedup": cold_s / max(warm_s, 1e-9),
+            "warm_annealer_iters": plan_warm.annealer_iters,
+            "bit_identical_outputs": True,
+        },
+        "trace": {
+            "batches": len(trace),
+            "max_batch": args.max_batch,
+            "mean_batch": float(np.mean(trace)),
+            "buckets": list(plans.buckets),
+        },
+        "latency_ms": {
+            "bucketed_p50": 1e3 * b50,
+            "bucketed_p99": 1e3 * b99,
+            "fixed_p50": 1e3 * f50,
+            "fixed_p99": 1e3 * f99,
+            "bucketed_vs_fixed_p50_speedup": f50 / max(b50, 1e-12),
+        },
+        "serve_loop": server.metrics.snapshot(),
+        "env": {
+            "jax": jax.__version__,
+            "jax_backend": jax.default_backend(),
+            "python": platform.python_version(),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    if args.plan_dir is None:
+        shutil.rmtree(plan_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

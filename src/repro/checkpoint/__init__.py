@@ -1,3 +1,17 @@
-from .store import CheckpointManager, load_checkpoint, save_checkpoint
+from .store import (
+    CheckpointManager,
+    load_checkpoint,
+    manifest_exists,
+    read_manifest_dir,
+    save_checkpoint,
+    write_manifest_dir,
+)
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]
+__all__ = [
+    "CheckpointManager",
+    "load_checkpoint",
+    "manifest_exists",
+    "read_manifest_dir",
+    "save_checkpoint",
+    "write_manifest_dir",
+]

@@ -1,15 +1,22 @@
 """Fault-tolerant checkpointing: atomic, async, manifest-verified, reshardable.
 
+The storage primitive is a *manifest directory* — a directory of ``.npy``
+files plus a ``manifest.json`` recording name/shape/dtype/crc per array and
+arbitrary JSON ``extra`` metadata.  Writes go to ``<dir>.tmp`` and are
+atomically renamed after the manifest is fsynced, so a crash mid-write never
+corrupts the latest good artifact.  ``write_manifest_dir`` /
+``read_manifest_dir`` are the reusable layer; both the training checkpoints
+here and the compiled-plan store (``repro.serving.plancache``) sit on top of
+it.
+
 Layout of one checkpoint:
 
     <dir>/step_<N>/
         manifest.json          # tree structure, shapes, dtypes, leaf files, crc
         leaf_00000.npy ...     # one .npy per leaf (host-local full arrays)
 
-Writes go to ``step_<N>.tmp`` and are atomically renamed after the manifest is
-fsynced — a crash mid-write never corrupts the latest good checkpoint.  Saves
-can run on a background thread (``async_save``); ``wait()`` joins the inflight
-write before the next one starts (single-writer discipline).
+Saves can run on a background thread (``async_save``); ``wait()`` joins the
+inflight write before the next one starts (single-writer discipline).
 
 Restore is *elastic*: arrays are loaded as host numpy and re-placed under
 whatever mesh/sharding the caller provides (``target_shardings``), so a
@@ -24,7 +31,7 @@ import os
 import shutil
 import threading
 import zlib
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
 import ml_dtypes
@@ -49,24 +56,36 @@ def _tree_paths(tree):
             for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
 
 
-def save_checkpoint(directory: str, step: int, tree: Any,
-                    extra: Optional[Dict] = None) -> str:
-    """Blocking atomic save.  Returns the final checkpoint path."""
-    leaves, _ = _flatten(tree)
-    paths = _tree_paths(tree)
-    final = os.path.join(directory, f"step_{step:08d}")
+# --------------------------------------------------------------------------- #
+# reusable manifest layer (checkpoints AND the serving plan store use this)
+# --------------------------------------------------------------------------- #
+
+def write_manifest_dir(final: str, arrays: Mapping[str, np.ndarray],
+                       extra: Optional[Dict] = None) -> str:
+    """Atomically write named arrays + JSON metadata as a manifest directory.
+
+    Each array lands as ``<name>.npy`` with its crc32 recorded in
+    ``manifest.json``; the whole directory is staged at ``<final>.tmp`` and
+    renamed into place after the manifest is fsynced, so readers only ever
+    see complete, verified artifacts.  Array names must be filesystem-safe.
+    """
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
-    manifest = {"step": step, "n_leaves": len(leaves), "leaves": [],
-                "extra": extra or {}}
-    for i, (leaf, path) in enumerate(zip(leaves, paths)):
-        arr = np.asarray(jax.device_get(leaf))
-        fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
-        manifest["leaves"].append({
-            "path": path, "file": fname, "shape": list(arr.shape),
+    manifest = {"arrays": [], "extra": extra or {}}
+    for name, value in arrays.items():
+        arr = np.asarray(jax.device_get(value))
+        fname = f"{name}.npy"
+        disk = arr
+        if _EXTENDED_DTYPES.get(str(arr.dtype)) is not None:
+            # store extended dtypes (bf16/f8) as raw void bytes — np.save
+            # would otherwise emit descriptors np.load cannot parse; the
+            # manifest records the logical dtype and load views it back
+            disk = arr.view(f"V{arr.dtype.itemsize}")
+        np.save(os.path.join(tmp, fname), disk)
+        manifest["arrays"].append({
+            "name": name, "file": fname, "shape": list(arr.shape),
             "dtype": str(arr.dtype),
             "crc": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
         })
@@ -81,13 +100,66 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     return final
 
 
+def read_manifest_dir(path: str, verify: bool = True
+                      ) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Load a manifest directory back as ``(arrays, extra)``.
+
+    Extended dtypes (bf16, f8) that numpy round-trips as void records are
+    viewed back to their logical dtype; ``verify`` checks every crc and
+    raises ``IOError`` on corruption.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if "arrays" not in manifest and "leaves" in manifest:
+        # legacy checkpoint manifest (pre-manifest-layer format): same
+        # per-record fields under "leaves", tree metadata at top level
+        manifest = {
+            "arrays": [{**rec, "name": rec["file"][:-len(".npy")]}
+                       for rec in manifest["leaves"]],
+            "extra": {"step": manifest["step"],
+                      "n_leaves": manifest["n_leaves"],
+                      "paths": [rec["path"] for rec in manifest["leaves"]],
+                      "extra": manifest.get("extra", {})},
+        }
+    arrays: Dict[str, np.ndarray] = {}
+    for rec in manifest["arrays"]:
+        arr = np.load(os.path.join(path, rec["file"]))
+        if arr.dtype.kind == "V" and _EXTENDED_DTYPES.get(rec["dtype"]) is not None:
+            arr = arr.view(_EXTENDED_DTYPES[rec["dtype"]])
+        if verify and (zlib.crc32(arr.tobytes()) & 0xFFFFFFFF) != rec["crc"]:
+            raise IOError(f"crc mismatch in {rec['file']} ({rec['name']})")
+        arrays[rec["name"]] = arr
+    return arrays, manifest.get("extra", {})
+
+
+def manifest_exists(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "manifest.json"))
+
+
+# --------------------------------------------------------------------------- #
+# tree checkpoints
+# --------------------------------------------------------------------------- #
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[Dict] = None) -> str:
+    """Blocking atomic save.  Returns the final checkpoint path."""
+    leaves, _ = _flatten(tree)
+    paths = _tree_paths(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    arrays = {f"leaf_{i:05d}": np.asarray(jax.device_get(leaf))
+              for i, leaf in enumerate(leaves)}
+    meta = {"step": step, "n_leaves": len(leaves), "paths": paths,
+            "extra": extra or {}}
+    return write_manifest_dir(final, arrays, meta)
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+            if manifest_exists(os.path.join(directory, name)):
                 steps.append(int(name[5:]))
     return max(steps) if steps else None
 
@@ -101,25 +173,21 @@ def load_checkpoint(directory: str, tree_like: Any, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    arrays, meta = read_manifest_dir(path, verify=verify)
     leaves, treedef = _flatten(tree_like)
-    if manifest["n_leaves"] != len(leaves):
+    if meta["n_leaves"] != len(leaves):
         raise ValueError(
-            f"checkpoint has {manifest['n_leaves']} leaves, expected {len(leaves)}")
+            f"checkpoint has {meta['n_leaves']} leaves, expected {len(leaves)}")
     shard_leaves = (None,) * len(leaves)
     if target_shardings is not None:
         shard_leaves = treedef.flatten_up_to(target_shardings)
     out = []
-    for rec, like, shard in zip(manifest["leaves"], leaves, shard_leaves):
-        arr = np.load(os.path.join(path, rec["file"]))
-        if arr.dtype.kind == "V" and _EXTENDED_DTYPES.get(rec["dtype"]) is not None:
-            arr = arr.view(_EXTENDED_DTYPES[rec["dtype"]])
-        if verify and (zlib.crc32(arr.tobytes()) & 0xFFFFFFFF) != rec["crc"]:
-            raise IOError(f"crc mismatch in {rec['file']} ({rec['path']})")
+    for i, (like, shard, tree_path) in enumerate(
+            zip(leaves, shard_leaves, meta["paths"])):
+        arr = arrays[f"leaf_{i:05d}"]
         if list(arr.shape) != list(like.shape):
             raise ValueError(
-                f"shape mismatch for {rec['path']}: {arr.shape} vs {like.shape}")
+                f"shape mismatch for {tree_path}: {arr.shape} vs {like.shape}")
         if shard is not None:
             out.append(jax.device_put(arr, shard))
         else:

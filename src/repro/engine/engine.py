@@ -21,6 +21,7 @@ the same layers with the same settings returns the same plan object.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -122,6 +123,27 @@ class Engine:
         self._cache[key] = plan
         return plan
 
+    def compile_with_order(
+        self,
+        net: Union[BlockFFNN, Sequence[BSRLayer]],
+        order: np.ndarray,
+        backend: Optional[str] = None,
+        io: Optional[IOReport] = None,
+    ) -> ExecutionPlan:
+        """Lower a network onto a *precomputed* whole-DAG connection order.
+
+        This is the warm-start path of the plan store
+        (``repro.serving.plancache``): the expensive offline steps —
+        Theorem-1 grouping and Connection Reordering — are skipped entirely
+        (``plan.annealer_iters == 0``); only validation, packing, and
+        backend lowering run.  Passing a stored ``io`` report also skips the
+        I/O re-simulation.  The rebuild is deterministic, so the resulting
+        plan is bit-identical to the cold compile the order came from.
+        """
+        bffnn = net if isinstance(net, BlockFFNN) else to_block_ffnn(list(net))
+        backend = resolve_backend(backend or self.backend)
+        return self._build(bffnn, backend, order=np.asarray(order), io=io)
+
     def _plan_key(self, bffnn: BlockFFNN, backend: str) -> Tuple:
         # plans (hence their layers) stay strongly referenced by the cache,
         # so object ids cannot be recycled while a cache entry is alive.
@@ -137,9 +159,15 @@ class Engine:
         )
 
     # ------------------------------------------------------------------ #
-    def _build(self, bffnn: BlockFFNN, backend: str) -> ExecutionPlan:
+    def _build(self, bffnn: BlockFFNN, backend: str,
+               order: Optional[np.ndarray] = None,
+               io: Optional[IOReport] = None) -> ExecutionPlan:
+        t0 = time.perf_counter()
         layers = bffnn.layers
-        order = self.schedule_order(bffnn)
+        annealer_iters = 0
+        if order is None:
+            order = self.schedule_order(bffnn)
+            annealer_iters = self.reorder_iters if self.reorder else 0
         schedules = []
         for k in range(len(layers)):
             perm, _, _, _, _ = schedule_arrays(bffnn, order, k)
@@ -162,6 +190,9 @@ class Engine:
         else:
             forward = make_forward(layers, schedules, activations, backend,
                                    jit=self.jit)
+        if io is None:
+            io = self.io_report(bffnn, order,
+                                schedules if flat is not None else None)
         return ExecutionPlan(
             layers=list(layers),
             schedules=schedules,
@@ -169,10 +200,11 @@ class Engine:
             backend=backend,
             order=order,
             block_ffnn=bffnn,
-            io=self.io_report(bffnn, order,
-                              schedules if flat is not None else None),
+            io=io,
             flat=flat,
             _forward=forward,
+            compile_s=time.perf_counter() - t0,
+            annealer_iters=annealer_iters,
         )
 
     def schedule_order(self, bffnn: BlockFFNN) -> np.ndarray:

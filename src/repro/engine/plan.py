@@ -69,7 +69,14 @@ class IOReport:
 
     @property
     def optimality_ratio(self) -> float:
-        """simulated / lower bound — Theorem 1 guarantees ≤ 2 is achievable."""
+        """simulated / lower bound — Theorem 1 guarantees ≤ 2 is achievable.
+
+        An empty DAG (no connections survive pruning) moves no tiles and has
+        a zero lower bound; it is vacuously optimal, so the ratio is 1.0
+        rather than a 0/0.
+        """
+        if self.simulated.total == 0 and self.bounds.total_lo == 0:
+            return 1.0
         return self.simulated.total / max(1, self.bounds.total_lo)
 
     @property
@@ -94,6 +101,39 @@ class IOReport:
                     f"{self.hidden_bytes_kept_per_row} B/row VMEM-resident)")
         return msg
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form (the plan store persists this alongside the
+        schedule arrays so warm starts skip the I/O re-simulation too)."""
+        return {
+            "simulated": {"reads": int(self.simulated.reads),
+                          "writes": int(self.simulated.writes)},
+            "bounds": {
+                "reads_lo": int(self.bounds.reads_lo),
+                "reads_hi": int(self.bounds.reads_hi),
+                "writes_lo": int(self.bounds.writes_lo),
+                "writes_hi": int(self.bounds.writes_hi),
+            },
+            "M_tiles": int(self.M_tiles),
+            "policy": self.policy,
+            "layered_reads": int(self.layered_reads),
+            "layered_writes": int(self.layered_writes),
+            "hidden_tiles_kept": int(self.hidden_tiles_kept),
+            "hidden_bytes_kept_per_row": int(self.hidden_bytes_kept_per_row),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IOReport":
+        return cls(
+            simulated=IOStats(**d["simulated"]),
+            bounds=Bounds(**d["bounds"]),
+            M_tiles=d["M_tiles"],
+            policy=d["policy"],
+            layered_reads=d.get("layered_reads", 0),
+            layered_writes=d.get("layered_writes", 0),
+            hidden_tiles_kept=d.get("hidden_tiles_kept", 0),
+            hidden_bytes_kept_per_row=d.get("hidden_bytes_kept_per_row", 0),
+        )
+
 
 @dataclasses.dataclass
 class ExecutionPlan:
@@ -109,6 +149,8 @@ class ExecutionPlan:
     flat: Optional[FlatSchedule] = None     # cross-layer schedule (fused)
     _forward: Callable = dataclasses.field(repr=False, default=None)
     calls: int = dataclasses.field(default=0, compare=False)
+    compile_s: float = 0.0                  # wall time of Engine._build
+    annealer_iters: int = 0                 # CR proposals paid for this plan
 
     @property
     def fused(self) -> bool:
@@ -146,4 +188,24 @@ class ExecutionPlan:
         mode = "fused" if self.fused else "layered"
         return (f"ExecutionPlan[{self.backend}/{mode}] {shapes} "
                 f"({len(self.layers)} layers, {nnz} nonzero blocks); "
-                + self.io.summary())
+                + self.io.summary()
+                + f"; compiled in {self.compile_s:.2f}s "
+                  f"({self.annealer_iters} annealer iters), "
+                  f"{self.calls} calls")
+
+    def artifact_arrays(self) -> dict:
+        """The plan's persistable schedule arrays, as host numpy.
+
+        ``order`` (the whole-DAG connection order) is the artifact everything
+        else re-derives from deterministically; the flat-schedule prefetch
+        arrays ride along so a loader can verify the rebuilt schedule matches
+        the stored one bit-for-bit (``repro.serving.plancache``).
+        """
+        out = {"order": np.asarray(self.order, dtype=np.int64)}
+        if self.flat is not None:
+            f = self.flat
+            for name in ("rows", "cols", "first", "last", "layer_id",
+                         "hbm_row", "out_tile", "bias_idx"):
+                out[f"flat_{name}"] = np.asarray(getattr(f, name),
+                                                 dtype=np.int32)
+        return out

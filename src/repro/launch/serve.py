@@ -9,9 +9,10 @@ greedy decoding.  On CPU the reduced configs keep it interactive; the same
 code path serves the full configs on a real mesh.
 
 ``--sparse-ffnn`` serves the paper's workload instead: feature vectors through
-a magnitude-pruned block-sparse FFNN, compiled ONCE by the fused inference
-engine (whole-network Theorem-1 schedule + Connection Reordering) and then
-run-many from the same request-queue loop:
+a magnitude-pruned block-sparse FFNN, routed through the ``repro.serving``
+runtime — one engine compile (or a plan-store hit, which skips annealing
+entirely via ``--plan-store DIR``) fanned out across power-of-two batch
+buckets, with a deadline-aware wait-or-fire scheduler and SLO metrics:
 
     PYTHONPATH=src python -m repro.launch.serve --sparse-ffnn --requests 64
 """
@@ -19,8 +20,8 @@ run-many from the same request-queue loop:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +36,14 @@ from repro.models.sharding import axes_from_mesh
 
 
 def serve_sparse_ffnn(args) -> None:
-    """Serve the paper's sparse-FFNN workload through a compiled engine plan.
+    """Serve the paper's sparse-FFNN workload through the serving runtime.
 
     The offline cost (block DAG, Theorem-1 order, CR, lowering) is paid once
-    in ``Engine.compile``; the request loop only executes the cached plan.
+    in ``Engine.compile`` — or not at all on a warm start from the plan
+    store; the request loop only executes bucketed cached plans.
     """
     from repro.engine import Engine
+    from repro.serving import BucketedPlanSet, PlanStore, SparseServer
     from repro.sparse import prune_dense_stack
 
     rng = np.random.default_rng(0)
@@ -53,31 +56,35 @@ def serve_sparse_ffnn(args) -> None:
     engine = Engine(backend=args.backend, activation="gelu", reorder=True,
                     reorder_iters=args.reorder_iters,
                     fuse=not args.no_fuse)
+    store = PlanStore(args.plan_store) if args.plan_store else None
     t0 = time.time()
-    plan = engine.compile(layers)
-    print(f"engine compile: {time.time()-t0:.1f}s — {plan.describe()}")
+    plans = BucketedPlanSet.compile(layers, engine=engine,
+                                    max_batch=args.batch, plan_store=store)
+    compile_s = time.time() - t0
+    start = "warm (plan-store hit)" if plans.cache_hit else "cold"
+    print(f"engine compile: {compile_s:.1f}s [{start}] — {plans.describe()}")
+    plans.warmup()
 
-    queue = [rng.standard_normal(sizes[0]).astype(np.float32)
-             for _ in range(args.requests)]
-    done = 0
-    lat = []
-    t0 = time.time()
-    while queue:
-        batch = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
-        n = len(batch)
-        # pad the tail batch to the fixed shape so the jitted plan never
-        # retraces mid-serving
-        batch += [batch[-1]] * (args.batch - n)
-        x = jnp.asarray(np.stack(batch))
-        t1 = time.time()
-        y = plan(x)
-        y.block_until_ready()
-        lat.append(time.time() - t1)
-        done += n
-    dt = time.time() - t0
-    print(f"served {done} sparse-FFNN requests in {dt:.2f}s "
-          f"(p50 batch latency {1e3*np.median(lat):.1f} ms, "
-          f"{done/max(dt, 1e-9):.1f} req/s, {plan.calls} plan calls)")
+    server = SparseServer(plans, max_queue=args.max_queue, slo_ms=args.slo_ms)
+    rids = []
+    pending = args.requests
+    # bursty arrivals: submit a random clump, let the wait-or-fire policy
+    # form batches, repeat — so the bucket router sees mixed batch sizes
+    while pending:
+        burst = int(rng.integers(1, args.batch + 1))
+        for _ in range(min(burst, pending)):
+            rid = server.submit(
+                rng.standard_normal(sizes[0]).astype(np.float32))
+            if rid is not None:
+                rids.append(rid)
+            pending -= 1
+            if not pending:
+                break
+        server.poll()
+    server.drain()
+    served = sum(server.result(r) is not None for r in rids)
+    print(f"served {served} sparse-FFNN requests — {server.metrics.summary()}")
+    print(f"bucket calls: { {b: n for b, n in plans.bucket_calls.items() if n} }")
 
 
 def main():
@@ -101,6 +108,14 @@ def main():
                          "whole-network megakernel plan")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "interpret", "jnp"))
+    ap.add_argument("--plan-store", default=None,
+                    help="directory of the persistent plan cache; a warm "
+                         "start skips the annealing cost entirely")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="target end-to-end latency SLO for the sparse "
+                         "serving scheduler")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission bound of the sparse serving queue")
     args = ap.parse_args()
 
     if args.sparse_ffnn:
@@ -117,14 +132,16 @@ def main():
 
     rng = np.random.default_rng(0)
     window = args.prompt_len + args.gen
-    queue = [rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
-             for _ in range(args.requests)]
+    queue = deque(
+        rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
+        for _ in range(args.requests))
     done = []
     t0 = time.time()
     tokens_out = 0
     while queue:
         # fill a batch of slots from the queue (continuous batching)
-        slot_prompts = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
+        slot_prompts = [queue.popleft()
+                        for _ in range(min(args.batch, len(queue)))]
         if not slot_prompts:
             break
         B = len(slot_prompts)

@@ -1,0 +1,35 @@
+"""Continuous-batching serving runtime over compiled execution plans.
+
+The production-shaped half of the paper's compile-once/run-many split:
+
+    from repro.serving import BucketedPlanSet, PlanStore, SparseServer
+
+    store = PlanStore("plans/")                       # persistent plan cache
+    plans = BucketedPlanSet.compile(layers, engine=engine,
+                                    max_batch=32, plan_store=store)
+    server = SparseServer(plans, slo_ms=50.0)
+    rid = server.submit(x)                            # admission + queueing
+    server.poll()                                     # wait-or-fire batches
+    y = server.result(rid)
+    print(server.metrics.summary())
+
+See ``docs/serving.md`` for the bucketing policy, the SLO scheduler, and
+the plan-store layout.
+"""
+
+from .bucketing import BucketedPlanSet, bucket_sizes
+from .metrics import ServingMetrics, percentile
+from .plancache import PlanStore, layers_fingerprint, plan_cache_key
+from .server import Request, SparseServer
+
+__all__ = [
+    "BucketedPlanSet",
+    "PlanStore",
+    "Request",
+    "ServingMetrics",
+    "SparseServer",
+    "bucket_sizes",
+    "layers_fingerprint",
+    "percentile",
+    "plan_cache_key",
+]

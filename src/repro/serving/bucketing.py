@@ -1,0 +1,155 @@
+"""Bucketed execution plans: variable batch sizes without retraces.
+
+A jitted plan traces one program per input shape, so a naive serving loop
+either pays a retrace for every distinct batch size that arrives or pads
+every batch up to one fixed shape (the old ``launch/serve.py`` behavior —
+a 1-row tail batch paid full-bucket latency).  ``BucketedPlanSet`` is the
+middle ground the paper's amortization story wants:
+
+  * the offline cost — block DAG, Theorem-1 order, Connection Reordering,
+    schedule packing — is paid ONCE, by a single ``Engine.compile`` (or a
+    plan-store hit, which skips even the annealing);
+  * each power-of-two batch bucket gets its own jitted forward over the
+    *same* schedule arrays, so a batch of n rows routes to the smallest
+    bucket >= n, pads only up to that bucket, and never retraces once the
+    bucket is warm.
+
+Buckets share ``layers``/``schedules``/``flat``/``io`` with the base plan by
+reference — the only thing compiled per bucket is the jitted dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.blocksparse import BlockFFNN, BSRLayer
+from repro.engine import (
+    Engine,
+    ExecutionPlan,
+    make_forward,
+    make_fused_forward,
+)
+
+
+def bucket_sizes(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to ``max_batch``, plus ``max_batch`` itself when it
+    is not a power of two (so the largest batch the server forms still has a
+    bucket that fits it exactly)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    sizes = []
+    b = 1
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
+def _rebuild_forward(plan: ExecutionPlan, jit: bool = True):
+    """A fresh jitted forward over the plan's existing schedule arrays."""
+    if plan.flat is not None:
+        return make_fused_forward(plan.layers, plan.flat, plan.activations,
+                                  plan.backend, jit=jit)
+    return make_forward(plan.layers, plan.schedules, plan.activations,
+                        plan.backend, jit=jit)
+
+
+@dataclasses.dataclass
+class BucketedPlanSet:
+    """One compiled schedule, one jitted forward per batch bucket."""
+
+    base: ExecutionPlan
+    buckets: Tuple[int, ...]
+    plans: Dict[int, ExecutionPlan]
+    cache_hit: bool = False           # True when the base plan came warm
+    bucket_calls: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def compile(
+        cls,
+        net: Union[BlockFFNN, Sequence[BSRLayer]],
+        engine: Optional[Engine] = None,
+        max_batch: int = 32,
+        plan_store=None,
+        backend: Optional[str] = None,
+    ) -> "BucketedPlanSet":
+        """Compile the schedule once, then fan it out across batch buckets.
+
+        ``plan_store`` (a :class:`repro.serving.plancache.PlanStore`) makes
+        the single expensive compile a content-addressed lookup: a hit
+        rebuilds the plan from the stored connection order with zero
+        annealer iterations.
+        """
+        engine = engine or Engine()
+        if plan_store is not None:
+            base, hit = plan_store.get_or_compile(engine, net, backend)
+        else:
+            base, hit = engine.compile(net, backend), False
+        sizes = bucket_sizes(max_batch)
+        plans = {
+            b: dataclasses.replace(
+                base, _forward=_rebuild_forward(base, jit=engine.jit),
+                calls=0)
+            for b in sizes
+        }
+        return cls(base=base, buckets=sizes, plans=plans, cache_hit=hit,
+                   bucket_calls={b: 0 for b in sizes})
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    @property
+    def n_in(self) -> int:
+        return self.base.n_in
+
+    @property
+    def n_out(self) -> int:
+        return self.base.n_out
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket that fits ``n`` rows (the largest one if none)."""
+        if n < 1:
+            raise ValueError(f"batch size must be >= 1, got {n}")
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.max_batch
+
+    def warmup(self, dtype=np.float32) -> "BucketedPlanSet":
+        """Trace every bucket ahead of traffic (one zero batch each), so no
+        request ever pays jit time.  Warmup calls are not counted."""
+        for b in self.buckets:
+            y = self.plans[b](np.zeros((b, self.n_in), dtype))
+            np.asarray(y)  # block until the trace + run completes
+            self.plans[b].calls = 0
+        return self
+
+    def __call__(self, x) -> np.ndarray:
+        """Run a batch of any size.  ``x`` is ``[n, n_in]``; batches larger
+        than the top bucket are served in top-bucket chunks."""
+        x = np.asarray(x)
+        if x.ndim != 2 or x.shape[1] != self.n_in:
+            raise ValueError(
+                f"expected input [n, {self.n_in}], got {tuple(x.shape)}")
+        n = x.shape[0]
+        if n > self.max_batch:
+            parts = [self(x[i:i + self.max_batch])
+                     for i in range(0, n, self.max_batch)]
+            return np.concatenate(parts)
+        b = self.bucket_for(n)
+        if n < b:
+            x = np.concatenate(
+                [x, np.zeros((b - n, x.shape[1]), x.dtype)])
+        self.bucket_calls[b] += 1
+        y = self.plans[b](x)
+        return np.asarray(y)[:n]
+
+    def describe(self) -> str:
+        src = "plan-store hit" if self.cache_hit else "cold compile"
+        return (f"BucketedPlanSet buckets={list(self.buckets)} ({src}); "
+                + self.base.describe())

@@ -1,0 +1,110 @@
+"""Serving metrics: per-request latency, queue depth, throughput, SLO hits.
+
+Everything is recorded against the server's injected clock, so tests drive
+time deterministically and production uses ``time.monotonic``.  ``snapshot``
+returns a plain JSON-serializable dict — the same shape
+``benchmarks/bench_serving.py`` writes into ``BENCH_serving.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 for an empty series."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    k = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[k]
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Counters + series for one server lifetime."""
+
+    admitted: int = 0
+    rejected: int = 0
+    served: int = 0
+    batches: int = 0
+    padded_rows: int = 0
+    batched_rows: int = 0
+    deadline_misses: int = 0
+    latency_s: List[float] = dataclasses.field(default_factory=list)
+    queue_wait_s: List[float] = dataclasses.field(default_factory=list)
+    exec_s: List[float] = dataclasses.field(default_factory=list)
+    queue_depth: List[int] = dataclasses.field(default_factory=list)
+    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+
+    # ------------------------------------------------------------------ #
+    def record_submit(self, now: float, depth: int, admitted: bool) -> None:
+        if self.t_first is None:
+            self.t_first = now
+        if admitted:
+            self.admitted += 1
+        else:
+            self.rejected += 1
+        self.queue_depth.append(depth)
+
+    def record_batch(self, now: float, n: int, bucket: int, exec_s: float,
+                     waits_s: List[float], misses: int) -> None:
+        self.batches += 1
+        self.served += n
+        self.batch_sizes.append(n)
+        self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
+        self.padded_rows += bucket - n
+        self.batched_rows += bucket
+        self.exec_s.append(exec_s)
+        self.deadline_misses += misses
+        for w in waits_s:
+            self.queue_wait_s.append(w)
+            self.latency_s.append(w + exec_s)
+        self.t_last = now
+
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        span = 0.0
+        if self.t_first is not None and self.t_last is not None:
+            span = max(0.0, self.t_last - self.t_first)
+        return {
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "served": self.served,
+            "batches": self.batches,
+            "deadline_misses": self.deadline_misses,
+            "throughput_rps": self.served / span if span > 0 else 0.0,
+            "latency_ms": {
+                "p50": 1e3 * percentile(self.latency_s, 50),
+                "p99": 1e3 * percentile(self.latency_s, 99),
+            },
+            "queue_wait_ms": {
+                "p50": 1e3 * percentile(self.queue_wait_s, 50),
+                "p99": 1e3 * percentile(self.queue_wait_s, 99),
+            },
+            "exec_ms": {
+                "p50": 1e3 * percentile(self.exec_s, 50),
+                "p99": 1e3 * percentile(self.exec_s, 99),
+            },
+            "mean_batch_size": (sum(self.batch_sizes) / self.batches
+                                if self.batches else 0.0),
+            "max_queue_depth": max(self.queue_depth, default=0),
+            "padding_fraction": (self.padded_rows / self.batched_rows
+                                 if self.batched_rows else 0.0),
+            "bucket_hist": {str(k): v
+                            for k, v in sorted(self.bucket_hist.items())},
+        }
+
+    def summary(self) -> str:
+        s = self.snapshot()
+        return (f"served {s['served']} ({s['rejected']} rejected, "
+                f"{s['deadline_misses']} deadline misses) in {s['batches']} "
+                f"batches (mean {s['mean_batch_size']:.1f} rows, "
+                f"{100 * s['padding_fraction']:.0f}% padding); "
+                f"latency p50 {s['latency_ms']['p50']:.1f} ms / "
+                f"p99 {s['latency_ms']['p99']:.1f} ms, "
+                f"{s['throughput_rps']:.1f} req/s")

@@ -1,0 +1,203 @@
+"""Persistent, content-addressed store for compiled execution plans.
+
+The paper's amortization argument says the offline cost — Theorem-1
+scheduling plus Connection Reordering — is paid once and served from
+forever.  Without persistence "once" really means "once per process":
+every server restart re-annealed the same network.  ``PlanStore`` closes
+that gap:
+
+  * the cache key is a sha256 over the *content* of the network (each
+    layer's block pattern, weights, bias, tile shape) plus every engine
+    setting that affects the schedule arrays (``reorder``, ``M_tiles``,
+    ``reorder_iters``, ``seed``, ``policy``, ``fuse``) and the artifact
+    format version — object identity never matters, so any process that
+    builds the same pruned network hits the same entry;
+  * the stored artifact is the whole-DAG connection ``order`` (everything
+    else re-derives from it deterministically), the flat-schedule prefetch
+    arrays (used to verify the rebuild bit-for-bit), and the plan's
+    ``IOReport`` — written through ``repro.checkpoint``'s atomic manifest
+    machinery, so a crash mid-write never corrupts an entry;
+  * a hit calls ``Engine.compile_with_order``: zero annealer iterations,
+    no I/O re-simulation, outputs bit-identical to the cold compile the
+    order came from.  A stored entry whose arrays no longer match the
+    rebuild (schedule-packing code drift) is discarded as a miss, so stale
+    caches self-heal.
+
+Backend and activation are deliberately NOT part of the key: the connection
+order is backend-independent (all backends walk the same arrays) and the
+activation only changes the epilogue, not the schedule — one annealed entry
+serves every backend.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.checkpoint.store import (
+    manifest_exists,
+    read_manifest_dir,
+    write_manifest_dir,
+)
+from repro.core.blocksparse import BlockFFNN, BSRLayer
+from repro.engine import Engine, ExecutionPlan, IOReport
+
+FORMAT_VERSION = 1
+
+
+def _layers_of(net: Union[BlockFFNN, Sequence[BSRLayer]]):
+    return net.layers if isinstance(net, BlockFFNN) else list(net)
+
+
+def layers_fingerprint(net: Union[BlockFFNN, Sequence[BSRLayer]]) -> str:
+    """sha256 over every layer's structure AND weights.
+
+    The schedule only depends on the block *pattern*, but keying on weights
+    too means a repruned or retrained network can never silently serve a
+    stale schedule-with-matching-shape.
+    """
+    h = hashlib.sha256()
+    for lay in _layers_of(net):
+        h.update(json.dumps([lay.n_in, lay.n_out, lay.block_m, lay.block_n,
+                             lay.nnz_blocks]).encode())
+        h.update(np.ascontiguousarray(lay.rows, dtype=np.int32).tobytes())
+        h.update(np.ascontiguousarray(lay.cols, dtype=np.int32).tobytes())
+        h.update(np.ascontiguousarray(lay.blocks).tobytes())
+        h.update(np.ascontiguousarray(lay.bias).tobytes())
+    return h.hexdigest()
+
+
+def plan_cache_key(engine: Engine,
+                   net: Union[BlockFFNN, Sequence[BSRLayer]]) -> str:
+    """Content-addressed key: layer hash + schedule-affecting settings."""
+    settings = {
+        "format": FORMAT_VERSION,
+        "layers": layers_fingerprint(net),
+        "reorder": bool(engine.reorder),
+        "M_tiles": int(engine.M_tiles),
+        "reorder_iters": int(engine.reorder_iters),
+        "seed": int(engine.seed),
+        "policy": engine.policy,
+        "fuse": bool(engine.fuse),
+    }
+    return hashlib.sha256(
+        json.dumps(settings, sort_keys=True).encode()).hexdigest()
+
+
+class PlanStore:
+    """Directory of plan artifacts keyed by :func:`plan_cache_key`."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def path_for(self, key: str) -> str:
+        return os.path.join(self.root, f"plan_{key}")
+
+    def contains(self, engine: Engine,
+                 net: Union[BlockFFNN, Sequence[BSRLayer]]) -> bool:
+        return manifest_exists(self.path_for(plan_cache_key(engine, net)))
+
+    def evict(self, engine: Engine,
+              net: Union[BlockFFNN, Sequence[BSRLayer]]) -> bool:
+        """Remove the entry for this (engine, net), if any.  Returns True
+        when something was removed (used e.g. by the benchmark to force a
+        genuinely cold start against a reused store directory)."""
+        path = self.path_for(plan_cache_key(engine, net))
+        if os.path.isdir(path):
+            import shutil
+            shutil.rmtree(path, ignore_errors=True)
+            return True
+        return False
+
+    def keys(self):
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(n[len("plan_"):] for n in os.listdir(self.root)
+                      if n.startswith("plan_")
+                      and manifest_exists(os.path.join(self.root, n)))
+
+    # ------------------------------------------------------------------ #
+    def put(self, engine: Engine, plan: ExecutionPlan) -> str:
+        """Persist a compiled plan's schedule artifact (atomic)."""
+        key = plan_cache_key(engine, plan.block_ffnn)
+        extra = {
+            "format": FORMAT_VERSION,
+            "key": key,
+            "n_layers": len(plan.layers),
+            "fused": plan.fused,
+            "io": plan.io.to_dict(),
+            "compile_s": plan.compile_s,
+            "annealer_iters": plan.annealer_iters,
+        }
+        return write_manifest_dir(self.path_for(key), plan.artifact_arrays(),
+                                  extra)
+
+    def load(
+        self,
+        engine: Engine,
+        net: Union[BlockFFNN, Sequence[BSRLayer]],
+        backend: Optional[str] = None,
+        verify: bool = True,
+    ) -> Optional[ExecutionPlan]:
+        """Rebuild a plan from a stored artifact, or None on miss.
+
+        ``verify`` additionally checks that the flat-schedule arrays
+        rebuilt from the stored order are bit-identical to the stored
+        ones; a mismatch (artifact written by incompatible packing code)
+        is treated as a miss.
+        """
+        key = plan_cache_key(engine, net)
+        path = self.path_for(key)
+        if not manifest_exists(path):
+            return None
+        try:
+            arrays, extra = read_manifest_dir(path)
+            if extra.get("format") != FORMAT_VERSION:
+                return None
+            io = IOReport.from_dict(extra["io"])
+        except (OSError, KeyError, ValueError):
+            # corrupt/unreadable entry (crc mismatch, mangled manifest):
+            # a miss recompiles and overwrites it — self-healing, not fatal
+            return None
+        plan = engine.compile_with_order(net, arrays["order"], backend, io=io)
+        if verify and not self._matches(plan, arrays):
+            return None
+        return plan
+
+    @staticmethod
+    def _matches(plan: ExecutionPlan, arrays: dict) -> bool:
+        stored_fused = any(k.startswith("flat_") for k in arrays)
+        if plan.fused != stored_fused:
+            return False
+        if plan.flat is None:
+            return True
+        for name in ("rows", "cols", "first", "last", "layer_id",
+                     "hbm_row", "out_tile", "bias_idx"):
+            if not np.array_equal(np.asarray(getattr(plan.flat, name)),
+                                  arrays[f"flat_{name}"]):
+                return False
+        return True
+
+    def get_or_compile(
+        self,
+        engine: Engine,
+        net: Union[BlockFFNN, Sequence[BSRLayer]],
+        backend: Optional[str] = None,
+    ) -> Tuple[ExecutionPlan, bool]:
+        """Warm-start compile: ``(plan, hit)``.
+
+        Hit: rebuilt from the stored order, zero annealer iterations.
+        Miss: full ``Engine.compile`` (schedule + CR), then persisted so
+        the next process is warm.
+        """
+        plan = self.load(engine, net, backend)
+        if plan is not None:
+            return plan, True
+        plan = engine.compile(net, backend)
+        self.put(engine, plan)
+        return plan, False

@@ -1,0 +1,181 @@
+"""Continuous-batching request scheduler over bucketed execution plans.
+
+``SparseServer`` is the serving half of the paper's amortization story: the
+compiled plan substrate (``BucketedPlanSet``) already paid the offline
+schedule cost, so the server's only job is batch formation under a latency
+SLO:
+
+  * **admission** — a bounded ``collections.deque``; submits beyond
+    ``max_queue`` are rejected immediately (backpressure instead of
+    unbounded latency);
+  * **wait-or-fire** — a batch fires when it is full (``max_batch`` rows),
+    when the oldest request has waited ``max_wait_s`` (don't trade the
+    whole SLO for batching efficiency), or when the oldest request's
+    deadline minus the EWMA batch latency says firing any later would miss
+    it;
+  * **bucket routing** — a fired batch of n rows runs through the smallest
+    plan bucket >= n, so tail batches stop paying full-bucket latency.
+
+The clock is injected (default ``time.monotonic``): tests drive virtual
+time deterministically through the same code path production runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .bucketing import BucketedPlanSet
+from .metrics import ServingMetrics
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    x: np.ndarray                 # [n_in] feature vector
+    t_submit: float
+    deadline: Optional[float]     # absolute clock time, or None
+
+
+class SparseServer:
+    """Request queue + scheduler serving a :class:`BucketedPlanSet`.
+
+    Args:
+      plans: the compiled bucketed plan set to serve.
+      max_batch: rows per fired batch (default: the top plan bucket).
+      max_queue: admission bound; ``submit`` returns None beyond it.
+      slo_ms: target end-to-end latency.  Requests submitted without an
+        explicit deadline get ``t_submit + slo_ms``.
+      max_wait_ms: wait-or-fire threshold for the oldest queued request
+        (default ``slo_ms / 4`` — batching may spend at most a quarter of
+        the SLO budget on waiting).
+      clock: monotonic time source; injectable for deterministic tests.
+    """
+
+    def __init__(
+        self,
+        plans: BucketedPlanSet,
+        max_batch: Optional[int] = None,
+        max_queue: int = 1024,
+        slo_ms: float = 50.0,
+        max_wait_ms: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.plans = plans
+        self.max_batch = max_batch or plans.max_batch
+        if self.max_batch > plans.max_batch:
+            raise ValueError(
+                f"max_batch {self.max_batch} exceeds top plan bucket "
+                f"{plans.max_batch}")
+        self.max_queue = max_queue
+        self.slo_s = slo_ms / 1e3
+        self.max_wait_s = (max_wait_ms / 1e3 if max_wait_ms is not None
+                           else self.slo_s / 4.0)
+        self.clock = clock
+        self.metrics = ServingMetrics()
+        self._queue: deque = deque()
+        self._results: Dict[int, np.ndarray] = {}
+        self._rid = itertools.count()
+        self._lat_ewma: Optional[float] = None
+
+    # ------------------------------------------------------------------ #
+    # admission
+    # ------------------------------------------------------------------ #
+    def submit(self, x, deadline_ms: Optional[float] = None) -> Optional[int]:
+        """Enqueue one request.  Returns its id, or None when the queue is
+        full (admission control — the caller sheds load instead of queueing
+        unboundedly past the SLO)."""
+        now = self.clock()
+        if len(self._queue) >= self.max_queue:
+            self.metrics.record_submit(now, len(self._queue), admitted=False)
+            return None
+        rid = next(self._rid)
+        deadline = now + (deadline_ms / 1e3 if deadline_ms is not None
+                          else self.slo_s)
+        self._queue.append(Request(rid=rid, x=np.asarray(x),
+                                   t_submit=now, deadline=deadline))
+        self.metrics.record_submit(now, len(self._queue), admitted=True)
+        return rid
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def result(self, rid: int) -> Optional[np.ndarray]:
+        """Pop a finished request's output (None while still queued)."""
+        return self._results.pop(rid, None)
+
+    # ------------------------------------------------------------------ #
+    # scheduling
+    # ------------------------------------------------------------------ #
+    def _estimated_batch_s(self) -> float:
+        return self._lat_ewma if self._lat_ewma is not None else 0.0
+
+    def should_fire(self, now: Optional[float] = None) -> bool:
+        """Wait-or-fire policy for the current queue state."""
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.max_batch:
+            return True
+        now = self.clock() if now is None else now
+        head = self._queue[0]
+        if now - head.t_submit >= self.max_wait_s:
+            return True
+        if head.deadline is not None and \
+                head.deadline - now <= self._estimated_batch_s():
+            return True   # waiting any longer guarantees an SLO miss
+        return False
+
+    def step(self, flush: bool = False) -> int:
+        """Fire at most one batch if the policy (or ``flush``) says so.
+        Returns the number of requests served."""
+        if not self._queue:
+            return 0
+        if not flush and not self.should_fire():
+            return 0
+        reqs: List[Request] = [
+            self._queue.popleft()
+            for _ in range(min(self.max_batch, len(self._queue)))
+        ]
+        return self._run_batch(reqs)
+
+    def poll(self) -> int:
+        """Fire as many batches as the policy allows right now."""
+        served = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return served
+            served += n
+
+    def drain(self) -> int:
+        """Serve everything queued, ignoring the wait policy (shutdown /
+        end-of-trace flush)."""
+        served = 0
+        while self._queue:
+            served += self.step(flush=True)
+        return served
+
+    # ------------------------------------------------------------------ #
+    def _run_batch(self, reqs: List[Request]) -> int:
+        n = len(reqs)
+        bucket = self.plans.bucket_for(n)
+        x = np.stack([r.x for r in reqs])
+        t0 = self.clock()
+        y = self.plans(x)
+        t1 = self.clock()
+        exec_s = t1 - t0
+        self._lat_ewma = (exec_s if self._lat_ewma is None
+                          else 0.5 * self._lat_ewma + 0.5 * exec_s)
+        waits = [t0 - r.t_submit for r in reqs]
+        misses = sum(1 for r in reqs
+                     if r.deadline is not None and t1 > r.deadline)
+        for r, row in zip(reqs, y):
+            self._results[r.rid] = row
+        self.metrics.record_batch(t1, n, bucket, exec_s, waits, misses)
+        return n

@@ -1,0 +1,216 @@
+"""Serving runtime: bucketed plans, the SLO scheduler, and metrics.
+
+The bucket router must be output-transparent (same results as the base
+plan, any batch size), and the scheduler must be deterministic under an
+injected clock — every wait-or-fire rule is driven through virtual time.
+"""
+
+import numpy as np
+import pytest
+
+from repro.engine import Engine
+from repro.serving import (
+    BucketedPlanSet,
+    ServingMetrics,
+    SparseServer,
+    bucket_sizes,
+    percentile,
+)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture
+def plans(make_stack):
+    return BucketedPlanSet.compile(
+        make_stack(), engine=Engine(backend="jnp"), max_batch=8)
+
+
+# --------------------------------------------------------------------------- #
+# bucketing
+# --------------------------------------------------------------------------- #
+
+def test_bucket_sizes_powers_of_two():
+    assert bucket_sizes(1) == (1,)
+    assert bucket_sizes(8) == (1, 2, 4, 8)
+    # non-power-of-two max still gets an exact top bucket
+    assert bucket_sizes(24) == (1, 2, 4, 8, 16, 24)
+    with pytest.raises(ValueError):
+        bucket_sizes(0)
+
+
+def test_bucket_for_routes_to_smallest_fit(plans):
+    assert [plans.bucket_for(n) for n in (1, 2, 3, 4, 5, 8)] == \
+        [1, 2, 4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        plans.bucket_for(0)
+
+
+def test_bucketed_outputs_match_base_plan(plans, make_stack):
+    """Routing through any bucket is output-transparent, odd sizes included."""
+    rng = np.random.default_rng(1)
+    n_in = plans.n_in
+    full = rng.standard_normal((8, n_in)).astype(np.float32)
+    y_base = np.asarray(plans.base(full))
+    for n in (1, 2, 3, 5, 7, 8):
+        y = plans(full[:n])
+        assert y.shape == (n, plans.n_out)
+        np.testing.assert_array_equal(y, y_base[:n])
+
+
+def test_bucketed_chunks_oversized_batches(plans):
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((19, plans.n_in)).astype(np.float32)
+    y = plans(x)
+    assert y.shape == (19, plans.n_out)
+    np.testing.assert_array_equal(y[:8], plans(x[:8]))
+    np.testing.assert_array_equal(y[16:], plans(x[16:19]))
+
+
+def test_buckets_share_schedule_and_count_calls(plans):
+    """One schedule substrate; only the jitted forward differs per bucket."""
+    for b in plans.buckets:
+        p = plans.plans[b]
+        assert p.schedules is plans.base.schedules
+        assert p.flat is plans.base.flat
+        assert p.io is plans.base.io
+        assert p.order is plans.base.order
+    plans.warmup()
+    assert all(plans.plans[b].calls == 0 for b in plans.buckets)
+    rng = np.random.default_rng(3)
+    plans(rng.standard_normal((3, plans.n_in)).astype(np.float32))
+    plans(rng.standard_normal((4, plans.n_in)).astype(np.float32))
+    plans(rng.standard_normal((1, plans.n_in)).astype(np.float32))
+    assert plans.bucket_calls[4] == 2 and plans.bucket_calls[1] == 1
+    assert plans.plans[4].calls == 2
+
+
+def test_bucketed_rejects_bad_input(plans):
+    with pytest.raises(ValueError):
+        plans(np.zeros((2, plans.n_in + 1), np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# scheduler
+# --------------------------------------------------------------------------- #
+
+def test_server_results_match_direct_plan(plans):
+    rng = np.random.default_rng(4)
+    xs = [rng.standard_normal(plans.n_in).astype(np.float32)
+          for _ in range(11)]
+    server = SparseServer(plans, slo_ms=100.0)
+    rids = [server.submit(x) for x in xs]
+    server.poll()
+    server.drain()
+    expected = plans(np.stack(xs))
+    for rid, want in zip(rids, expected):
+        np.testing.assert_array_equal(server.result(rid), want)
+    assert server.metrics.served == 11
+    assert server.queue_depth == 0
+
+
+def test_admission_control_rejects_when_full(plans):
+    clock = FakeClock()
+    server = SparseServer(plans, max_queue=2, clock=clock)
+    assert server.submit(np.zeros(plans.n_in, np.float32)) is not None
+    assert server.submit(np.zeros(plans.n_in, np.float32)) is not None
+    assert server.submit(np.zeros(plans.n_in, np.float32)) is None
+    assert server.metrics.rejected == 1
+    assert server.metrics.admitted == 2
+
+
+def test_fire_on_full_batch(plans):
+    clock = FakeClock()
+    server = SparseServer(plans, max_batch=4, slo_ms=1e6, clock=clock)
+    for _ in range(3):
+        server.submit(np.zeros(plans.n_in, np.float32))
+    assert not server.should_fire()    # not full, nobody waited long enough
+    server.submit(np.zeros(plans.n_in, np.float32))
+    assert server.should_fire()        # full batch fires immediately
+    assert server.step() == 4
+    assert server.metrics.bucket_hist == {4: 1}
+
+
+def test_fire_on_max_wait(plans):
+    clock = FakeClock()
+    server = SparseServer(plans, max_batch=8, slo_ms=100.0,
+                          max_wait_ms=10.0, clock=clock)
+    server.submit(np.zeros(plans.n_in, np.float32))
+    assert server.step() == 0          # wait: batching might still grow it
+    clock.advance(0.011)               # oldest has now waited past max_wait
+    assert server.should_fire()
+    assert server.step() == 1
+    # the 1-row tail batch went through the 1-bucket, not the full one
+    assert server.metrics.bucket_hist == {1: 1}
+
+
+def test_fire_before_deadline_breach(plans):
+    """Deadline-aware: fire once waiting longer would miss the SLO given
+    the observed batch latency."""
+    clock = FakeClock()
+    server = SparseServer(plans, max_batch=8, slo_ms=1000.0,
+                          max_wait_ms=1000.0, clock=clock)
+    server._lat_ewma = 0.010           # as if batches take 10 ms
+    server.submit(np.zeros(plans.n_in, np.float32), deadline_ms=15.0)
+    assert not server.should_fire()    # 15 ms budget > 10 ms estimate: wait
+    clock.advance(0.006)
+    assert server.should_fire()        # 9 ms left <= 10 ms estimate: fire
+    assert server.step() == 1
+
+
+def test_deadline_miss_is_counted(plans):
+    clock = FakeClock()
+    server = SparseServer(plans, clock=clock)
+    server.submit(np.zeros(plans.n_in, np.float32), deadline_ms=5.0)
+    clock.advance(1.0)                 # way past the deadline
+    server.drain()
+    assert server.metrics.deadline_misses == 1
+    assert server.metrics.served == 1
+
+
+def test_drain_serves_everything(plans):
+    clock = FakeClock()
+    server = SparseServer(plans, max_batch=8, slo_ms=1e6, max_wait_ms=1e6,
+                          clock=clock)
+    rids = [server.submit(np.zeros(plans.n_in, np.float32))
+            for _ in range(13)]
+    assert server.poll() == 8          # one full batch fires, 5 wait
+    assert server.drain() == 5
+    assert all(server.result(r) is not None for r in rids)
+
+
+# --------------------------------------------------------------------------- #
+# metrics
+# --------------------------------------------------------------------------- #
+
+def test_percentile_nearest_rank():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 50) == 3.0
+    assert percentile(xs, 100) == 5.0
+    assert percentile([], 50) == 0.0
+
+
+def test_metrics_snapshot_shape():
+    m = ServingMetrics()
+    m.record_submit(0.0, 1, admitted=True)
+    m.record_submit(0.0, 2, admitted=True)
+    m.record_batch(1.0, n=2, bucket=4, exec_s=0.5, waits_s=[0.1, 0.2],
+                   misses=1)
+    s = m.snapshot()
+    assert s["served"] == 2 and s["batches"] == 1
+    assert s["deadline_misses"] == 1
+    assert s["padding_fraction"] == pytest.approx(0.5)
+    assert s["latency_ms"]["p50"] <= s["latency_ms"]["p99"]
+    assert s["bucket_hist"] == {"4": 1}
+    assert s["throughput_rps"] == pytest.approx(2.0)
+    assert "p50" in m.summary() or "latency" in m.summary()
