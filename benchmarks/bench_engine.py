@@ -209,6 +209,10 @@ def main():
             "jax": jax.__version__,
             "jax_backend": jax.default_backend(),
             "python": platform.python_version(),
+            # device count + mesh shape make the perf trajectory comparable
+            # across environments (single vs forced-multi-device hosts)
+            "devices": jax.device_count(),
+            "mesh": {"model": 1, "data": 1},
         },
     }
     with open(args.out, "w") as f:

@@ -34,7 +34,7 @@ import time
 import jax
 import numpy as np
 
-from repro.engine import Engine
+from repro.engine import Engine, Mesh
 from repro.serving import BucketedPlanSet, PlanStore, SparseServer
 from repro.serving.metrics import percentile
 from repro.sparse import prune_dense_stack
@@ -92,8 +92,13 @@ def main():
     ap.add_argument("--plan-dir", default=None,
                     help="plan-store dir (default: fresh temp dir, so the "
                          "cold/warm comparison is reproducible)")
+    ap.add_argument("--mesh", default=None, metavar="MODELxDATA",
+                    help="benchmark through a sharded execution plan "
+                         "(e.g. 4x2); default unsharded")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
+
+    mesh = Mesh.parse(args.mesh) if args.mesh else None
 
     rng = np.random.default_rng(0)
     layers = make_layers(args.sizes, args.density, args.block)
@@ -102,11 +107,12 @@ def main():
     store = PlanStore(plan_dir)
     # a reused --plan-dir may already hold this entry; evict it so the cold
     # measurement is genuinely cold on every run
-    store.evict(make_engine(args), layers)
+    store.evict(make_engine(args), layers, mesh=mesh)
 
     # ---- cold start: schedule + CR + lowering, then persisted ---------- #
     t0 = time.perf_counter()
-    plan_cold, hit = store.get_or_compile(make_engine(args), layers)
+    plan_cold, hit = store.get_or_compile(make_engine(args), layers,
+                                          mesh=mesh)
     cold_s = time.perf_counter() - t0
     assert not hit, "expected a cold start against a fresh plan store"
     print(f"cold compile:  {cold_s:6.2f}s "
@@ -114,7 +120,8 @@ def main():
 
     # ---- warm start: content-addressed hit, zero annealing ------------- #
     t0 = time.perf_counter()
-    plan_warm, hit = store.get_or_compile(make_engine(args), layers)
+    plan_warm, hit = store.get_or_compile(make_engine(args), layers,
+                                          mesh=mesh)
     warm_s = time.perf_counter() - t0
     assert hit, "expected a plan-store hit on the second compile"
     assert plan_warm.annealer_iters == 0, "warm start must skip annealing"
@@ -133,7 +140,7 @@ def main():
     # ---- bucketed vs fixed-batch latency on a mixed-size trace --------- #
     plans = BucketedPlanSet.compile(layers, engine=make_engine(args),
                                     max_batch=args.max_batch,
-                                    plan_store=store)
+                                    plan_store=store, mesh=mesh)
     plans.warmup()
     trace = mixed_trace(rng, args.batches, args.max_batch)
     xs = {n: rng.standard_normal((n, args.sizes[0])).astype(np.float32)
@@ -204,6 +211,11 @@ def main():
             "jax": jax.__version__,
             "jax_backend": jax.default_backend(),
             "python": platform.python_version(),
+            # device count + mesh shape make the perf trajectory comparable
+            # across environments (single vs forced-multi-device hosts)
+            "devices": jax.device_count(),
+            "mesh": {"model": mesh.model if mesh else 1,
+                     "data": mesh.data if mesh else 1},
         },
     }
     with open(args.out, "w") as f:

@@ -14,7 +14,13 @@ module so the rest of the tree imports one stable surface:
                               thread-resources physical mesh (empty when no
                               mesh is active; callers check ``.empty``);
   * ``tpu_compiler_params`` — ``pltpu.CompilerParams`` (new) /
-                              ``pltpu.TPUCompilerParams`` (old).
+                              ``pltpu.TPUCompilerParams`` (old);
+  * ``shard_map``           — ``jax.shard_map`` (new, ``check_vma``) or
+                              ``jax.experimental.shard_map.shard_map`` (old,
+                              ``check_rep``) behind one keyword surface;
+  * ``host_mesh``           — device-count-validated mesh construction used
+                              by both the legacy launch meshes and the
+                              engine's sharded execution plans.
 """
 
 from __future__ import annotations
@@ -127,6 +133,48 @@ def named_shardings(mesh, spec_tree):
         conv, spec_tree,
         is_leaf=lambda x: x is None or isinstance(x, PartitionSpec),
     )
+
+
+def host_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """Build a mesh over the host's devices, with a readable size check.
+
+    One construction path for every mesh in the tree — the legacy launch
+    meshes (``launch/mesh.py``) and the engine's sharded execution plans
+    (``engine/sharding.py``) — so device-count errors surface the same way
+    everywhere instead of as backend-specific assembly failures.
+    """
+    need = 1
+    for s in axis_shapes:
+        need *= int(s)
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(axis_names, axis_shapes))} needs {need} devices "
+            f"but the host has {have}; on CPU force more with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+        )
+    return make_mesh(tuple(int(s) for s in axis_shapes), tuple(axis_names),
+                     axis_types=(AxisType.Auto,) * len(tuple(axis_names)))
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` across the entry-point move and the kwarg rename.
+
+    New JAX exposes ``jax.shard_map`` with ``check_vma``; old JAX has
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.  ``check``
+    maps onto whichever spelling the install understands (callers here
+    always use explicit collectives, so the default is off).
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn  # type: ignore
+    for kw in ({"check_vma": check}, {"check_rep": check}, {}):
+        try:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+        except TypeError:
+            continue
+    raise RuntimeError("no usable shard_map entry point in this JAX install")
 
 
 def tpu_compiler_params(**kwargs):

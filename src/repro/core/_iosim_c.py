@@ -233,9 +233,13 @@ int resume_min_segment(const int64_t *trace_seg, const int64_t *nxt_seg,
 }
 
 /* One windowed CR move (paper IV.A), in place on order[].
-   dir: 0 = left, 1 = right.  Window = positions [i, min(i+w, W-1)]. */
+   dir: 0 = left, 1 = right.  Window = positions [i, min(i+w, W-1)].
+   span > 0 caps how far any connection may travel: the anchor scan stops
+   after span steps and inserts there.  Stopping the scan early is always
+   topologically safe — the move crossed only conflict-free connections. */
 void propose_move(int64_t *order, int64_t W, const int32_t *src,
-                  const int32_t *dst, int64_t i, int64_t w, int dir)
+                  const int32_t *dst, int64_t i, int64_t w, int dir,
+                  int64_t span)
 {
     int64_t j = i + w; if (j > W - 1) j = W - 1;
     if (dir == 0) {
@@ -243,7 +247,7 @@ void propose_move(int64_t *order, int64_t W, const int32_t *src,
             int64_t e = order[k];
             int32_t a = src[e];
             int64_t p = k - 1;
-            while (p >= 0) {
+            while (p >= 0 && (span <= 0 || k - p <= span)) {
                 int64_t f = order[p];
                 if (src[f] == a || dst[f] == a) break;
                 p--;
@@ -258,7 +262,7 @@ void propose_move(int64_t *order, int64_t W, const int32_t *src,
             int64_t e = order[k];
             int32_t b = dst[e];
             int64_t p = k + 1;
-            while (p < W) {
+            while (p < W && (span <= 0 || p - k <= span)) {
                 int64_t f = order[p];
                 if (dst[f] == b || src[f] == b) break;
                 p++;
@@ -312,7 +316,8 @@ def _build() -> Optional[ctypes.CDLL]:
                              u8p, ctypes.c_int, i64p]
     lib.propose_move.restype = None
     lib.propose_move.argtypes = [i64p, ctypes.c_int64, i32p, i32p,
-                                 ctypes.c_int64, ctypes.c_int64, ctypes.c_int]
+                                 ctypes.c_int64, ctypes.c_int64, ctypes.c_int,
+                                 ctypes.c_int64]
     lib.resume_min_segment.restype = ctypes.c_int
     lib.resume_min_segment.argtypes = [
         i64p, i64p, ctypes.c_int64, ctypes.c_int64, ctypes.c_int64, u8p,
@@ -380,8 +385,11 @@ def resume_min_segment_c(trace_seg: np.ndarray, nxt_seg: np.ndarray,
 
 
 def propose_move_c(order: np.ndarray, src: np.ndarray, dst: np.ndarray,
-                   i: int, w: int, direction: int) -> bool:
-    """In-place windowed move on ``order`` (int64).  Returns False if unavailable."""
+                   i: int, w: int, direction: int,
+                   max_move_span: int = 0) -> bool:
+    """In-place windowed move on ``order`` (int64).  Returns False if
+    unavailable.  ``max_move_span`` > 0 caps the travel distance of each
+    moved connection (0 = the paper's unbounded scan)."""
     if not available():
         return False
     assert order.dtype == np.int64 and order.flags.c_contiguous
@@ -391,6 +399,6 @@ def propose_move_c(order: np.ndarray, src: np.ndarray, dst: np.ndarray,
         order.ctypes.data_as(i64p), len(order),
         np.ascontiguousarray(src, np.int32).ctypes.data_as(i32p),
         np.ascontiguousarray(dst, np.int32).ctypes.data_as(i32p),
-        i, w, direction,
+        i, w, direction, max_move_span,
     )
     return True

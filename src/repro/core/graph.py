@@ -222,6 +222,45 @@ def drop_isolated(net: FFNN) -> FFNN:
     )
 
 
+def partition_columns_balanced(loads: Sequence[int], parts: int) -> np.ndarray:
+    """Assign columns to ``parts`` equal-count groups, balancing total load.
+
+    The sharded engine partitions each layer's block-columns (output tiles)
+    across the ``model`` axis of a device mesh.  ``shard_map`` needs every
+    shard to hold the *same number* of columns (uniform per-device shapes),
+    but throughput is governed by the heaviest shard's *load* (SparseNN:
+    load balance across partitions, not total traffic, bounds end-to-end
+    speed) — so within the equal-count constraint we balance the summed
+    per-column loads (nnz blocks) with greedy LPT: columns in decreasing
+    load order, each to the least-loaded shard that still has capacity.
+
+    Returns ``assign`` (int64 [n_cols]) with values in [0, parts).
+    Deterministic: ties break on column id, then shard id.  Raises unless
+    ``n_cols`` is divisible by ``parts``.
+    """
+    loads = np.asarray(loads, dtype=np.int64)
+    n = len(loads)
+    if parts < 1:
+        raise ValueError(f"parts must be >= 1, got {parts}")
+    if n % parts:
+        raise ValueError(
+            f"cannot split {n} block-columns into {parts} equal shards; "
+            "column count must be divisible by the model-axis size"
+        )
+    cap = n // parts
+    assign = np.empty(n, dtype=np.int64)
+    shard_load = np.zeros(parts, dtype=np.int64)
+    shard_fill = np.zeros(parts, dtype=np.int64)
+    # decreasing load, increasing column id on ties (stable sort of -loads)
+    for c in np.argsort(-loads, kind="stable"):
+        open_ = np.flatnonzero(shard_fill < cap)
+        s = open_[np.argmin(shard_load[open_])]
+        assign[c] = s
+        shard_load[s] += loads[c]
+        shard_fill[s] += 1
+    return assign
+
+
 # ------------------------------------------------------------------------------
 # Constructors
 # ------------------------------------------------------------------------------

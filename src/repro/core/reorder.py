@@ -46,6 +46,7 @@ def propose(
     dst,
     ws: int,
     rng: np.random.Generator,
+    max_move_span: int = 0,
 ) -> List[int]:
     """One windowed left/right move; returns a new order (input not mutated).
 
@@ -56,11 +57,19 @@ def propose(
     i = int(rng.integers(0, W))
     w = int(rng.integers(0, max(1, ws)))
     direction = 0 if rng.random() < 0.5 else 1
-    return _apply_move(list(order), src, dst, i, w, direction)
+    return _apply_move(list(order), src, dst, i, w, direction, max_move_span)
 
 
-def _apply_move(new: List[int], src, dst, i: int, w: int, direction: int) -> List[int]:
-    """Apply the windowed move in place on list ``new`` and return it."""
+def _apply_move(new: List[int], src, dst, i: int, w: int, direction: int,
+                span: int = 0) -> List[int]:
+    """Apply the windowed move in place on list ``new`` and return it.
+
+    ``span`` > 0 caps how far any connection travels: the anchor scan stops
+    after ``span`` positions and inserts there.  Cutting the scan short is
+    always topologically safe — the shortened move crosses only connections
+    already checked conflict-free (the full move's validity argument applies
+    to every prefix of the scan).
+    """
     W = len(new)
     j = min(i + w, W - 1)
     if direction == 0:
@@ -72,7 +81,8 @@ def _apply_move(new: List[int], src, dst, i: int, w: int, direction: int) -> Lis
             e = new[pos]
             a = src[e]
             p = pos - 1
-            while p >= 0:
+            lo = -1 if span <= 0 else max(-1, pos - span - 1)
+            while p > lo:
                 f = new[p]
                 if src[f] == a or dst[f] == a:
                     break
@@ -88,7 +98,8 @@ def _apply_move(new: List[int], src, dst, i: int, w: int, direction: int) -> Lis
             e = new[pos]
             b = dst[e]
             p = pos + 1
-            while p < W:
+            hi = W if span <= 0 else min(W, pos + span + 1)
+            while p < hi:
                 f = new[p]
                 if dst[f] == b or src[f] == b:
                     break
@@ -111,6 +122,7 @@ def connection_reordering(
     seed: int = 0,
     callback: Optional[Callable[[int, int, int], None]] = None,
     incremental: Optional[bool] = None,
+    max_move_span: Optional[int] = None,
 ) -> ReorderResult:
     """Run Connection Reordering for ``T`` iterations.
 
@@ -124,11 +136,23 @@ def connection_reordering(
     for the same seed.  Default (None): on for the MIN policy, off for
     LRU/RR (whose recency state does not admit the cheap convergence
     splice).  Forcing ``incremental=True`` with a non-MIN policy raises.
+
+    ``max_move_span`` (None/0 = the paper's unbounded scan) caps how far a
+    proposal may carry any connection.  The paper's moves travel to the
+    nearest dependency, which on 10k+-block DAGs makes the changed window —
+    and hence the cost of even the *incremental* delta evaluation —
+    arbitrarily large; a cap keeps every proposal's changed window (and its
+    re-simulated suffix) O(ws + span).  Capped moves remain topologically
+    valid (any prefix of the anchor scan is), so the result stays inside
+    the Theorem-1 family after regrouping.
     """
     from . import _iosim_c
 
     if incremental is None:
         incremental = policy.lower() == "min"
+    span = int(max_move_span or 0)
+    if span < 0:
+        raise ValueError(f"max_move_span must be >= 0, got {span}")
     rng = np.random.default_rng(seed)
     if ws is None:
         avg_in = net.W / max(1, net.N - net.I)
@@ -159,10 +183,11 @@ def connection_reordering(
         direction = 0 if rng.random() < 0.5 else 1
         if use_c:
             cand = cur.copy()
-            _iosim_c.propose_move_c(cand, src32, dst32, i, w, direction)
+            _iosim_c.propose_move_c(cand, src32, dst32, i, w, direction, span)
         else:
             cand = np.array(
-                _apply_move(cur.tolist(), src_l, dst_l, i, w, direction),
+                _apply_move(cur.tolist(), src_l, dst_l, i, w, direction,
+                            span),
                 dtype=np.int64,
             )
         ios = inc_sim.propose(cand) if inc_sim is not None \

@@ -1,21 +1,32 @@
 """Fused multi-layer sparse inference engine (compile once, run many).
 
-    from repro.engine import Engine
+    from repro.engine import Engine, Mesh
 
     plan = Engine(reorder=True).compile(layers)
     y = plan(x)
     print(plan.describe())
+
+    sharded = Engine().compile(layers, mesh=Mesh(model=4, data=2))
+    y = sharded(x)                      # same function, partitioned
+    print(sharded.io_report().summary())
 """
 
 from .backends import (
     BACKENDS,
     make_forward,
     make_fused_forward,
+    make_sharded_forward,
     pad_batch,
     resolve_backend,
 )
 from .engine import ACTIVATIONS, Engine
 from .plan import ExecutionPlan, IOReport
+from .sharding import (
+    Mesh,
+    ShardedExecutionPlan,
+    ShardedIOReport,
+    partition_model,
+)
 
 __all__ = [
     "ACTIVATIONS",
@@ -23,8 +34,13 @@ __all__ = [
     "Engine",
     "ExecutionPlan",
     "IOReport",
+    "Mesh",
+    "ShardedExecutionPlan",
+    "ShardedIOReport",
     "make_forward",
     "make_fused_forward",
+    "make_sharded_forward",
     "pad_batch",
+    "partition_model",
     "resolve_backend",
 ]

@@ -29,11 +29,14 @@ the result is sliced back — odd batch sizes work on every backend.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.compat import shard_map as compat_shard_map
 from repro.core.blocksparse import BSRLayer
 from repro.kernels.bsr_matmul import bsr_matmul, bsr_megakernel
 from repro.kernels.ops import CompiledSchedule, FlatSchedule
@@ -103,7 +106,16 @@ def _jnp_segment(
     grid_in: int,
     grid_out: int,
     activation: Optional[Callable],
+    pad_segments: int = 0,
 ) -> jnp.ndarray:
+    """One schedule segment as gather → block matmul → segment-sum.
+
+    ``pad_segments`` > 0 reserves that many trailing sink segments: schedule
+    steps with ``cols >= grid_out`` land there and are dropped before the
+    bias/activation epilogue.  The sharded forward pads every shard's
+    schedule to a uniform length with steps routed to the sink, so padding
+    never perturbs a real output tile (not even by adding 0.0).
+    """
     B = x.shape[0]
     xt = x.reshape(B, grid_in, bm).transpose(1, 0, 2)          # [gi, B, bm]
     gathered = jnp.take(xt, rows, axis=0)                      # [nnz, B, bm]
@@ -113,7 +125,9 @@ def _jnp_segment(
         blocks.astype(jnp.float32),
     )                                                          # [nnz, B, bn]
     y = jax.ops.segment_sum(contrib, cols,
-                            num_segments=grid_out)             # [go, B, bn]
+                            num_segments=grid_out + pad_segments)
+    if pad_segments:
+        y = y[:grid_out]                                       # [go, B, bn]
     y = y.transpose(1, 0, 2).reshape(B, grid_out * bn)
     y = y + bias.astype(jnp.float32)
     if activation is not None:
@@ -246,3 +260,123 @@ def make_fused_forward(
         return y[:B]
 
     return jax.jit(forward) if jit else forward
+
+
+# --------------------------------------------------------------------------- #
+# sharded dispatch: per-shard segments + an activation gather per boundary
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class ShardedSegment:
+    """One layer's schedule arrays stacked over the model-axis shards.
+
+    Every shard's schedule is padded to a uniform step count (``shard_map``
+    needs equal per-device shapes); padded steps carry zero blocks and route
+    to the sink segment (``cols == tps``), so they touch no real output tile.
+    ``perm[t]`` maps the layer's canonical output tile ``t`` to its flat
+    ``shard * tps + local_pos`` position in the all-gathered activation.
+    """
+
+    rows: np.ndarray          # int32 [model, n_max] input tile (full grid)
+    cols: np.ndarray          # int32 [model, n_max] local output tile or sink
+    blocks: np.ndarray        # float32 [model, n_max, bm, bn]
+    bias: np.ndarray          # float32 [model, tps * bn]
+    perm: np.ndarray          # int32 [grid_out_full]
+    grid_in: int              # full input grid of this layer
+    tps: int                  # output tiles per shard
+    block_m: int              # input-tile size
+    block_n: int              # output-tile size
+    activation: Optional[Callable]
+
+
+def _shard_layer(h, seg: ShardedSegment, rows, cols, blocks, bias):
+    """One shard's slice of one layer over the full gathered activation."""
+    return _jnp_segment(h, rows, cols, blocks, bias, seg.block_m, seg.block_n,
+                        seg.grid_in, seg.tps, seg.activation, pad_segments=1)
+
+
+def _reassemble(gathered, seg: ShardedSegment):
+    """[model, B, tps*bn] shard outputs -> [B, full] canonical tile order."""
+    m, B, _ = gathered.shape
+    tiles = gathered.reshape(m, B, seg.tps, seg.block_n).transpose(0, 2, 1, 3)
+    tiles = tiles.reshape(m * seg.tps, B, seg.block_n)
+    tiles = jnp.take(tiles, jnp.asarray(seg.perm), axis=0)
+    return tiles.transpose(1, 0, 2).reshape(B, -1)
+
+
+def make_sharded_forward(
+    segments: Sequence[ShardedSegment],
+    model: int,
+    data: int,
+    jax_mesh=None,
+    base_forward: Optional[Callable] = None,
+    jit: bool = True,
+) -> Callable:
+    """Collective forward over a model×data mesh: x [B, n_in] -> [B, n_out].
+
+    Per layer, each model shard computes its owned output tiles from the
+    full (gathered) previous activation, then an all-gather + tile
+    permutation reassembles the full hidden state for the next layer.  The
+    batch dim is split over ``data`` (``B`` must be divisible by it — the
+    plan wrapper pads).
+
+    Lowering: through :func:`repro.compat.shard_map` when ``jax_mesh`` is
+    given (one device per mesh slot), else a sequential jnp loop over the
+    shard index on this host — the same segment arithmetic, so the two
+    lowerings agree bitwise.  A 1-shard model axis does not re-derive
+    anything: the per-device body is ``base_forward`` — the very forward the
+    unsharded plan builders produced — which is what makes the single-device
+    path the 1×1-mesh special case rather than a parallel code path.
+    """
+    if model == 1 and base_forward is None:
+        raise ValueError("model=1 requires the base (unsharded) forward")
+
+    if model == 1:
+        if jax_mesh is None:
+            return jax.jit(base_forward) if jit else base_forward
+        from jax.sharding import PartitionSpec as P
+
+        fn = compat_shard_map(base_forward, jax_mesh,
+                              in_specs=P("data", None),
+                              out_specs=P("data", None))
+        return jax.jit(fn) if jit else fn
+
+    segments = list(segments)
+    arrs = []
+    for seg in segments:
+        arrs.extend([jnp.asarray(seg.rows), jnp.asarray(seg.cols),
+                     jnp.asarray(seg.blocks), jnp.asarray(seg.bias)])
+
+    if jax_mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        def device_fn(x, *flat):
+            h = x
+            for k, seg in enumerate(segments):
+                rows, cols, blocks, bias = flat[4 * k:4 * k + 4]
+                y = _shard_layer(h, seg, rows[0], cols[0], blocks[0], bias[0])
+                g = jax.lax.all_gather(y, "model")
+                h = _reassemble(g, seg)
+            return h
+
+        fn = compat_shard_map(
+            device_fn, jax_mesh,
+            in_specs=(P("data", None),) + (P("model"),) * len(arrs),
+            out_specs=P("data", None),
+        )
+
+        def forward(x):
+            return fn(x, *arrs)
+
+        return jax.jit(forward) if jit else forward
+
+    def forward_loop(x):
+        h = x
+        for k, seg in enumerate(segments):
+            rows, cols, blocks, bias = arrs[4 * k:4 * k + 4]
+            ys = [_shard_layer(h, seg, rows[s], cols[s], blocks[s], bias[s])
+                  for s in range(model)]
+            h = _reassemble(jnp.stack(ys), seg)
+        return h
+
+    return jax.jit(forward_loop) if jit else forward_loop

@@ -43,6 +43,7 @@ from repro.models.common import ACTIVATIONS as _MODEL_ACTIVATIONS
 
 from .backends import make_forward, make_fused_forward, resolve_backend
 from .plan import ExecutionPlan, IOReport
+from .sharding import Mesh, ShardedExecutionPlan, build_sharded_plan
 
 # name -> activation callable (None = identity / linear output); extends the
 # shared model registry rather than duplicating it.
@@ -84,6 +85,11 @@ class Engine:
       M_tiles: VMEM budget (in tiles) used as the CR objective and for the
         plan's I/O report; 3 matches the kernel's single-resident-tile model.
       reorder_iters / seed: annealing budget and RNG seed.
+      max_move_span: cap on how far an annealer proposal may carry any
+        connection (None = the paper's unbounded nearest-dependency scan).
+        On 10k+-block DAGs a cap keeps the incremental delta evaluator's
+        changed window small; schedule-affecting, so it is part of the plan
+        cache key.
       policy: eviction policy for the simulated I/O report.
       fuse: lower the whole net into ONE flat cross-layer dispatch (the
         Pallas megakernel on pallas/interpret; one segment pass on jnp) with
@@ -100,26 +106,40 @@ class Engine:
     M_tiles: int = 3
     reorder_iters: int = 2000
     seed: int = 0
+    max_move_span: Optional[int] = None
     policy: str = "min"
     fuse: bool = True
     jit: bool = True
-    _cache: Dict[Tuple, ExecutionPlan] = dataclasses.field(
-        default_factory=dict, repr=False)
+    _cache: Dict[Tuple, Union[ExecutionPlan, ShardedExecutionPlan]] = \
+        dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------ #
     def compile(
         self,
         net: Union[BlockFFNN, Sequence[BSRLayer]],
         backend: Optional[str] = None,
-    ) -> ExecutionPlan:
-        """Lower a whole network into one cached :class:`ExecutionPlan`."""
+        mesh: Optional[Mesh] = None,
+    ) -> Union[ExecutionPlan, ShardedExecutionPlan]:
+        """Lower a whole network into one cached plan.
+
+        Without ``mesh`` this is the single-device path: one whole-network
+        :class:`ExecutionPlan`.  With ``mesh=Mesh(model, data)`` the block
+        DAG is partitioned tile-parallel over ``model`` and the batch over
+        ``data`` into a :class:`ShardedExecutionPlan` — each shard's
+        schedule is built by the same ``_build`` the unsharded path uses
+        (Theorem-1 order + independent Connection Reordering per shard),
+        and ``Mesh(1, 1)`` shares the unsharded plan's forward outright.
+        """
         bffnn = net if isinstance(net, BlockFFNN) else to_block_ffnn(list(net))
         backend = resolve_backend(backend or self.backend)
-        key = self._plan_key(bffnn, backend)
+        key = self._plan_key(bffnn, backend) + self._mesh_key(mesh)
         plan = self._cache.get(key)
         if plan is not None:
             return plan
-        plan = self._build(bffnn, backend)
+        if mesh is None:
+            plan = self._build(bffnn, backend)
+        else:
+            plan = build_sharded_plan(self, bffnn, backend, mesh)
         self._cache[key] = plan
         return plan
 
@@ -144,6 +164,28 @@ class Engine:
         backend = resolve_backend(backend or self.backend)
         return self._build(bffnn, backend, order=np.asarray(order), io=io)
 
+    def compile_sharded_with_orders(
+        self,
+        net: Union[BlockFFNN, Sequence[BSRLayer]],
+        mesh: Mesh,
+        orders: Sequence[np.ndarray],
+        backend: Optional[str] = None,
+        ios: Optional[Sequence[IOReport]] = None,
+    ) -> ShardedExecutionPlan:
+        """Sharded analogue of :meth:`compile_with_order`: rebuild a
+        sharded plan from one *stored* per-shard connection order each —
+        zero annealer iterations, deterministic, bit-identical to the cold
+        compile the orders came from (the plan store's warm path)."""
+        bffnn = net if isinstance(net, BlockFFNN) else to_block_ffnn(list(net))
+        backend = resolve_backend(backend or self.backend)
+        return build_sharded_plan(self, bffnn, backend, mesh,
+                                  orders=list(orders), ios=ios)
+
+    @staticmethod
+    def _mesh_key(mesh: Optional[Mesh]) -> Tuple:
+        return ("mesh", None) if mesh is None \
+            else ("mesh", mesh.model, mesh.data)
+
     def _plan_key(self, bffnn: BlockFFNN, backend: str) -> Tuple:
         # plans (hence their layers) stay strongly referenced by the cache,
         # so object ids cannot be recycled while a cache entry is alive.
@@ -155,7 +197,7 @@ class Engine:
         return (
             tuple(id(l) for l in bffnn.layers), backend, act, fact,
             self.reorder, self.M_tiles, self.reorder_iters, self.seed,
-            self.policy, self.fuse, self.jit,
+            self.max_move_span, self.policy, self.fuse, self.jit,
         )
 
     # ------------------------------------------------------------------ #
@@ -215,6 +257,7 @@ class Engine:
             res = connection_reordering(
                 bffnn.net, order, M=self.M_tiles, policy=self.policy,
                 T=self.reorder_iters, seed=self.seed,
+                max_move_span=self.max_move_span,
             )
             order = regroup_by_output(bffnn.net, res.order)
         return order

@@ -181,6 +181,24 @@ class ExecutionPlan:
         self.calls += 1
         return y[0] if single else y
 
+    def with_fresh_forward(self, jit: bool = True) -> "ExecutionPlan":
+        """A copy of this plan with a newly lowered forward (call count 0).
+
+        The schedule substrate — layers, schedules, flat arrays, order, I/O
+        report — is shared by reference; only the jitted dispatch is rebuilt.
+        This is how ``repro.serving.bucketing`` fans one compiled schedule
+        out across batch buckets without ever re-deriving it.
+        """
+        from .backends import make_forward, make_fused_forward
+
+        if self.flat is not None:
+            fwd = make_fused_forward(self.layers, self.flat, self.activations,
+                                     self.backend, jit=jit)
+        else:
+            fwd = make_forward(self.layers, self.schedules, self.activations,
+                               self.backend, jit=jit)
+        return dataclasses.replace(self, _forward=fwd, calls=0)
+
     def describe(self) -> str:
         shapes = " -> ".join(
             [str(self.n_in)] + [str(l.n_out) for l in self.layers])

@@ -2,26 +2,27 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device state
 (the dry-run must set XLA_FLAGS before any jax initialization).  All mesh
-construction goes through ``repro.compat`` so the same code runs on JAX
-versions with and without ``jax.sharding.AxisType`` / ``axis_types``.
+construction goes through ``repro.compat.host_mesh`` — the same shim the
+engine's sharded execution plans build on — so the same code runs on JAX
+versions with and without ``jax.sharding.AxisType`` / ``axis_types`` and
+device-count errors read identically everywhere.
 """
 
 from __future__ import annotations
 
-from repro.compat import AxisType, make_mesh
+from repro.compat import host_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return host_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (uses however many host devices exist)."""
-    return make_mesh((data, model), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+    return host_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

@@ -17,6 +17,8 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.models.sharding import div_or_none
+
 from .mesh import dp_axes, dp_size, tp_size
 
 
@@ -33,10 +35,9 @@ def _in_layers(path) -> bool:
 
 
 def _div(mesh, axis: Optional[str], n: int) -> Optional[str]:
-    if axis is None:
-        return None
-    size = mesh.shape.get(axis, 1) if hasattr(mesh.shape, "get") else mesh.shape[axis]
-    return axis if (n % size == 0 and n >= size) else None
+    # one divisibility rule for the whole tree: the shared helper in
+    # repro.models.sharding (argument order flipped for the rule table)
+    return div_or_none(n, axis, mesh)
 
 
 def param_spec(mesh, path, shape) -> P:

@@ -42,7 +42,7 @@ def serve_sparse_ffnn(args) -> None:
     in ``Engine.compile`` — or not at all on a warm start from the plan
     store; the request loop only executes bucketed cached plans.
     """
-    from repro.engine import Engine
+    from repro.engine import Engine, Mesh
     from repro.serving import BucketedPlanSet, PlanStore, SparseServer
     from repro.sparse import prune_dense_stack
 
@@ -56,10 +56,12 @@ def serve_sparse_ffnn(args) -> None:
     engine = Engine(backend=args.backend, activation="gelu", reorder=True,
                     reorder_iters=args.reorder_iters,
                     fuse=not args.no_fuse)
+    mesh = Mesh.parse(args.mesh) if args.mesh else None
     store = PlanStore(args.plan_store) if args.plan_store else None
     t0 = time.time()
     plans = BucketedPlanSet.compile(layers, engine=engine,
-                                    max_batch=args.batch, plan_store=store)
+                                    max_batch=args.batch, plan_store=store,
+                                    mesh=mesh)
     compile_s = time.time() - t0
     start = "warm (plan-store hit)" if plans.cache_hit else "cold"
     print(f"engine compile: {compile_s:.1f}s [{start}] — {plans.describe()}")
@@ -106,6 +108,11 @@ def main():
     ap.add_argument("--no-fuse", action="store_true",
                     help="serve with per-layer dispatch instead of the fused "
                          "whole-network megakernel plan")
+    ap.add_argument("--mesh", default=None, metavar="MODELxDATA",
+                    help="serve through a sharded execution plan, e.g. 4x2 "
+                         "= 4 model shards x 2 data replicas (sparse-ffnn "
+                         "only; falls back to a host loop when the machine "
+                         "has fewer devices than mesh slots)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "interpret", "jnp"))
     ap.add_argument("--plan-store", default=None,

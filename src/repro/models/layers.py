@@ -41,7 +41,7 @@ def row_parallel_matmul(h: jnp.ndarray, w: jnp.ndarray, cfg: ModelConfig):
     collective traffic on the codeqwen train_4k cell (EXPERIMENTS.md §Perf)."""
     if not cfg.bf16_reduce or tp() is None:
         return jnp.einsum("bsn,nd->bsd", h, w)
-    from jax.experimental.shard_map import shard_map
+    from repro.compat import shard_map
 
     mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or tp() not in mesh.axis_names:
@@ -56,7 +56,7 @@ def row_parallel_matmul(h: jnp.ndarray, w: jnp.ndarray, cfg: ModelConfig):
 
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(dp_spec, None, tp_axis), P(tp_axis, None)),
-                   out_specs=P(dp_spec, None, None), check_rep=False)
+                   out_specs=P(dp_spec, None, None))
 
     # custom VJP: the backward needs NO collective — dy is replicated over tp,
     # so dh = dy @ w^T is tp-sharded locally and dw = h^T dy is shard-local.
@@ -446,7 +446,7 @@ def moe_a2a(params: Dict, x: jnp.ndarray, cfg: ModelConfig, mesh):
     the sequence cannot be sharded; dispatch is then replicated over
     ``model`` (identical results per rank, negligible at one token).
     """
-    from jax.experimental.shard_map import shard_map
+    from repro.compat import shard_map
 
     tp_axis = tp()
     dp_spec = dp()
@@ -505,7 +505,6 @@ def moe_a2a(params: Dict, x: jnp.ndarray, cfg: ModelConfig, mesh):
         local_fn, mesh=mesh,
         in_specs=in_specs,
         out_specs=(P(dp_spec, seq_axis, None), P()),
-        check_rep=False,
     )
     y, aux = fn(x, params["router"], params["up"], gate, params["down"], None)
     y = shard(y, dp(), None, None)   # re-gather the sequence for the next block

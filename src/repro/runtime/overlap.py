@@ -46,13 +46,12 @@ def _ring_body(x_loc, w_loc, axis_name: str):
 def ring_ag_matmul(x, w, mesh, dp_spec, tp_axis: str = "model"):
     """y[B, S, F] = x[B, S, D] @ w[D, F] with x sequence-sharded over tp and
     w column-sharded; output column-sharded [B, S, F/tp]."""
-    from jax.experimental.shard_map import shard_map
+    from repro.compat import shard_map
 
     fn = shard_map(
         functools.partial(_ring_body, axis_name=tp_axis),
         mesh=mesh,
         in_specs=(P(dp_spec, tp_axis, None), P(None, tp_axis)),
         out_specs=P(dp_spec, None, tp_axis),
-        check_rep=False,
     )
     return fn(x, w)

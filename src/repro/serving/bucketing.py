@@ -26,12 +26,9 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.blocksparse import BlockFFNN, BSRLayer
-from repro.engine import (
-    Engine,
-    ExecutionPlan,
-    make_forward,
-    make_fused_forward,
-)
+from repro.engine import Engine, ExecutionPlan, Mesh, ShardedExecutionPlan
+
+AnyPlan = Union[ExecutionPlan, ShardedExecutionPlan]
 
 
 def bucket_sizes(max_batch: int) -> Tuple[int, ...]:
@@ -49,22 +46,13 @@ def bucket_sizes(max_batch: int) -> Tuple[int, ...]:
     return tuple(sizes)
 
 
-def _rebuild_forward(plan: ExecutionPlan, jit: bool = True):
-    """A fresh jitted forward over the plan's existing schedule arrays."""
-    if plan.flat is not None:
-        return make_fused_forward(plan.layers, plan.flat, plan.activations,
-                                  plan.backend, jit=jit)
-    return make_forward(plan.layers, plan.schedules, plan.activations,
-                        plan.backend, jit=jit)
-
-
 @dataclasses.dataclass
 class BucketedPlanSet:
     """One compiled schedule, one jitted forward per batch bucket."""
 
-    base: ExecutionPlan
+    base: AnyPlan
     buckets: Tuple[int, ...]
-    plans: Dict[int, ExecutionPlan]
+    plans: Dict[int, AnyPlan]
     cache_hit: bool = False           # True when the base plan came warm
     bucket_calls: Dict[int, int] = dataclasses.field(default_factory=dict)
 
@@ -76,6 +64,7 @@ class BucketedPlanSet:
         max_batch: int = 32,
         plan_store=None,
         backend: Optional[str] = None,
+        mesh: Optional[Mesh] = None,
     ) -> "BucketedPlanSet":
         """Compile the schedule once, then fan it out across batch buckets.
 
@@ -83,19 +72,21 @@ class BucketedPlanSet:
         the single expensive compile a content-addressed lookup: a hit
         rebuilds the plan from the stored connection order with zero
         annealer iterations.
+
+        ``mesh`` routes the compile through the sharded engine path: the
+        base plan is a :class:`ShardedExecutionPlan` and every bucket's
+        forward is a fresh lowering of the same collective program —
+        ``plan.with_fresh_forward`` hides the single- vs sharded-plan
+        difference, so the fan-out code is one path.
         """
         engine = engine or Engine()
         if plan_store is not None:
-            base, hit = plan_store.get_or_compile(engine, net, backend)
+            base, hit = plan_store.get_or_compile(engine, net, backend,
+                                                  mesh=mesh)
         else:
-            base, hit = engine.compile(net, backend), False
+            base, hit = engine.compile(net, backend, mesh=mesh), False
         sizes = bucket_sizes(max_batch)
-        plans = {
-            b: dataclasses.replace(
-                base, _forward=_rebuild_forward(base, jit=engine.jit),
-                calls=0)
-            for b in sizes
-        }
+        plans = {b: base.with_fresh_forward(jit=engine.jit) for b in sizes}
         return cls(base=base, buckets=sizes, plans=plans, cache_hit=hit,
                    bucket_calls={b: 0 for b in sizes})
 

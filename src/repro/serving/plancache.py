@@ -44,7 +44,14 @@ from repro.checkpoint.store import (
     write_manifest_dir,
 )
 from repro.core.blocksparse import BlockFFNN, BSRLayer
-from repro.engine import Engine, ExecutionPlan, IOReport
+from repro.engine import (
+    Engine,
+    ExecutionPlan,
+    IOReport,
+    Mesh,
+    ShardedExecutionPlan,
+    ShardedIOReport,
+)
 
 FORMAT_VERSION = 1
 
@@ -72,8 +79,16 @@ def layers_fingerprint(net: Union[BlockFFNN, Sequence[BSRLayer]]) -> str:
 
 
 def plan_cache_key(engine: Engine,
-                   net: Union[BlockFFNN, Sequence[BSRLayer]]) -> str:
-    """Content-addressed key: layer hash + schedule-affecting settings."""
+                   net: Union[BlockFFNN, Sequence[BSRLayer]],
+                   mesh: Optional[Mesh] = None) -> str:
+    """Content-addressed key: layer hash + schedule-affecting settings.
+
+    The mesh topology is part of the key — a sharded plan's per-shard
+    orders are meaningless under any other partition, so changing the mesh
+    shape (including sharded vs unsharded) must be a miss.  ``mesh`` /
+    ``max_move_span`` enter the dict only when set, so entries written by
+    earlier store versions stay warm.
+    """
     settings = {
         "format": FORMAT_VERSION,
         "layers": layers_fingerprint(net),
@@ -84,6 +99,10 @@ def plan_cache_key(engine: Engine,
         "policy": engine.policy,
         "fuse": bool(engine.fuse),
     }
+    if getattr(engine, "max_move_span", None):
+        settings["max_move_span"] = int(engine.max_move_span)
+    if mesh is not None:
+        settings["mesh"] = [int(mesh.model), int(mesh.data)]
     return hashlib.sha256(
         json.dumps(settings, sort_keys=True).encode()).hexdigest()
 
@@ -99,15 +118,18 @@ class PlanStore:
         return os.path.join(self.root, f"plan_{key}")
 
     def contains(self, engine: Engine,
-                 net: Union[BlockFFNN, Sequence[BSRLayer]]) -> bool:
-        return manifest_exists(self.path_for(plan_cache_key(engine, net)))
+                 net: Union[BlockFFNN, Sequence[BSRLayer]],
+                 mesh: Optional[Mesh] = None) -> bool:
+        return manifest_exists(
+            self.path_for(plan_cache_key(engine, net, mesh)))
 
     def evict(self, engine: Engine,
-              net: Union[BlockFFNN, Sequence[BSRLayer]]) -> bool:
-        """Remove the entry for this (engine, net), if any.  Returns True
-        when something was removed (used e.g. by the benchmark to force a
-        genuinely cold start against a reused store directory)."""
-        path = self.path_for(plan_cache_key(engine, net))
+              net: Union[BlockFFNN, Sequence[BSRLayer]],
+              mesh: Optional[Mesh] = None) -> bool:
+        """Remove the entry for this (engine, net, mesh), if any.  Returns
+        True when something was removed (used e.g. by the benchmark to force
+        a genuinely cold start against a reused store directory)."""
+        path = self.path_for(plan_cache_key(engine, net, mesh))
         if os.path.isdir(path):
             import shutil
             shutil.rmtree(path, ignore_errors=True)
@@ -122,18 +144,31 @@ class PlanStore:
                       and manifest_exists(os.path.join(self.root, n)))
 
     # ------------------------------------------------------------------ #
-    def put(self, engine: Engine, plan: ExecutionPlan) -> str:
-        """Persist a compiled plan's schedule artifact (atomic)."""
-        key = plan_cache_key(engine, plan.block_ffnn)
+    def put(self, engine: Engine,
+            plan: Union[ExecutionPlan, ShardedExecutionPlan]) -> str:
+        """Persist a compiled plan's schedule artifact (atomic).
+
+        A :class:`ShardedExecutionPlan` stores one connection order (plus
+        flat-schedule verification arrays) per shard and the per-layer
+        partition assignment, keyed on its mesh topology.
+        """
+        sharded = isinstance(plan, ShardedExecutionPlan)
+        mesh = plan.mesh if sharded else None
+        key = plan_cache_key(engine, plan.block_ffnn, mesh)
         extra = {
             "format": FORMAT_VERSION,
             "key": key,
-            "n_layers": len(plan.layers),
-            "fused": plan.fused,
-            "io": plan.io.to_dict(),
+            "n_layers": len(plan.shards[0].layers) if sharded
+            else len(plan.layers),
+            "io": (plan.io_report() if sharded else plan.io).to_dict(),
             "compile_s": plan.compile_s,
             "annealer_iters": plan.annealer_iters,
         }
+        if sharded:
+            extra["mesh"] = [int(mesh.model), int(mesh.data)]
+            extra["n_shards"] = len(plan.shards)
+        else:
+            extra["fused"] = plan.fused
         return write_manifest_dir(self.path_for(key), plan.artifact_arrays(),
                                   extra)
 
@@ -143,15 +178,19 @@ class PlanStore:
         net: Union[BlockFFNN, Sequence[BSRLayer]],
         backend: Optional[str] = None,
         verify: bool = True,
-    ) -> Optional[ExecutionPlan]:
+        mesh: Optional[Mesh] = None,
+    ) -> Optional[Union[ExecutionPlan, ShardedExecutionPlan]]:
         """Rebuild a plan from a stored artifact, or None on miss.
 
         ``verify`` additionally checks that the flat-schedule arrays
         rebuilt from the stored order are bit-identical to the stored
         ones; a mismatch (artifact written by incompatible packing code)
-        is treated as a miss.
+        is treated as a miss.  With ``mesh``, the per-shard orders are
+        rebuilt through ``Engine.compile_sharded_with_orders`` (zero
+        annealer iterations per shard) and every shard — plus the stored
+        partition assignment — is verified.
         """
-        key = plan_cache_key(engine, net)
+        key = plan_cache_key(engine, net, mesh)
         path = self.path_for(key)
         if not manifest_exists(path):
             return None
@@ -159,13 +198,30 @@ class PlanStore:
             arrays, extra = read_manifest_dir(path)
             if extra.get("format") != FORMAT_VERSION:
                 return None
-            io = IOReport.from_dict(extra["io"])
-        except (OSError, KeyError, ValueError):
-            # corrupt/unreadable entry (crc mismatch, mangled manifest):
-            # a miss recompiles and overwrites it — self-healing, not fatal
+            if mesh is None:
+                io = IOReport.from_dict(extra["io"])
+            else:
+                if extra.get("mesh") != [int(mesh.model), int(mesh.data)]:
+                    return None
+                n_shards = int(extra["n_shards"])
+                sio = ShardedIOReport.from_dict(extra["io"])
+                orders = [arrays[f"s{i}_order"] for i in range(n_shards)]
+        except (OSError, KeyError, ValueError, TypeError):
+            # corrupt/unreadable entry (crc mismatch, mangled manifest,
+            # wrong-typed metadata field): a miss recompiles and overwrites
+            # it — self-healing, not fatal
             return None
-        plan = engine.compile_with_order(net, arrays["order"], backend, io=io)
-        if verify and not self._matches(plan, arrays):
+        if mesh is None:
+            plan = engine.compile_with_order(net, arrays["order"], backend,
+                                             io=io)
+            if verify and not self._matches(plan, arrays):
+                return None
+            return plan
+        if len(sio.per_shard) != n_shards:
+            return None
+        plan = engine.compile_sharded_with_orders(
+            net, mesh, orders, backend, ios=list(sio.per_shard))
+        if verify and not self._matches_sharded(plan, arrays):
             return None
         return plan
 
@@ -183,21 +239,40 @@ class PlanStore:
                 return False
         return True
 
+    @classmethod
+    def _matches_sharded(cls, plan: ShardedExecutionPlan,
+                         arrays: dict) -> bool:
+        """Every shard's rebuilt arrays — and the partition itself — must
+        match the stored artifact bit-for-bit; any drift is a miss."""
+        stored = plan.artifact_arrays()
+        for k in range(plan.n_layers):
+            name = f"assign_l{k}"
+            if name not in arrays or \
+                    not np.array_equal(arrays[name], stored[name]):
+                return False
+        for s, shard in enumerate(plan.shards):
+            sub = {name[len(f"s{s}_"):]: arr for name, arr in arrays.items()
+                   if name.startswith(f"s{s}_")}
+            if not sub or not cls._matches(shard, sub):
+                return False
+        return True
+
     def get_or_compile(
         self,
         engine: Engine,
         net: Union[BlockFFNN, Sequence[BSRLayer]],
         backend: Optional[str] = None,
-    ) -> Tuple[ExecutionPlan, bool]:
+        mesh: Optional[Mesh] = None,
+    ) -> Tuple[Union[ExecutionPlan, ShardedExecutionPlan], bool]:
         """Warm-start compile: ``(plan, hit)``.
 
-        Hit: rebuilt from the stored order, zero annealer iterations.
-        Miss: full ``Engine.compile`` (schedule + CR), then persisted so
-        the next process is warm.
+        Hit: rebuilt from the stored order(s), zero annealer iterations.
+        Miss: full ``Engine.compile`` (schedule + CR — per shard when a
+        ``mesh`` is given), then persisted so the next process is warm.
         """
-        plan = self.load(engine, net, backend)
+        plan = self.load(engine, net, backend, mesh=mesh)
         if plan is not None:
             return plan, True
-        plan = engine.compile(net, backend)
+        plan = engine.compile(net, backend, mesh=mesh)
         self.put(engine, plan)
         return plan, False

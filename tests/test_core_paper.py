@@ -185,6 +185,108 @@ def test_cr_reduces_ios_on_memory_pressure():
 
 
 # ---------------------------------------------------------------------------
+# capped move spans (CR at scale)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(net=small_nets, seed=st.integers(0, 1000),
+       i_frac=st.floats(0, 1), w=st.integers(0, 40),
+       direction=st.integers(0, 1), span=st.integers(1, 12))
+def test_capped_moves_preserve_topological_validity(net, seed, i_frac, w,
+                                                    direction, span):
+    """A span-capped move is a prefix of the full anchor scan — still a
+    permutation, still topological, and never travels farther than span."""
+    order = net.theorem1_order().astype(np.int64).tolist()
+    i = min(net.W - 1, int(i_frac * net.W))
+    new = _apply_move(list(order), net.src.tolist(), net.dst.tolist(),
+                      i, w, direction, span)
+    assert sorted(new) == list(range(net.W))
+    assert net.is_topological_connection_order(np.array(new))
+
+
+def test_capped_moves_never_travel_past_span():
+    """The defining property of the cap: a single moved connection (window
+    w=0) ends up at most ``span`` positions from where it started."""
+    net = random_ffnn(width=40, depth=4, density=0.2, seed=7)
+    order = net.theorem1_order().astype(np.int64).tolist()
+    src, dst = net.src.tolist(), net.dst.tolist()
+    rng = np.random.default_rng(1)
+    for span in (1, 3, 8):
+        for _ in range(100):
+            i = int(rng.integers(0, net.W))
+            d = int(rng.integers(0, 2))
+            new = _apply_move(list(order), src, dst, i, 0, d, span)
+            e = order[i]
+            assert abs(new.index(e) - i) <= span, (span, i, d)
+
+
+def test_capped_moves_c_matches_python():
+    """The C accelerator's span-capped propose_move must stay bit-identical
+    to the Python reference — stored plan orders (and plan-store warm-start
+    bit-identity) would otherwise differ between hosts with/without cc."""
+    from repro.core import _iosim_c
+    if not _iosim_c.available():
+        pytest.skip("C accelerator unavailable")
+    net = random_ffnn(width=35, depth=3, density=0.3, seed=3)
+    order = net.theorem1_order().astype(np.int64)
+    src_l, dst_l = net.src.tolist(), net.dst.tolist()
+    src32 = np.ascontiguousarray(net.src, np.int32)
+    dst32 = np.ascontiguousarray(net.dst, np.int32)
+    rng = np.random.default_rng(2)
+    for span in (0, 1, 4, 11, 10 ** 9):
+        for _ in range(150):
+            i = int(rng.integers(0, net.W))
+            w = int(rng.integers(0, 8))
+            d = int(rng.integers(0, 2))
+            py = np.array(_apply_move(order.tolist(), src_l, dst_l,
+                                      i, w, d, span), np.int64)
+            c = order.copy()
+            assert _iosim_c.propose_move_c(c, src32, dst32, i, w, d, span)
+            np.testing.assert_array_equal(py, c, err_msg=str((span, i, w, d)))
+
+
+def test_huge_span_equals_unbounded_moves():
+    net = random_ffnn(width=30, depth=3, density=0.3, seed=5)
+    order = net.theorem1_order().astype(np.int64).tolist()
+    src, dst = net.src.tolist(), net.dst.tolist()
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        i = int(rng.integers(0, net.W))
+        w = int(rng.integers(0, 10))
+        d = int(rng.integers(0, 2))
+        full = _apply_move(list(order), src, dst, i, w, d, 0)
+        capped = _apply_move(list(order), src, dst, i, w, d, 10 ** 9)
+        assert full == capped
+
+
+def test_capped_cr_stays_within_theorem1_upper_bound():
+    """ROADMAP 'CR at scale': capping move spans keeps the annealer's
+    windowed delta evaluation cheap; the result must stay valid and — after
+    Theorem-1 regrouping, as the engine consumes it — inside the paper's
+    upper bound."""
+    from repro.core.blocksparse import regroup_by_output
+    net = random_ffnn(width=60, depth=4, density=0.15, seed=2)
+    order = net.theorem1_order()
+    bounds = theorem1_bounds(net)
+    for span in (4, 16):
+        res = connection_reordering(net, order, M=12, T=300, seed=1,
+                                    max_move_span=span)
+        assert res.ios <= res.initial_ios
+        assert net.is_topological_connection_order(res.order)
+        regrouped = regroup_by_output(net, res.order)
+        s = simulate(net, regrouped, 12, "min")
+        assert s.total <= bounds.total_hi
+        assert bounds.writes_lo <= s.writes <= bounds.writes_hi
+
+
+def test_cr_rejects_negative_span():
+    net = random_ffnn(width=10, depth=2, density=0.4, seed=0)
+    with pytest.raises(ValueError, match="max_move_span"):
+        connection_reordering(net, net.theorem1_order(), M=5, T=5,
+                              max_move_span=-1)
+
+
+# ---------------------------------------------------------------------------
 # Compact Growth (paper V)
 # ---------------------------------------------------------------------------
 

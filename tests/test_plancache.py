@@ -117,6 +117,44 @@ def test_cache_key_tracks_schedule_settings(make_stack):
     assert plan_cache_key(e1, layers) == plan_cache_key(e4, layers)
 
 
+def test_cache_key_sensitive_to_every_schedule_setting(make_stack):
+    """Changing ANY schedule-affecting engine setting must change the key —
+    a stale hit would serve a schedule the settings no longer describe."""
+    layers = make_stack()
+    base = Engine(backend="jnp")
+    key0 = plan_cache_key(base, layers)
+    import dataclasses as dc
+    changed = {
+        "reorder": True,
+        "M_tiles": 5,
+        "reorder_iters": 77,
+        "seed": 9,
+        "max_move_span": 32,
+        "policy": "lru",
+        "fuse": False,
+    }
+    keys = [key0]
+    for field, value in changed.items():
+        k = plan_cache_key(dc.replace(base, **{field: value}), layers)
+        assert k != key0, f"{field} change must be a key miss"
+        keys.append(k)
+    assert len(set(keys)) == len(keys)   # all pairwise distinct
+    # activation is deliberately NOT keyed (epilogue only, not the schedule)
+    assert plan_cache_key(dc.replace(base, activation="gelu"), layers) == key0
+
+
+def test_cache_key_sensitive_to_mesh_shape(make_stack):
+    from repro.engine import Mesh
+    layers = make_stack()
+    eng = Engine(backend="jnp")
+    k_none = plan_cache_key(eng, layers)
+    k11 = plan_cache_key(eng, layers, mesh=Mesh(1, 1))
+    k21 = plan_cache_key(eng, layers, mesh=Mesh(2, 1))
+    k12 = plan_cache_key(eng, layers, mesh=Mesh(1, 2))
+    k22 = plan_cache_key(eng, layers, mesh=Mesh(2, 2))
+    assert len({k_none, k11, k21, k12, k22}) == 5
+
+
 # --------------------------------------------------------------------------- #
 # plan store warm starts
 # --------------------------------------------------------------------------- #
@@ -196,6 +234,87 @@ def test_plan_store_corrupt_entry_self_heals(tmp_path, make_stack):
     plan, hit = store.get_or_compile(Engine(backend="jnp"), make_stack())
     assert not hit and plan is not None
     assert store.load(Engine(backend="jnp"), make_stack()) is not None
+
+
+@pytest.mark.parametrize("damage", ["truncate", "garbage", "missing_field"])
+def test_plan_store_corrupt_manifest_self_heals(tmp_path, make_stack, damage):
+    """The manifest file itself being mangled (not just an array crc) is a
+    miss that recompiles and overwrites — the self-heal path, directly."""
+    import json
+    import os
+    store = PlanStore(str(tmp_path))
+    eng = Engine(backend="jnp")
+    store.get_or_compile(eng, make_stack())
+    (key,) = store.keys()
+    manifest = os.path.join(store.path_for(key), "manifest.json")
+    if damage == "truncate":
+        raw = open(manifest).read()
+        open(manifest, "w").write(raw[: len(raw) // 2])
+    elif damage == "garbage":
+        open(manifest, "w").write("not json at all {{{")
+    else:
+        d = json.load(open(manifest))
+        d.pop("extra", None)
+        d.pop("arrays", None)
+        json.dump(d, open(manifest, "w"))
+    assert store.load(eng, make_stack()) is None       # miss, no crash
+    plan, hit = store.get_or_compile(Engine(backend="jnp"), make_stack())
+    assert not hit and plan is not None
+    warm = store.load(Engine(backend="jnp"), make_stack())
+    assert warm is not None                            # healed
+
+
+# --------------------------------------------------------------------------- #
+# sharded plans through the store
+# --------------------------------------------------------------------------- #
+
+def test_plan_store_sharded_roundtrip_bit_identical(tmp_path, make_stack):
+    from repro.engine import Mesh
+    layers = make_stack(density=0.5)
+    store = PlanStore(str(tmp_path))
+    mesh = Mesh(model=2, data=1)
+    eng = Engine(backend="jnp", reorder=True, reorder_iters=20)
+    cold, hit = store.get_or_compile(eng, layers, mesh=mesh)
+    assert not hit and cold.annealer_iters == 2 * 20
+    warm, hit = store.get_or_compile(
+        Engine(backend="jnp", reorder=True, reorder_iters=20),
+        make_stack(density=0.5), mesh=Mesh(model=2, data=1))
+    assert hit and warm.annealer_iters == 0
+    for c, w in zip(cold.shards, warm.shards):
+        np.testing.assert_array_equal(c.order, w.order)
+        assert w.io == c.io            # stored reports restored verbatim
+    rng = np.random.default_rng(11)
+    for B in (1, 3, 8):
+        x = rng.standard_normal((B, cold.n_in)).astype(np.float32)
+        assert _bitwise_equal(cold(x), warm(x))
+
+
+def test_plan_store_sharded_misses_other_mesh(tmp_path, make_stack):
+    from repro.engine import Mesh
+    store = PlanStore(str(tmp_path))
+    eng = Engine(backend="jnp")
+    store.get_or_compile(eng, make_stack(), mesh=Mesh(model=2))
+    # a different partition, the unsharded plan, and a different data axis
+    # are all misses — per-shard orders are meaningless across topologies
+    assert store.load(eng, make_stack(), mesh=Mesh(model=4)) is None
+    assert store.load(eng, make_stack()) is None
+    assert store.load(eng, make_stack(), mesh=Mesh(model=2, data=2)) is None
+    assert store.load(eng, make_stack(), mesh=Mesh(model=2)) is not None
+
+
+def test_plan_store_sharded_verify_rejects_drift(make_stack):
+    from repro.engine import Mesh
+    plan = Engine(backend="jnp").compile(make_stack(), mesh=Mesh(model=2))
+    arrays = plan.artifact_arrays()
+    assert PlanStore._matches_sharded(plan, arrays)
+    bad = dict(arrays)
+    bad["s1_flat_rows"] = bad["s1_flat_rows"].copy()
+    bad["s1_flat_rows"][0] += 1
+    assert not PlanStore._matches_sharded(plan, bad)
+    # partition-assignment drift is a miss too
+    bad2 = dict(arrays)
+    bad2["assign_l0"] = 1 - bad2["assign_l0"]
+    assert not PlanStore._matches_sharded(plan, bad2)
 
 
 def test_plan_store_evict(tmp_path, make_stack):

@@ -1,0 +1,292 @@
+"""Sharded execution plans: partitioner, per-shard Theorem-1 schedules,
+collective forward, and the aggregate I/O report.
+
+The contract under test is the acceptance bar of the sharding refactor:
+
+  * sharded outputs are **bit-identical** to the unsharded plan on the same
+    net (default, un-annealed schedule — every lowering sums each output
+    tile's contributions in the same relative order);
+  * every shard's simulated traffic sits inside *its own* shard DAG's
+    Theorem-1 bounds, and the report aggregates traffic + load imbalance;
+  * ``Mesh(1, 1)`` is the single-device path — same forward builder, not a
+    parallel code path.
+
+In-process tests run on however many devices the host exposes (1 in the
+tier-1 lane → the sequential shard loop; 8 in the multi-device CI lane →
+``shard_map``), so both lowerings are exercised by the same assertions.
+The subprocess test forces an 8-device host either way.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.graph import partition_columns_balanced
+from repro.engine import Engine, Mesh, ShardedExecutionPlan, ShardedIOReport
+from repro.engine.sharding import partition_model
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------- #
+# the balanced block-column partitioner
+# --------------------------------------------------------------------------- #
+
+def test_partitioner_equal_counts_and_determinism():
+    rng = np.random.default_rng(0)
+    loads = rng.integers(0, 20, size=24)
+    a = partition_columns_balanced(loads, 4)
+    b = partition_columns_balanced(loads, 4)
+    np.testing.assert_array_equal(a, b)          # deterministic
+    counts = np.bincount(a, minlength=4)
+    assert (counts == 6).all()                   # exact equal counts
+    per = np.array([loads[a == s].sum() for s in range(4)])
+    # LPT sanity: the heaviest shard carries at least the heaviest column
+    # and no more than a naive contiguous split's worst shard
+    contiguous = loads.reshape(4, 6).sum(axis=1)
+    assert loads.max() <= per.max() <= max(contiguous.max(), loads.max())
+
+
+def test_partitioner_rejects_indivisible():
+    with pytest.raises(ValueError, match="divisible"):
+        partition_columns_balanced(np.ones(10), 4)
+    with pytest.raises(ValueError, match="parts"):
+        partition_columns_balanced(np.ones(8), 0)
+
+
+def test_partition_model_shards_cover_all_blocks(make_stack):
+    from repro.core.blocksparse import to_block_ffnn
+    bffnn = to_block_ffnn(make_stack(sizes=(128, 256, 128), block=32))
+    specs = partition_model(bffnn, 2)
+    assert len(specs) == 2
+    for k, lay in enumerate(bffnn.layers):
+        owned = np.concatenate([sp.owned[k] for sp in specs])
+        assert sorted(owned.tolist()) == list(range(lay.grid_out))
+        nnz = sum(sp.bffnn.layers[k].nnz_blocks for sp in specs)
+        assert nnz == lay.nnz_blocks             # every block exactly once
+        # shard layers keep the full input width (they read the gather)
+        for sp in specs:
+            assert sp.bffnn.layers[k].n_in == lay.n_in
+
+
+def test_partition_model_indivisible_grid_raises(make_stack):
+    from repro.core.blocksparse import to_block_ffnn
+    # 128/32 = 4 tiles in the final layer: model=3 cannot split it
+    bffnn = to_block_ffnn(make_stack(sizes=(128, 256, 128), block=32))
+    with pytest.raises(ValueError, match="divisible"):
+        partition_model(bffnn, 3)
+
+
+def test_mesh_validation():
+    with pytest.raises(ValueError):
+        Mesh(model=0)
+    assert Mesh(4, 2).size == 8 and Mesh().shape == (1, 1)
+
+
+# --------------------------------------------------------------------------- #
+# output parity: sharded == unsharded, bit for bit
+# --------------------------------------------------------------------------- #
+
+MESHES = [Mesh(1, 1), Mesh(2, 1), Mesh(1, 2), Mesh(2, 2), Mesh(4, 2)]
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=lambda m: f"{m.model}x{m.data}")
+def test_sharded_outputs_bit_identical_to_unsharded(make_stack, mesh):
+    layers = make_stack(sizes=(128, 256, 128), density=0.4, block=32)
+    engine = Engine(backend="jnp")
+    base = engine.compile(layers)
+    plan = engine.compile(layers, mesh=mesh)
+    assert isinstance(plan, ShardedExecutionPlan)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((8, 128)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(base(x)))
+    # odd batches pad over the data axis and slice back
+    np.testing.assert_array_equal(np.asarray(plan(x[:5])),
+                                  np.asarray(base(x[:5])))
+    # single-vector inputs keep the ExecutionPlan contract
+    y0 = plan(x[0])
+    assert y0.shape == (base.n_out,)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(base(x))[0])
+
+
+def test_sharded_with_reordering_matches_reference(make_stack):
+    """Each shard anneals independently; the function is preserved."""
+    layers = make_stack(sizes=(128, 256, 128), density=0.4, block=32)
+    engine = Engine(backend="jnp", reorder=True, reorder_iters=60)
+    base = engine.compile(layers)
+    plan = engine.compile(layers, mesh=Mesh(model=2))
+    assert plan.annealer_iters == 2 * 60       # embarrassingly parallel CR
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((4, 128)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(plan(x)), np.asarray(base(x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_interpret_backend_matches_jnp(make_stack):
+    layers = make_stack(sizes=(128, 128), density=0.5, block=32)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4, 128)).astype(np.float32)
+    y_jnp = Engine(backend="jnp").compile(layers, mesh=Mesh(2, 1))(x)
+    y_int = Engine(backend="interpret").compile(layers, mesh=Mesh(2, 1))(x)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_int),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_unit_mesh_is_the_single_device_path(make_stack):
+    """Mesh(1,1) shares the unsharded builder's forward — same code, no
+    duplicated forward builder."""
+    layers = make_stack()
+    engine = Engine(backend="jnp")
+    plan = engine.compile(layers, mesh=Mesh(1, 1))
+    assert len(plan.shards) == 1
+    if plan.mesh.jax_mesh() is None:   # single-device host
+        assert plan._forward is plan.shards[0]._forward
+    base = engine.compile(layers)
+    np.testing.assert_array_equal(
+        np.asarray(plan(np.zeros((2, 128), np.float32))),
+        np.asarray(base(np.zeros((2, 128), np.float32))))
+
+
+def test_sharded_plan_api_contract(make_stack):
+    layers = make_stack()
+    plan = Engine(backend="jnp").compile(layers, mesh=Mesh(2, 2))
+    assert plan.n_in == 128 and plan.n_out == 128
+    with pytest.raises(ValueError, match="expected input"):
+        plan(np.zeros((2, 64), np.float32))
+    # model>1 shard plans are not standalone-runnable
+    with pytest.raises(RuntimeError, match="not standalone-runnable"):
+        plan.shards[0](np.zeros((2, 128), np.float32))
+    s = plan.describe()
+    assert "mesh(model=2, data=2)" in s and "imbalance" in s
+    # compile caching keyed on mesh shape
+    engine = Engine(backend="jnp")
+    assert engine.compile(layers, mesh=Mesh(2, 1)) is \
+        engine.compile(layers, mesh=Mesh(2, 1))
+    assert engine.compile(layers, mesh=Mesh(2, 1)) is not \
+        engine.compile(layers, mesh=Mesh(4, 1))
+
+
+def test_with_fresh_forward_shares_substrate(make_stack):
+    plan = Engine(backend="jnp").compile(make_stack(), mesh=Mesh(2, 1))
+    fresh = plan.with_fresh_forward()
+    assert fresh.shards is plan.shards and fresh.calls == 0
+    x = np.random.default_rng(4).standard_normal((3, 128)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(fresh(x)), np.asarray(plan(x)))
+
+
+# --------------------------------------------------------------------------- #
+# the aggregate I/O report
+# --------------------------------------------------------------------------- #
+
+def test_per_shard_io_within_theorem1_bounds(make_stack):
+    from repro.core.bounds import theorem1_bounds
+    from repro.core.graph import drop_isolated
+    from repro.core.iosim import simulate
+    for reorder in (False, True):
+        plan = Engine(backend="jnp", reorder=reorder,
+                      reorder_iters=50).compile(
+            make_stack(sizes=(192, 192, 192, 192), density=0.25, block=32),
+            mesh=Mesh(model=2))
+        report = plan.io_report()
+        assert isinstance(report, ShardedIOReport)
+        assert report.within_bounds
+        for shard, r in zip(plan.shards, report.per_shard):
+            assert r.bounds.writes_lo <= r.simulated.writes \
+                <= r.bounds.writes_hi
+            assert r.simulated.total <= r.bounds.total_hi
+            # the report is the exact simulator on the shard's own DAG
+            net = drop_isolated(shard.block_ffnn.net)
+            assert r.simulated == simulate(net, shard.order, 3, "min")
+            assert r.bounds == theorem1_bounds(net)
+
+
+def test_io_report_aggregates_and_imbalance(make_stack):
+    plan = Engine(backend="jnp").compile(
+        make_stack(sizes=(128, 256, 128), density=0.4, block=32),
+        mesh=Mesh(model=4, data=2))
+    report = plan.io_report()
+    assert report.total == sum(r.simulated.total for r in report.per_shard)
+    assert report.reads + report.writes == report.total
+    assert report.load_imbalance >= 1.0
+    assert report.max_shard_total * len(report.per_shard) >= report.total
+    assert "imbalance" in report.summary()
+    # round-trips through the plan-store dict form
+    back = ShardedIOReport.from_dict(report.to_dict())
+    assert back == report
+
+
+def test_empty_shard_imbalance_guard():
+    empty = ShardedIOReport(per_shard=(), model=1, data=1)
+    assert empty.load_imbalance == 1.0 and empty.total == 0
+
+
+# --------------------------------------------------------------------------- #
+# forced multi-device host: the shard_map lowering itself
+# --------------------------------------------------------------------------- #
+
+def run_py(body: str, devices: int = 8, timeout: int = 520) -> str:
+    code = ("import os\n"
+            f"os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(body))
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+def test_shard_map_lowering_bit_identical_on_8_devices():
+    out = run_py("""
+        import numpy as np, jax
+        from repro.engine import Engine, Mesh
+        from repro.sparse import prune_dense_stack
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(0)
+        sizes = (128, 256, 128)
+        ws = [rng.standard_normal((sizes[i], sizes[i+1])).astype(np.float32)*0.1
+              for i in range(2)]
+        bs = [rng.standard_normal(sizes[i+1]).astype(np.float32)*0.1
+              for i in range(2)]
+        layers = prune_dense_stack(ws, bs, density=0.4,
+                                   block_m=32, block_n=32)
+        engine = Engine(backend='jnp')
+        base = engine.compile(layers)
+        x = rng.standard_normal((8, 128)).astype(np.float32)
+        y0 = np.asarray(base(x))
+        plan = engine.compile(layers, mesh=Mesh(model=4, data=2))
+        assert plan.mesh.jax_mesh() is not None, 'expected the shard_map path'
+        assert np.array_equal(np.asarray(plan(x)), y0)
+        assert np.array_equal(np.asarray(plan(x[:5])), y0[:5])
+        assert plan.io_report().within_bounds
+        print('SHARDMAP_BITIDENTICAL')
+    """)
+    assert "SHARDMAP_BITIDENTICAL" in out
+
+
+def test_sharded_serving_on_8_devices():
+    out = run_py("""
+        import numpy as np, jax
+        from repro.engine import Engine, Mesh
+        from repro.serving import BucketedPlanSet, SparseServer
+        from repro.sparse import prune_dense_stack
+        rng = np.random.default_rng(0)
+        ws = [rng.standard_normal((128, 128)).astype(np.float32)*0.1]
+        layers = prune_dense_stack(ws, [np.zeros(128, np.float32)],
+                                   density=0.5, block_m=32, block_n=32)
+        plans = BucketedPlanSet.compile(
+            layers, engine=Engine(backend='jnp'), max_batch=8,
+            mesh=Mesh(model=2, data=2)).warmup()
+        server = SparseServer(plans, slo_ms=100.0)
+        rids = [server.submit(rng.standard_normal(128).astype(np.float32))
+                for _ in range(13)]
+        server.poll(); server.drain()
+        assert all(server.result(r) is not None for r in rids)
+        assert server.metrics.served == 13
+        print('SHARDED_SERVE_OK')
+    """)
+    assert "SHARDED_SERVE_OK" in out
