@@ -16,6 +16,7 @@ Theorem-1 bounds alongside the serving metrics.
 """
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -32,6 +33,11 @@ def main():
     ap.add_argument("--density", type=float, default=0.1)
     ap.add_argument("--reorder-iters", type=int, default=500)
     ap.add_argument("--slo-ms", type=float, default=50.0)
+    ap.add_argument("--threads", type=int, default=0,
+                    help="> 0: serve through the async scheduler thread "
+                         "with this many concurrent client threads "
+                         "(Future-style wait per request); 0 = the "
+                         "deterministic step-driven loop")
     ap.add_argument("--plan-store", default=None,
                     help="persistent plan cache directory; rerun with the "
                          "same dir for a warm start with zero annealing")
@@ -62,22 +68,54 @@ def main():
 
     # bursty request traffic — the wait-or-fire scheduler forms batches and
     # the bucket router serves each through the smallest bucket that fits
-    server = SparseServer(plans, slo_ms=args.slo_ms)
+    server = SparseServer(plans, slo_ms=args.slo_ms, engine=engine,
+                          plan_store=store)
     rids = []
-    pending = args.requests
-    while pending:
-        burst = min(int(rng.integers(1, args.batch + 1)), pending)
-        for _ in range(burst):
-            rid = server.submit(rng.standard_normal(1024).astype(np.float32))
-            if rid is not None:
-                rids.append(rid)
-        pending -= burst
-        server.poll()
-    server.drain()
-    y = server.result(rids[-1])
+    if args.threads > 0:
+        # async mode: the scheduler thread forms batches while concurrent
+        # clients submit and block on their own results (Future-style)
+        server.start()
+        outs = {}
+
+        def client(n, seed):
+            crng = np.random.default_rng(seed)   # per-thread generator
+            for _ in range(n):
+                rid = server.submit(
+                    crng.standard_normal(1024).astype(np.float32))
+                if rid is not None:
+                    rids.append(rid)
+                    outs[rid] = server.wait(rid, timeout=30.0)
+
+        per = args.requests // args.threads
+        ts = [threading.Thread(
+                  target=client,
+                  args=(per + (i < args.requests % args.threads), 100 + i))
+              for i in range(args.threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        server.shutdown()
+        y = outs[rids[-1]]
+    else:
+        pending = args.requests
+        while pending:
+            burst = min(int(rng.integers(1, args.batch + 1)), pending)
+            for _ in range(burst):
+                rid = server.submit(
+                    rng.standard_normal(1024).astype(np.float32))
+                if rid is not None:
+                    rids.append(rid)
+            pending -= burst
+            server.poll()
+        server.drain()
+        y = server.result(rids[-1])
     print(server.metrics.summary())
     print(f"bucket calls: { {b: n for b, n in plans.bucket_calls.items() if n} }")
-    print("output sample:", np.asarray(y[:4]).round(3).tolist())
+    if y is None:   # timed out waiting, or the uncollected result was evicted
+        print("output sample: <not collected>")
+    else:
+        print("output sample:", np.asarray(y[:4]).round(3).tolist())
 
 
 if __name__ == "__main__":

@@ -166,6 +166,13 @@ class ExecutionPlan:
     def n_out(self) -> int:
         return self.layers[-1].n_out
 
+    @property
+    def dtype(self) -> np.dtype:
+        """The plan's input dtype: what its forward was traced (and should
+        always be called) with.  Feeding any other dtype retraces a second
+        program per batch shape — serving callers cast to this first."""
+        return np.dtype(self.layers[0].blocks.dtype)
+
     def __call__(self, x) -> jnp.ndarray:
         """Run inference.  ``x`` is ``[n_in]`` or batched ``[B, n_in]``."""
         x = jnp.asarray(x)

@@ -317,6 +317,12 @@ class ShardedExecutionPlan:
         return len(self.shards[0].layers)
 
     @property
+    def dtype(self) -> np.dtype:
+        """Input dtype the collective forward was traced with (the sharded
+        analogue of :attr:`ExecutionPlan.dtype`)."""
+        return self.shards[0].dtype
+
+    @property
     def annealer_iters(self) -> int:
         return sum(s.annealer_iters for s in self.shards)
 

@@ -15,6 +15,13 @@ entirely via ``--plan-store DIR``) fanned out across power-of-two batch
 buckets, with a deadline-aware wait-or-fire scheduler and SLO metrics:
 
     PYTHONPATH=src python -m repro.launch.serve --sparse-ffnn --requests 64
+
+``--async`` serves through the background scheduler thread (real clock,
+graceful SIGTERM drain); ``--models K`` serves K differently-pruned model
+variants from one process via a shared-scheduler ``ModelRouter``:
+
+    PYTHONPATH=src python -m repro.launch.serve --sparse-ffnn --async \
+        --models 2 --requests 64
 """
 
 from __future__ import annotations
@@ -35,58 +42,134 @@ from repro.models import encdec, lm
 from repro.models.sharding import axes_from_mesh
 
 
+def _make_ffnn_layers(sizes, density, block, seed=0):
+    from repro.sparse import prune_dense_stack
+
+    rng = np.random.default_rng(seed)
+    ws = [rng.standard_normal((sizes[i], sizes[i + 1])).astype(np.float32) * 0.03
+          for i in range(len(sizes) - 1)]
+    bs = [np.zeros(s, np.float32) for s in sizes[1:]]
+    return prune_dense_stack(ws, bs, density=density,
+                             block_m=block, block_n=block)
+
+
 def serve_sparse_ffnn(args) -> None:
     """Serve the paper's sparse-FFNN workload through the serving runtime.
 
     The offline cost (block DAG, Theorem-1 order, CR, lowering) is paid once
-    in ``Engine.compile`` — or not at all on a warm start from the plan
-    store; the request loop only executes bucketed cached plans.
+    per model in ``Engine.compile`` — or not at all on a warm start from the
+    plan store; the request loop only executes bucketed cached plans.
+
+    ``--async`` runs the background scheduler thread against the real clock
+    (the production mode); the default remains the deterministic step-driven
+    loop.  ``--models K`` serves K differently-pruned variants through one
+    ``ModelRouter``/scheduler.  SIGTERM (and SIGINT) trigger a graceful
+    drain: queued requests are served, then the process exits.
     """
+    import signal
+
     from repro.engine import Engine, Mesh
-    from repro.serving import BucketedPlanSet, PlanStore, SparseServer
-    from repro.sparse import prune_dense_stack
+    from repro.serving import (
+        BucketedPlanSet,
+        ModelRouter,
+        PlanStore,
+        SparseServer,
+    )
 
     rng = np.random.default_rng(0)
     sizes = args.ffnn_sizes
-    ws = [rng.standard_normal((sizes[i], sizes[i + 1])).astype(np.float32) * 0.03
-          for i in range(len(sizes) - 1)]
-    bs = [np.zeros(s, np.float32) for s in sizes[1:]]
-    layers = prune_dense_stack(ws, bs, density=args.density,
-                               block_m=args.block, block_n=args.block)
     engine = Engine(backend=args.backend, activation="gelu", reorder=True,
                     reorder_iters=args.reorder_iters,
                     fuse=not args.no_fuse)
     mesh = Mesh.parse(args.mesh) if args.mesh else None
     store = PlanStore(args.plan_store) if args.plan_store else None
-    t0 = time.time()
-    plans = BucketedPlanSet.compile(layers, engine=engine,
-                                    max_batch=args.batch, plan_store=store,
-                                    mesh=mesh)
-    compile_s = time.time() - t0
-    start = "warm (plan-store hit)" if plans.cache_hit else "cold"
-    print(f"engine compile: {compile_s:.1f}s [{start}] — {plans.describe()}")
-    plans.warmup()
 
-    server = SparseServer(plans, max_queue=args.max_queue, slo_ms=args.slo_ms)
-    rids = []
+    multi = args.models > 1
+    t0 = time.time()
+    if multi:
+        # K differently-pruned variants of the same architecture, one
+        # compile (or store hit) each, served through one shared scheduler
+        nets = {f"m{k}": _make_ffnn_layers(sizes, args.density, args.block,
+                                           seed=k)
+                for k in range(args.models)}
+        router = ModelRouter.compile(
+            nets, engine=engine, max_batch=args.batch, plan_store=store,
+            meshes={name: mesh for name in nets} if mesh else None,
+            max_queue=args.max_queue, slo_ms=args.slo_ms)
+        names = list(router.servers)
+        for name, srv in router.servers.items():
+            print(f"[{name}] {srv.plans.describe()}")
+    else:
+        layers = _make_ffnn_layers(sizes, args.density, args.block)
+        plans = BucketedPlanSet.compile(layers, engine=engine,
+                                        max_batch=args.batch,
+                                        plan_store=store, mesh=mesh)
+        start = "warm (plan-store hit)" if plans.cache_hit else "cold"
+        print(f"engine compile: {time.time() - t0:.1f}s [{start}] — "
+              f"{plans.describe()}")
+        plans.warmup()
+        server = SparseServer(plans, max_queue=args.max_queue,
+                              slo_ms=args.slo_ms, engine=engine,
+                              plan_store=store, mesh=mesh)
+
+    # graceful drain on SIGTERM/SIGINT: stop submitting, serve everything
+    # queued, report, exit — no request accepted before the signal is lost
+    stop = {"flag": False}
+
+    def _drain_handler(signum, frame):
+        stop["flag"] = True
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, _drain_handler)
+
+    runtime = router if multi else server
+    if args.async_mode:
+        runtime.start()
+        print("async scheduler thread started")
+
+    rids = []   # (model or None, rid)
     pending = args.requests
     # bursty arrivals: submit a random clump, let the wait-or-fire policy
     # form batches, repeat — so the bucket router sees mixed batch sizes
-    while pending:
+    while pending and not stop["flag"]:
         burst = int(rng.integers(1, args.batch + 1))
         for _ in range(min(burst, pending)):
-            rid = server.submit(
-                rng.standard_normal(sizes[0]).astype(np.float32))
+            x = rng.standard_normal(sizes[0]).astype(np.float32)
+            if multi:
+                name = names[len(rids) % len(names)]
+                rid = router.submit(name, x)
+            else:
+                name, rid = None, server.submit(x)
             if rid is not None:
-                rids.append(rid)
+                rids.append((name, rid))
             pending -= 1
             if not pending:
                 break
-        server.poll()
-    server.drain()
-    served = sum(server.result(r) is not None for r in rids)
-    print(f"served {served} sparse-FFNN requests — {server.metrics.summary()}")
-    print(f"bucket calls: { {b: n for b, n in plans.bucket_calls.items() if n} }")
+        if not args.async_mode:
+            runtime.poll()
+    if stop["flag"]:
+        print("signal received: draining queued requests ...")
+    if args.async_mode:
+        runtime.shutdown(drain=True)
+    else:
+        runtime.drain()
+
+    # "served" comes from the metrics: collecting at the very end can see
+    # fewer results than were served once capacity eviction kicks in (the
+    # oldest uncollected results are dropped by design under heavy traffic)
+    if multi:
+        collected = sum(router.result(name, rid) is not None
+                        for name, rid in rids)
+        served = router.metrics_snapshot()["total"]["served"]
+        print(f"served {served} requests across {args.models} models "
+              f"({collected} collected)")
+        print(router.summary())
+    else:
+        collected = sum(server.result(rid) is not None for _, rid in rids)
+        print(f"served {server.metrics.served} sparse-FFNN requests "
+              f"({collected} collected) — {server.metrics.summary()}")
+        print(f"bucket calls: "
+              f"{ {b: n for b, n in plans.bucket_calls.items() if n} }")
 
 
 def main():
@@ -100,6 +183,14 @@ def main():
     ap.add_argument("--sparse-ffnn", action="store_true",
                     help="serve the paper's sparse-FFNN workload via the "
                          "fused inference engine instead of an LM")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="drive the sparse serving loop from a background "
+                         "scheduler thread (real clock) instead of the "
+                         "step-driven caller loop; SIGTERM drains gracefully")
+    ap.add_argument("--models", type=int, default=1,
+                    help="serve N differently-pruned model variants from "
+                         "one process through a shared-scheduler ModelRouter "
+                         "(sparse-ffnn only)")
     ap.add_argument("--ffnn-sizes", type=int, nargs="+",
                     default=[1024, 4096, 1024])
     ap.add_argument("--density", type=float, default=0.1)

@@ -7,23 +7,30 @@ The production-shaped half of the paper's compile-once/run-many split:
     store = PlanStore("plans/")                       # persistent plan cache
     plans = BucketedPlanSet.compile(layers, engine=engine,
                                     max_batch=32, plan_store=store)
-    server = SparseServer(plans, slo_ms=50.0)
+    server = SparseServer(plans, slo_ms=50.0, engine=engine,
+                          plan_store=store)
+    server.start()                                    # async scheduler thread
     rid = server.submit(x)                            # admission + queueing
-    server.poll()                                     # wait-or-fire batches
-    y = server.result(rid)
+    y = server.wait(rid)                              # Future-style result
+    server.swap(new_layers)                           # plan hot-swap
+    server.shutdown()                                 # drain + join
     print(server.metrics.summary())
 
-See ``docs/serving.md`` for the bucketing policy, the SLO scheduler, and
-the plan-store layout.
+Step-driven mode (no ``start()``: drive ``poll()``/``drain()`` yourself,
+collect with ``result(rid)``) is the deterministic test path; ``ModelRouter``
+serves several named plan sets through one shared scheduler.  See
+``docs/serving.md`` for the bucketing policy, the SLO scheduler, the
+threading model, swap semantics, and the plan-store layout.
 """
 
 from .bucketing import BucketedPlanSet, bucket_sizes
 from .metrics import ServingMetrics, percentile
 from .plancache import PlanStore, layers_fingerprint, plan_cache_key
-from .server import Request, SparseServer
+from .server import ModelRouter, Request, SparseServer
 
 __all__ = [
     "BucketedPlanSet",
+    "ModelRouter",
     "PlanStore",
     "Request",
     "ServingMetrics",

@@ -21,6 +21,7 @@ reference — the only thing compiled per bucket is the jitted dispatch.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -55,6 +56,8 @@ class BucketedPlanSet:
     plans: Dict[int, AnyPlan]
     cache_hit: bool = False           # True when the base plan came warm
     bucket_calls: Dict[int, int] = dataclasses.field(default_factory=dict)
+    warmup_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    compile_s: float = 0.0            # wall time of the compile/store lookup
 
     @classmethod
     def compile(
@@ -80,6 +83,7 @@ class BucketedPlanSet:
         difference, so the fan-out code is one path.
         """
         engine = engine or Engine()
+        t0 = time.perf_counter()
         if plan_store is not None:
             base, hit = plan_store.get_or_compile(engine, net, backend,
                                                   mesh=mesh)
@@ -88,7 +92,8 @@ class BucketedPlanSet:
         sizes = bucket_sizes(max_batch)
         plans = {b: base.with_fresh_forward(jit=engine.jit) for b in sizes}
         return cls(base=base, buckets=sizes, plans=plans, cache_hit=hit,
-                   bucket_calls={b: 0 for b in sizes})
+                   bucket_calls={b: 0 for b in sizes},
+                   compile_s=time.perf_counter() - t0)
 
     @property
     def max_batch(self) -> int:
@@ -102,6 +107,13 @@ class BucketedPlanSet:
     def n_out(self) -> int:
         return self.base.n_out
 
+    @property
+    def dtype(self) -> np.dtype:
+        """The dtype every bucket was traced with; inputs are cast to it
+        before padding, so a client sending e.g. float64 never forces a
+        second jit program per bucket."""
+        return self.base.dtype
+
     def bucket_for(self, n: int) -> int:
         """Smallest bucket that fits ``n`` rows (the largest one if none)."""
         if n < 1:
@@ -111,12 +123,20 @@ class BucketedPlanSet:
                 return b
         return self.max_batch
 
-    def warmup(self, dtype=np.float32) -> "BucketedPlanSet":
-        """Trace every bucket ahead of traffic (one zero batch each), so no
-        request ever pays jit time.  Warmup calls are not counted."""
+    def warmup(self, dtype=None) -> "BucketedPlanSet":
+        """Trace every bucket ahead of traffic, so no request ever pays jit
+        time.  Each bucket then runs one *timed* post-trace batch, recorded
+        in ``warmup_s[bucket]`` — the per-bucket execution-latency seed the
+        server's deadline estimator starts from (without it the deadline
+        clause is dead until the first real batch completes).  Warmup calls
+        are not counted."""
+        dtype = self.dtype if dtype is None else dtype
         for b in self.buckets:
-            y = self.plans[b](np.zeros((b, self.n_in), dtype))
-            np.asarray(y)  # block until the trace + run completes
+            x = np.zeros((b, self.n_in), dtype)
+            np.asarray(self.plans[b](x))   # block until the trace completes
+            t0 = time.perf_counter()
+            np.asarray(self.plans[b](x))   # steady-state execution latency
+            self.warmup_s[b] = time.perf_counter() - t0
             self.plans[b].calls = 0
         return self
 
@@ -127,6 +147,11 @@ class BucketedPlanSet:
         if x.ndim != 2 or x.shape[1] != self.n_in:
             raise ValueError(
                 f"expected input [n, {self.n_in}], got {tuple(x.shape)}")
+        if x.dtype != self.dtype:
+            # cast BEFORE bucket padding: a caller dtype that differs from
+            # the traced one (float64 clients, say) would otherwise lower a
+            # second program per bucket and defeat warmup()
+            x = x.astype(self.dtype)
         n = x.shape[0]
         if n > self.max_batch:
             parts = [self(x[i:i + self.max_batch])

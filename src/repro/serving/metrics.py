@@ -32,23 +32,37 @@ class ServingMetrics:
     padded_rows: int = 0
     batched_rows: int = 0
     deadline_misses: int = 0
+    results_evicted: int = 0
+    batch_failures: int = 0
+    failed_requests: int = 0
+    swaps: int = 0
+    swap_hits: int = 0
     latency_s: List[float] = dataclasses.field(default_factory=list)
     queue_wait_s: List[float] = dataclasses.field(default_factory=list)
     exec_s: List[float] = dataclasses.field(default_factory=list)
+    swap_compile_s: List[float] = dataclasses.field(default_factory=list)
     queue_depth: List[int] = dataclasses.field(default_factory=list)
     batch_sizes: List[int] = dataclasses.field(default_factory=list)
     bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    max_queue_depth: int = 0
     t_first: Optional[float] = None
     t_last: Optional[float] = None
 
     # ------------------------------------------------------------------ #
     def record_submit(self, now: float, depth: int, admitted: bool) -> None:
+        """One submit.  ``depth`` is the queue depth the request OBSERVED on
+        arrival (before any enqueue) — one convention for admitted and
+        rejected submits, so the ``queue_depth`` series is comparable across
+        both.  ``max_queue_depth`` separately tracks the depth *attained*:
+        an admitted request deepens the queue to ``depth + 1``."""
         if self.t_first is None:
             self.t_first = now
         if admitted:
             self.admitted += 1
+            self.max_queue_depth = max(self.max_queue_depth, depth + 1)
         else:
             self.rejected += 1
+            self.max_queue_depth = max(self.max_queue_depth, depth)
         self.queue_depth.append(depth)
 
     def record_batch(self, now: float, n: int, bucket: int, exec_s: float,
@@ -66,6 +80,29 @@ class ServingMetrics:
             self.latency_s.append(w + exec_s)
         self.t_last = now
 
+    def record_batch_failure(self, now: float, n: int) -> None:
+        """One batch whose plan execution raised: its ``n`` requests were
+        consumed (slots complete as None) but not served."""
+        self.batch_failures += 1
+        self.failed_requests += n
+        self.t_last = now
+
+    def record_result_evictions(self, n: int) -> None:
+        """``n`` finished results dropped before the caller collected them
+        (capacity/TTL eviction — see ``SparseServer`` result retention)."""
+        self.results_evicted += n
+
+    def record_swap(self, now: float, compile_s: float,
+                    cache_hit: bool) -> None:
+        """One plan hot-swap: the off-path compile (or plan-store hit) that
+        produced the swapped-in plan set."""
+        self.swaps += 1
+        if cache_hit:
+            self.swap_hits += 1
+        self.swap_compile_s.append(compile_s)
+        # deliberately NOT touching t_first/t_last: a pre-traffic swap must
+        # not stretch the serving span throughput_rps is computed over
+
     # ------------------------------------------------------------------ #
     def snapshot(self) -> dict:
         span = 0.0
@@ -77,6 +114,15 @@ class ServingMetrics:
             "served": self.served,
             "batches": self.batches,
             "deadline_misses": self.deadline_misses,
+            "results_evicted": self.results_evicted,
+            "batch_failures": self.batch_failures,
+            "failed_requests": self.failed_requests,
+            "swaps": self.swaps,
+            "swap_hits": self.swap_hits,
+            "swap_compile_ms": {
+                "p50": 1e3 * percentile(self.swap_compile_s, 50),
+                "p99": 1e3 * percentile(self.swap_compile_s, 99),
+            },
             "throughput_rps": self.served / span if span > 0 else 0.0,
             "latency_ms": {
                 "p50": 1e3 * percentile(self.latency_s, 50),
@@ -92,7 +138,7 @@ class ServingMetrics:
             },
             "mean_batch_size": (sum(self.batch_sizes) / self.batches
                                 if self.batches else 0.0),
-            "max_queue_depth": max(self.queue_depth, default=0),
+            "max_queue_depth": self.max_queue_depth,
             "padding_fraction": (self.padded_rows / self.batched_rows
                                  if self.batched_rows else 0.0),
             "bucket_hist": {str(k): v

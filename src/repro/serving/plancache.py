@@ -34,6 +34,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -113,6 +114,19 @@ class PlanStore:
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        # per-key in-process compile locks: two threads warm-starting the
+        # same network (e.g. concurrent SparseServer.swap calls) serialize
+        # on the key, so the loser hits the entry the winner just wrote
+        # instead of paying the annealing a second time
+        self._locks_mu = threading.Lock()
+        self._key_locks: dict = {}
+
+    def _key_lock(self, key: str) -> threading.Lock:
+        with self._locks_mu:
+            lock = self._key_locks.get(key)
+            if lock is None:
+                lock = self._key_locks[key] = threading.Lock()
+            return lock
 
     def path_for(self, key: str) -> str:
         return os.path.join(self.root, f"plan_{key}")
@@ -269,10 +283,14 @@ class PlanStore:
         Hit: rebuilt from the stored order(s), zero annealer iterations.
         Miss: full ``Engine.compile`` (schedule + CR — per shard when a
         ``mesh`` is given), then persisted so the next process is warm.
+
+        Thread-safe: concurrent callers with the same key serialize on a
+        per-key lock, so at most one of them pays the compile.
         """
-        plan = self.load(engine, net, backend, mesh=mesh)
-        if plan is not None:
-            return plan, True
-        plan = engine.compile(net, backend, mesh=mesh)
-        self.put(engine, plan)
-        return plan, False
+        with self._key_lock(plan_cache_key(engine, net, mesh)):
+            plan = self.load(engine, net, backend, mesh=mesh)
+            if plan is not None:
+                return plan, True
+            plan = engine.compile(net, backend, mesh=mesh)
+            self.put(engine, plan)
+            return plan, False

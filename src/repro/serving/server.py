@@ -11,27 +11,52 @@ SLO:
   * **wait-or-fire** — a batch fires when it is full (``max_batch`` rows),
     when the oldest request has waited ``max_wait_s`` (don't trade the
     whole SLO for batching efficiency), or when the oldest request's
-    deadline minus the EWMA batch latency says firing any later would miss
-    it;
+    deadline minus the per-bucket EWMA batch latency says firing any later
+    would miss it;
   * **bucket routing** — a fired batch of n rows runs through the smallest
     plan bucket >= n, so tail batches stop paying full-bucket latency.
 
-The clock is injected (default ``time.monotonic``): tests drive virtual
-time deterministically through the same code path production runs.
+The server runs in one of two modes over the SAME scheduling code:
+
+  * **step-driven** (default) — the caller drives ``step``/``poll``/
+    ``drain`` explicitly; with an injected ``clock`` this is fully
+    deterministic, and it is the path every scheduling rule is tested on;
+  * **async** — ``start()`` spawns a background scheduler thread that
+    drives the identical wait-or-fire policy against the real clock while
+    any number of caller threads ``submit`` concurrently.  ``wait(rid)``
+    blocks on a per-request event; ``shutdown()`` drains the queue and
+    joins the thread.
+
+``swap(net)`` hot-swaps the served plan set: the new plans compile (or
+plan-store-hit) OFF the serving path, then install atomically between
+batches — an in-flight batch keeps the old plan set by reference, so no
+batch ever sees mixed weights and no request is dropped.
+
+``ModelRouter`` serves several named plan sets (differently-sparse models,
+optionally sharded) from one process: per-model queues and metrics, one
+shared scheduler thread.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from .bucketing import BucketedPlanSet
 from .metrics import ServingMetrics
+
+# the async scheduler's idle tick: an upper bound on how long the loop
+# sleeps when nothing says when the policy could next change state
+_IDLE_WAIT_S = 0.05
+# lower bound on a computed sleep so a deadline a few ns away cannot
+# degenerate into a spin loop
+_MIN_WAIT_S = 1e-4
 
 
 @dataclasses.dataclass
@@ -40,6 +65,23 @@ class Request:
     x: np.ndarray                 # [n_in] feature vector
     t_submit: float
     deadline: Optional[float]     # absolute clock time, or None
+
+
+class _Slot:
+    """Per-request result slot: the finished row + a lazily-created
+    completion event (allocated only when a caller actually blocks in
+    ``wait`` — poll-style callers never pay for it).  ``waiters`` counts
+    threads currently blocked in ``wait``: a slot someone is actively
+    collecting is exempt from capacity/TTL eviction."""
+
+    __slots__ = ("event", "value", "t_done", "done", "waiters")
+
+    def __init__(self):
+        self.event: Optional[threading.Event] = None
+        self.value: Optional[np.ndarray] = None
+        self.t_done: Optional[float] = None
+        self.done = False
+        self.waiters = 0
 
 
 class SparseServer:
@@ -55,6 +97,18 @@ class SparseServer:
         (default ``slo_ms / 4`` — batching may spend at most a quarter of
         the SLO budget on waiting).
       clock: monotonic time source; injectable for deterministic tests.
+      result_capacity: finished results retained for collection; beyond it
+        the OLDEST uncollected result is evicted (and counted in
+        ``metrics.results_evicted``), so a caller that never polls cannot
+        leak every response ever served.
+      result_ttl_s: optional age bound on uncollected results (evaluated
+        against the injected clock on every insert/submit).
+      engine / plan_store / backend / mesh: the compile settings
+        ``swap(net)`` uses to build the replacement plan set; only needed
+        when hot-swap by network (rather than by prebuilt plans) is used.
+
+    All public methods are thread-safe; plan execution itself runs outside
+    the lock, so submits are never blocked behind a running batch.
     """
 
     def __init__(
@@ -65,6 +119,12 @@ class SparseServer:
         slo_ms: float = 50.0,
         max_wait_ms: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        result_capacity: int = 4096,
+        result_ttl_s: Optional[float] = None,
+        engine=None,
+        plan_store=None,
+        backend: Optional[str] = None,
+        mesh=None,
     ):
         self.plans = plans
         self.max_batch = max_batch or plans.max_batch
@@ -77,11 +137,30 @@ class SparseServer:
         self.max_wait_s = (max_wait_ms / 1e3 if max_wait_ms is not None
                            else self.slo_s / 4.0)
         self.clock = clock
+        self.result_capacity = result_capacity
+        self.result_ttl_s = result_ttl_s
         self.metrics = ServingMetrics()
+        self._engine = engine
+        self._plan_store = plan_store
+        self._backend = backend
+        self._mesh = mesh
         self._queue: deque = deque()
-        self._results: Dict[int, np.ndarray] = {}
+        self._results: Dict[int, _Slot] = {}
+        # finished-and-uncollected rids in completion order (t_done
+        # ascending): capacity eviction pops the front, the TTL sweep stops
+        # at the first unexpired entry — both O(evicted), never O(live)
+        self._done: "OrderedDict[int, float]" = OrderedDict()
         self._rid = itertools.count()
-        self._lat_ewma: Optional[float] = None
+        # per-bucket execution-latency EWMAs, seeded from warmup() timings
+        # when available — so the deadline clause is live from the very
+        # first request instead of dead until the first batch completes
+        self._lat_ewma: Dict[int, float] = dict(plans.warmup_s)
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._closed = False
+        self._drain_on_stop = True
 
     # ------------------------------------------------------------------ #
     # admission
@@ -89,35 +168,173 @@ class SparseServer:
     def submit(self, x, deadline_ms: Optional[float] = None) -> Optional[int]:
         """Enqueue one request.  Returns its id, or None when the queue is
         full (admission control — the caller sheds load instead of queueing
-        unboundedly past the SLO)."""
-        now = self.clock()
-        if len(self._queue) >= self.max_queue:
-            self.metrics.record_submit(now, len(self._queue), admitted=False)
-            return None
-        rid = next(self._rid)
-        deadline = now + (deadline_ms / 1e3 if deadline_ms is not None
-                          else self.slo_s)
-        self._queue.append(Request(rid=rid, x=np.asarray(x),
-                                   t_submit=now, deadline=deadline))
-        self.metrics.record_submit(now, len(self._queue), admitted=True)
+        unboundedly past the SLO) or the server has shut down.  A wrong-shape
+        input raises HERE, in the submitting thread — it must never reach
+        batch formation, where it would poison every request in its batch."""
+        rid, _ = self._submit(x, deadline_ms)
         return rid
+
+    def _submit(self, x, deadline_ms: Optional[float] = None
+                ) -> "tuple[Optional[int], bool]":
+        """``(rid, wake)`` — ``wake`` is True when this submit changed the
+        scheduler's decision state: the queue just became non-empty (a
+        sleeping scheduler may be on its idle tick) or just reached a full
+        batch (fire now).  Any other submit leaves the head request — and so
+        the wait-or-fire timeout a scheduler is already sleeping on —
+        unchanged.  Computed atomically under the lock so a shared-scheduler
+        caller (``ModelRouter``) cannot miss the transition."""
+        x = np.asarray(x)
+        if x.shape != (self.plans.n_in,):
+            raise ValueError(
+                f"expected input [{self.plans.n_in}], got {tuple(x.shape)}")
+        now = self.clock()
+        with self._cv:
+            self._evict_expired(now)
+            depth = len(self._queue)
+            if self._closed or depth >= self.max_queue:
+                self.metrics.record_submit(now, depth, admitted=False)
+                return None, False
+            rid = next(self._rid)
+            deadline = now + (deadline_ms / 1e3 if deadline_ms is not None
+                              else self.slo_s)
+            self._queue.append(Request(rid=rid, x=x,
+                                       t_submit=now, deadline=deadline))
+            # the result slot exists from admission, so wait(rid) can block
+            # on it before the request is ever picked into a batch
+            self._results[rid] = _Slot()
+            self.metrics.record_submit(now, depth, admitted=True)
+            # wake on any transition that can change the scheduler's
+            # decision or its sleep bound: queue newly non-empty, reached a
+            # full batch, or crossed a bucket boundary (the deadline clause
+            # estimates from the bucket the CURRENT depth routes to, so a
+            # bucket change moves the fire time the scheduler slept on)
+            qlen = depth + 1
+            pmax = self.plans.max_batch
+            wake = (qlen == 1 or qlen == self.max_batch
+                    or (qlen <= pmax
+                        and self.plans.bucket_for(qlen)
+                        != self.plans.bucket_for(max(1, qlen - 1))))
+            if wake:
+                self._cv.notify_all()
+            return rid, wake
 
     @property
     def queue_depth(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
     def result(self, rid: int) -> Optional[np.ndarray]:
-        """Pop a finished request's output (None while still queued)."""
-        return self._results.pop(rid, None)
+        """Pop a finished request's output (None while still queued, or
+        after its uncollected result was evicted)."""
+        with self._lock:
+            slot = self._results.get(rid)
+            if slot is None or not slot.done:
+                return None
+            del self._results[rid]
+            self._done.pop(rid, None)
+            return slot.value
+
+    def wait(self, rid: int, timeout: Optional[float] = None
+             ) -> Optional[np.ndarray]:
+        """Block until request ``rid`` finishes, then pop its output.
+        Returns None on timeout (the result stays collectable) or when the
+        result was already collected/evicted.  This is the Future-style
+        collection path for async-mode callers."""
+        with self._lock:
+            slot = self._results.get(rid)
+            if slot is None:
+                return None
+            if slot.event is None:
+                slot.event = threading.Event()
+                if slot.done:
+                    slot.event.set()
+            slot.waiters += 1
+        finished = False
+        try:
+            finished = slot.event.wait(timeout)
+        finally:
+            # collect in the SAME locked section that drops the waiter
+            # refcount: releasing the count first would open a window where
+            # eviction deletes the served result before we pop it
+            with self._lock:
+                slot.waiters -= 1
+                value = None
+                if finished and slot.done and \
+                        self._results.get(rid) is slot:
+                    del self._results[rid]
+                    self._done.pop(rid, None)
+                    value = slot.value
+        return value
+
+    # ------------------------------------------------------------------ #
+    # result retention
+    # ------------------------------------------------------------------ #
+    def _evict_expired(self, now: float) -> None:
+        """Drop uncollected results past ``result_ttl_s`` (lock held).
+        ``_done`` is ordered by completion time, so the sweep stops at the
+        first unexpired entry — in-flight requests, and slots a ``wait``
+        caller is actively blocked on, are never touched."""
+        if self.result_ttl_s is None:
+            return
+        victims = []
+        for rid, t_done in self._done.items():
+            if now - t_done <= self.result_ttl_s:
+                break
+            if self._results[rid].waiters:
+                continue
+            victims.append(rid)
+        for rid in victims:
+            del self._done[rid]
+            del self._results[rid]
+        if victims:
+            self.metrics.record_result_evictions(len(victims))
+
+    def _evict_over_capacity(self) -> None:
+        """Drop the oldest FINISHED results beyond capacity (lock held).
+        In-flight slots don't count against the cap; slots with an active
+        ``wait`` caller are skipped — a served result must never turn into
+        a None for a thread already blocked on collecting it."""
+        need = len(self._done) - self.result_capacity
+        if need <= 0:
+            return
+        victims = []
+        for rid in self._done:         # oldest first; stops after `need`
+            if need <= 0:
+                break
+            if self._results[rid].waiters:
+                continue
+            victims.append(rid)
+            need -= 1
+        for rid in victims:
+            del self._done[rid]
+            del self._results[rid]
+        if victims:
+            self.metrics.record_result_evictions(len(victims))
 
     # ------------------------------------------------------------------ #
     # scheduling
     # ------------------------------------------------------------------ #
-    def _estimated_batch_s(self) -> float:
-        return self._lat_ewma if self._lat_ewma is not None else 0.0
+    def _estimated_batch_s(self, n: Optional[int] = None) -> float:
+        """EWMA execution-latency estimate for a batch of ``n`` rows (the
+        current queue depth by default), keyed by the bucket it would route
+        to.  A bucket with no observation yet falls back to the most
+        pessimistic known bucket; with no observations at all (no warmup,
+        no batch served) the estimate is 0.0 and the deadline clause stays
+        conservative."""
+        if not self._lat_ewma:
+            return 0.0
+        if n is None:
+            n = max(1, min(len(self._queue), self.max_batch))
+        bucket = self.plans.bucket_for(min(n, self.plans.max_batch))
+        est = self._lat_ewma.get(bucket)
+        return est if est is not None else max(self._lat_ewma.values())
 
     def should_fire(self, now: Optional[float] = None) -> bool:
         """Wait-or-fire policy for the current queue state."""
+        with self._lock:
+            return self._should_fire_locked(now)
+
+    def _should_fire_locked(self, now: Optional[float] = None) -> bool:
         if not self._queue:
             return False
         if len(self._queue) >= self.max_batch:
@@ -131,18 +348,33 @@ class SparseServer:
             return True   # waiting any longer guarantees an SLO miss
         return False
 
+    def _seconds_to_fire_locked(self, now: float) -> float:
+        """How long (at most) until the wait-or-fire policy could flip for
+        the CURRENT queue head — the async loop's sleep bound.  New submits
+        wake the loop through the condition variable regardless."""
+        if not self._queue:
+            return _IDLE_WAIT_S
+        head = self._queue[0]
+        until = head.t_submit + self.max_wait_s - now
+        if head.deadline is not None:
+            until = min(until,
+                        head.deadline - self._estimated_batch_s() - now)
+        return min(_IDLE_WAIT_S, max(_MIN_WAIT_S, until))
+
     def step(self, flush: bool = False) -> int:
         """Fire at most one batch if the policy (or ``flush``) says so.
         Returns the number of requests served."""
-        if not self._queue:
-            return 0
-        if not flush and not self.should_fire():
-            return 0
-        reqs: List[Request] = [
-            self._queue.popleft()
-            for _ in range(min(self.max_batch, len(self._queue)))
-        ]
-        return self._run_batch(reqs)
+        with self._lock:
+            if not self._queue:
+                return 0
+            if not flush and not self._should_fire_locked():
+                return 0
+            reqs: List[Request] = [
+                self._queue.popleft()
+                for _ in range(min(self.max_batch, len(self._queue)))
+            ]
+            plans = self.plans        # snapshot: a swap() between batches
+        return self._run_batch(reqs, plans)
 
     def poll(self) -> int:
         """Fire as many batches as the policy allows right now."""
@@ -157,25 +389,384 @@ class SparseServer:
         """Serve everything queued, ignoring the wait policy (shutdown /
         end-of-trace flush)."""
         served = 0
-        while self._queue:
-            served += self.step(flush=True)
-        return served
+        while True:
+            n = self.step(flush=True)
+            if n == 0:
+                return served
+            served += n
 
     # ------------------------------------------------------------------ #
-    def _run_batch(self, reqs: List[Request]) -> int:
+    # async mode
+    # ------------------------------------------------------------------ #
+    def start(self) -> "SparseServer":
+        """Spawn the background scheduler thread (idempotent).  The thread
+        drives the SAME wait-or-fire policy ``step`` uses, against the real
+        clock, while callers ``submit`` concurrently."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stop.clear()
+            self._closed = False
+            self._drain_on_stop = True
+            self._thread = threading.Thread(
+                target=self._serve_loop, name="sparse-server", daemon=True)
+            self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stop.is_set() and not self._queue:
+                    self._cv.wait(timeout=_IDLE_WAIT_S)
+                if self._stop.is_set() and \
+                        (not self._drain_on_stop or not self._queue):
+                    return
+                timeout = self._seconds_to_fire_locked(self.clock())
+            # execution happens OUTSIDE the lock: submits stay unblocked
+            served = self.step(flush=self._stop.is_set())
+            if served == 0:
+                with self._cv:
+                    # re-check under the cv before sleeping: a notify that
+                    # landed between step() and here (e.g. the queue filling
+                    # to a full batch) would otherwise be lost and the ready
+                    # batch would sleep out the stale timeout
+                    if not self._stop.is_set() and \
+                            not self._should_fire_locked():
+                        self._cv.wait(timeout=timeout)
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the scheduler thread gracefully.  New submits are rejected
+        from this point on.  With ``drain`` (default) every queued request
+        is served before the thread exits — the loop switches to flush
+        mode, and anything it leaves behind is drained synchronously here.
+        With ``drain=False`` the backlog is abandoned: the thread exits
+        immediately, queued requests stay unserved, and their waiters only
+        return on timeout (bad-traffic bailout, not the graceful path)."""
+        with self._cv:
+            self._closed = True
+            self._drain_on_stop = drain
+            self._stop.set()
+            self._cv.notify_all()
+        t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout)
+        if drain:
+            self.drain()
+
+    # ------------------------------------------------------------------ #
+    # plan hot-swap
+    # ------------------------------------------------------------------ #
+    def swap(self, net=None, plans: Optional[BucketedPlanSet] = None,
+             warmup: bool = True) -> BucketedPlanSet:
+        """Hot-swap the served plan set; returns the replaced one.
+
+        Pass ``net`` (a pruned layer stack / ``BlockFFNN`` — the weight
+        update) to compile the replacement through the server's
+        engine/plan-store settings, or a prebuilt ``plans``.  The compile,
+        the plan-store lookup, and the bucket warmup all run OFF the
+        serving path — no lock held, batches keep firing throughout; only
+        the final reference install holds the lock.  A batch snapshots
+        ``self.plans`` when it forms, so an in-flight batch finishes on the
+        plan set it started with: no request is ever dropped or served by
+        mixed weights, and the swapped-in weights take effect on the next
+        batch.
+        """
+        if (net is None) == (plans is None):
+            raise ValueError("swap needs exactly one of net= or plans=")
+        # prebuilt plans= paid their compile long ago (possibly never, in a
+        # ping-pong swap) — only a net= swap charges compile time/hit state
+        # to the swap metrics
+        compile_s, cache_hit = 0.0, True
+        if plans is None:
+            if self._engine is None:
+                raise ValueError(
+                    "swap(net) needs the server constructed with engine= "
+                    "(and optionally plan_store=) to compile the "
+                    "replacement plan set")
+            plans = BucketedPlanSet.compile(
+                net, engine=self._engine, max_batch=self.plans.max_batch,
+                plan_store=self._plan_store, backend=self._backend,
+                mesh=self._mesh)
+            if warmup:
+                plans.warmup()
+            compile_s, cache_hit = plans.compile_s, plans.cache_hit
+        if (plans.n_in, plans.n_out) != (self.plans.n_in, self.plans.n_out):
+            raise ValueError(
+                f"swapped plans change the model shape: "
+                f"{plans.n_in}->{plans.n_out} vs "
+                f"{self.plans.n_in}->{self.plans.n_out}; hot-swap is for "
+                "weight updates — serve a different architecture as its "
+                "own ModelRouter model instead")
+        if plans.max_batch < self.max_batch:
+            raise ValueError(
+                f"swapped plans' top bucket {plans.max_batch} is below the "
+                f"server's max_batch {self.max_batch}")
+        with self._cv:
+            old = self.plans
+            self.plans = plans
+            if plans.warmup_s:
+                self._lat_ewma = dict(plans.warmup_s)
+            self.metrics.record_swap(self.clock(), compile_s, cache_hit)
+            self._cv.notify_all()
+        return old
+
+    # ------------------------------------------------------------------ #
+    def _run_batch(self, reqs: List[Request],
+                   plans: BucketedPlanSet) -> int:
         n = len(reqs)
-        bucket = self.plans.bucket_for(n)
+        bucket = plans.bucket_for(n)
         x = np.stack([r.x for r in reqs])
         t0 = self.clock()
-        y = self.plans(x)
+        try:
+            y = plans(x)
+        except Exception:
+            # a failed batch must not kill the scheduler thread (in router
+            # mode that would stop EVERY model): complete the batch's slots
+            # with None so waiters unblock, count the failure, move on
+            t1 = self.clock()
+            with self._cv:
+                self._finish_slots(reqs, None, t1)
+                self.metrics.record_batch_failure(t1, n)
+            return n
         t1 = self.clock()
         exec_s = t1 - t0
-        self._lat_ewma = (exec_s if self._lat_ewma is None
-                          else 0.5 * self._lat_ewma + 0.5 * exec_s)
         waits = [t0 - r.t_submit for r in reqs]
         misses = sum(1 for r in reqs
                      if r.deadline is not None and t1 > r.deadline)
-        for r, row in zip(reqs, y):
-            self._results[r.rid] = row
-        self.metrics.record_batch(t1, n, bucket, exec_s, waits, misses)
+        with self._cv:
+            if self.plans is plans:
+                # don't let a batch that was in flight across a swap() write
+                # the OLD plans' latency into the estimator the swap seeded
+                prev = self._lat_ewma.get(bucket)
+                self._lat_ewma[bucket] = (exec_s if prev is None
+                                          else 0.5 * prev + 0.5 * exec_s)
+            self._finish_slots(reqs, y, t1)
+            self._evict_expired(t1)
+            self.metrics.record_batch(t1, n, bucket, exec_s, waits, misses)
         return n
+
+    def _finish_slots(self, reqs: List[Request], y, t1: float) -> None:
+        """Complete (and wake) each request's slot — with its output row, or
+        None for a failed batch (lock held)."""
+        for i, r in enumerate(reqs):
+            slot = self._results.get(r.rid)
+            if slot is None:          # collected early / server torn down
+                continue
+            slot.value = None if y is None else y[i]
+            slot.t_done = t1
+            slot.done = True
+            if slot.event is not None:
+                slot.event.set()
+            self._done[r.rid] = t1
+        self._evict_over_capacity()
+
+
+# ---------------------------------------------------------------------- #
+# multi-model serving
+# ---------------------------------------------------------------------- #
+class ModelRouter:
+    """Serve several named :class:`BucketedPlanSet`s from one process.
+
+    Each model gets its own :class:`SparseServer` (queue, admission bound,
+    per-model metrics, hot-swap), but ONE shared scheduler thread drives
+    them all round-robin — the per-model wait-or-fire policies stay exactly
+    the single-model ones, batches never mix models, and a stalled model
+    cannot starve another's admission (only delay its batches by one
+    execution).
+
+    ``submit`` routes by model id; ``swap(model, net)`` hot-swaps one model
+    while the others keep serving.
+    """
+
+    def __init__(self, models: Dict[str, BucketedPlanSet],
+                 clock: Callable[[], float] = time.monotonic,
+                 server_settings: Optional[Dict[str, dict]] = None,
+                 **server_kwargs):
+        """``server_kwargs`` apply to every model's server;
+        ``server_settings[name]`` overlays per-model keyword arguments
+        (e.g. the ``engine=``/``plan_store=``/``mesh=`` swap settings)."""
+        if not models:
+            raise ValueError("ModelRouter needs at least one model")
+        settings = server_settings or {}
+        self.servers: Dict[str, SparseServer] = {
+            name: SparseServer(plans, clock=clock,
+                               **{**server_kwargs, **settings.get(name, {})})
+            for name, plans in models.items()
+        }
+        self.clock = clock
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._drain_on_stop = True
+
+    @classmethod
+    def compile(cls, nets: Dict[str, object], engine=None, max_batch: int = 32,
+                plan_store=None, backend: Optional[str] = None,
+                meshes: Optional[Dict[str, object]] = None,
+                warmup: bool = True, **router_kwargs) -> "ModelRouter":
+        """Compile every named network into a bucketed plan set (one
+        engine compile or plan-store hit each) and route them together.
+        ``meshes`` optionally shards individual models (``{name: Mesh}``).
+        The per-model compile settings are threaded through to each server
+        so ``swap(model, net)`` works out of the box."""
+        models = {}
+        for name, net in nets.items():
+            mesh = (meshes or {}).get(name)
+            plans = BucketedPlanSet.compile(net, engine=engine,
+                                            max_batch=max_batch,
+                                            plan_store=plan_store,
+                                            backend=backend, mesh=mesh)
+            if warmup:
+                plans.warmup()
+            models[name] = plans
+        return cls(models,
+                   server_settings={
+                       name: dict(engine=engine, plan_store=plan_store,
+                                  backend=backend,
+                                  mesh=(meshes or {}).get(name))
+                       for name in models
+                   }, **router_kwargs)
+
+    # ------------------------------------------------------------------ #
+    def _server(self, model: str) -> SparseServer:
+        try:
+            return self.servers[model]
+        except KeyError:
+            raise KeyError(
+                f"unknown model {model!r}; serving "
+                f"{sorted(self.servers)}") from None
+
+    def submit(self, model: str, x,
+               deadline_ms: Optional[float] = None) -> Optional[int]:
+        """Enqueue one request for ``model``; the returned id is scoped to
+        that model (pass the same model to ``result``/``wait``)."""
+        # the wake decision is computed atomically inside the server's lock
+        # (re-deriving it from queue_depth here could miss the empty->
+        # non-empty transition when two submits race) and the router cv is
+        # taken only AFTER the server lock is released — the shared loop
+        # acquires router-then-server, so the reverse order would deadlock
+        rid, wake = self._server(model)._submit(x, deadline_ms)
+        if wake:
+            with self._cv:
+                self._cv.notify_all()
+        return rid
+
+    def result(self, model: str, rid: int) -> Optional[np.ndarray]:
+        return self._server(model).result(rid)
+
+    def wait(self, model: str, rid: int,
+             timeout: Optional[float] = None) -> Optional[np.ndarray]:
+        return self._server(model).wait(rid, timeout)
+
+    def swap(self, model: str, net=None,
+             plans: Optional[BucketedPlanSet] = None,
+             warmup: bool = True) -> BucketedPlanSet:
+        return self._server(model).swap(net, plans=plans, warmup=warmup)
+
+    @property
+    def queue_depth(self) -> int:
+        return sum(s.queue_depth for s in self.servers.values())
+
+    # ------------------------------------------------------------------ #
+    def poll(self) -> int:
+        return sum(s.poll() for s in self.servers.values())
+
+    def drain(self) -> int:
+        return sum(s.drain() for s in self.servers.values())
+
+    def step(self, flush: bool = False) -> int:
+        return sum(s.step(flush=flush) for s in self.servers.values())
+
+    # ------------------------------------------------------------------ #
+    def start(self) -> "ModelRouter":
+        """Spawn the ONE scheduler thread shared by every model."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return self
+            self._stop.clear()
+            self._drain_on_stop = True
+            for s in self.servers.values():
+                s._closed = False
+            self._thread = threading.Thread(
+                target=self._serve_loop, name="model-router", daemon=True)
+            self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def _serve_loop(self) -> None:
+        servers = list(self.servers.values())
+        while True:
+            stopping = self._stop.is_set()
+            if stopping and not self._drain_on_stop:
+                return                 # abandon the backlog (bad-traffic exit)
+            served = sum(s.step(flush=stopping) for s in servers)
+            if stopping and all(s.queue_depth == 0 for s in servers):
+                return
+            if served == 0:
+                now = self.clock()
+                with self._cv:
+                    # each server's fire time is read under ITS lock — a
+                    # concurrent drain()/step() may pop the head between an
+                    # unlocked emptiness check and the head access otherwise.
+                    # If any server became fireable since the step sweep (a
+                    # notify raced the loop), skip the sleep entirely
+                    timeout = _IDLE_WAIT_S
+                    fireable = False
+                    for s in servers:
+                        with s._lock:
+                            if not s._queue:
+                                continue
+                            if s._should_fire_locked(now):
+                                fireable = True
+                                break
+                            timeout = min(
+                                timeout, s._seconds_to_fire_locked(now))
+                    if not fireable and not self._stop.is_set():
+                        self._cv.wait(timeout=timeout)
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Graceful stop: reject new submits, serve everything queued (with
+        ``drain``; ``drain=False`` abandons every model's backlog), join the
+        shared scheduler thread."""
+        for s in self.servers.values():
+            with s._cv:
+                s._closed = True
+        with self._cv:
+            self._drain_on_stop = drain
+            self._stop.set()
+            self._cv.notify_all()
+        t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout)
+        if drain:
+            self.drain()
+
+    # ------------------------------------------------------------------ #
+    def metrics_snapshot(self) -> dict:
+        """Per-model metrics plus process-level totals."""
+        per_model = {name: s.metrics.snapshot()
+                     for name, s in self.servers.items()}
+        total_keys = ("admitted", "rejected", "served", "batches",
+                      "deadline_misses", "results_evicted",
+                      "batch_failures", "failed_requests", "swaps",
+                      "swap_hits")
+        totals = {k: sum(m[k] for m in per_model.values())
+                  for k in total_keys}
+        return {"models": per_model, "total": totals}
+
+    def summary(self) -> str:
+        lines = [f"{name}: {s.metrics.summary()}"
+                 for name, s in self.servers.items()]
+        return "\n".join(lines)

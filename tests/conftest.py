@@ -6,6 +6,28 @@ import pytest
 from repro.sparse import prune_dense_stack
 
 
+class FakeClock:
+    """Manually-advanced virtual clock for the serving scheduler tests
+    (inject as ``SparseServer(clock=...)``; shared by ``test_serving`` and
+    ``test_server_async``)."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "stress: real-thread concurrency stress tests (CI runs these in "
+        "their own lane with -p no:cacheprovider -x)")
+
+
 @pytest.fixture(autouse=True)
 def _deterministic_seeds():
     """Pin the legacy numpy global RNG for any test that touches it.

@@ -1,0 +1,421 @@
+"""The serving-loop race surface: async scheduler, hot-swap, multi-model.
+
+Three properties the async runtime must not lose over the step-driven path:
+
+  * **no request is dropped, duplicated, or corrupted** under concurrent
+    submits — every rid resolves to exactly the row the base plan computes
+    for its input, bit-for-bit (the bucket router is output-transparent,
+    so batch composition cannot show through);
+  * **swap is atomic** — a weight update installs between batches: outputs
+    before/after a swap of identical weights are bit-identical, swapped-in
+    new weights take effect on the next batch, and under concurrent
+    traffic every result matches exactly one of the two weight sets
+    (never a mix);
+  * **models never cross** — a router result always comes from the model
+    the request was submitted to.
+
+The stress tests run the real scheduler thread against the real clock;
+everything else stays deterministic (step-driven, fake clock).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+from conftest import FakeClock
+
+from repro.engine import Engine
+from repro.serving import BucketedPlanSet, ModelRouter, SparseServer
+
+
+@pytest.fixture
+def plans(make_stack):
+    return BucketedPlanSet.compile(
+        make_stack(), engine=Engine(backend="jnp"), max_batch=8).warmup()
+
+
+def _expected_rows(plans, xs):
+    """Ground truth per request: the base plan on each row alone (the
+    bucket router is output-transparent, so any batching must match)."""
+    return [np.asarray(plans.base(x[None]))[0] for x in xs]
+
+
+# --------------------------------------------------------------------------- #
+# async scheduler
+# --------------------------------------------------------------------------- #
+
+def test_async_start_shutdown_idempotent(plans):
+    server = SparseServer(plans, slo_ms=20.0)
+    server.start()
+    assert server.running
+    server.start()                     # idempotent
+    server.shutdown()
+    assert not server.running
+    # post-shutdown submits are rejected, not queued forever
+    assert server.submit(np.zeros(plans.n_in, np.float32)) is None
+    assert server.metrics.rejected == 1
+
+
+def test_async_serves_all_and_drains_on_shutdown(plans):
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal(plans.n_in).astype(np.float32)
+          for _ in range(37)]
+    server = SparseServer(plans, slo_ms=20.0).start()
+    rids = [server.submit(x) for x in xs]
+    assert all(r is not None for r in rids)
+    server.shutdown()                  # drains everything still queued
+    expected = _expected_rows(plans, xs)
+    for rid, want in zip(rids, expected):
+        got = server.result(rid)
+        assert got is not None
+        np.testing.assert_array_equal(got, want)
+    assert server.metrics.served == len(xs)
+    assert server.queue_depth == 0
+
+
+def test_async_wait_blocks_until_result(plans):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(plans.n_in).astype(np.float32)
+    server = SparseServer(plans, slo_ms=10.0).start()
+    try:
+        rid = server.submit(x)
+        got = server.wait(rid, timeout=10.0)
+        assert got is not None
+        np.testing.assert_array_equal(got, _expected_rows(plans, [x])[0])
+        assert server.wait(rid, timeout=0.01) is None   # already collected
+    finally:
+        server.shutdown()
+
+
+@pytest.mark.stress
+def test_async_concurrent_submit_stress(plans):
+    """>= 4 submitter threads against the live scheduler: zero lost,
+    duplicated, or corrupted results."""
+    n_threads, per_thread = 6, 40
+    rng = np.random.default_rng(2)
+    xs = [[rng.standard_normal(plans.n_in).astype(np.float32)
+           for _ in range(per_thread)] for _ in range(n_threads)]
+    server = SparseServer(plans, slo_ms=30.0, max_queue=4096,
+                          result_capacity=n_threads * per_thread).start()
+    collected = [[] for _ in range(n_threads)]
+
+    def client(i):
+        rids = [server.submit(x) for x in xs[i]]
+        for rid in rids:
+            collected[i].append((rid, server.wait(rid, timeout=30.0)))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    server.shutdown()
+
+    all_rids = [rid for per in collected for rid, _ in per]
+    assert len(all_rids) == len(set(all_rids)), "duplicated rids"
+    assert len(all_rids) == n_threads * per_thread, "lost submits"
+    for i in range(n_threads):
+        expected = _expected_rows(plans, xs[i])
+        for (rid, got), want in zip(collected[i], expected):
+            assert got is not None, f"request {rid} lost its result"
+            np.testing.assert_array_equal(got, want)
+    assert server.metrics.served == n_threads * per_thread
+
+
+def test_step_driven_parity_with_async(plans):
+    """The async path must serve byte-identical outputs to the
+    deterministic step-driven path on the same inputs."""
+    rng = np.random.default_rng(3)
+    xs = [rng.standard_normal(plans.n_in).astype(np.float32)
+          for _ in range(23)]
+
+    step_server = SparseServer(plans, slo_ms=50.0)
+    step_rids = [step_server.submit(x) for x in xs]
+    step_server.drain()
+    step_out = [step_server.result(r) for r in step_rids]
+
+    async_server = SparseServer(plans, slo_ms=50.0).start()
+    async_rids = [async_server.submit(x) for x in xs]
+    async_server.shutdown()
+    async_out = [async_server.result(r) for r in async_rids]
+
+    for a, s in zip(async_out, step_out):
+        assert a is not None and s is not None
+        np.testing.assert_array_equal(a, s)
+
+
+def test_submit_rejects_wrong_shape_in_caller_thread(plans):
+    """A malformed input raises at submit() — in the submitting thread —
+    and can never reach batch formation, where it would poison its whole
+    batch (and, async, kill the scheduler thread)."""
+    server = SparseServer(plans, clock=FakeClock())
+    with pytest.raises(ValueError, match="expected input"):
+        server.submit(np.zeros(plans.n_in + 1, np.float32))
+    with pytest.raises(ValueError, match="expected input"):
+        server.submit(np.zeros((1, plans.n_in), np.float32))
+    assert server.queue_depth == 0
+
+
+def test_failed_batch_does_not_kill_serving(plans):
+    """If plan execution itself raises, the batch's requests complete as
+    None (waiters unblock), the failure is counted, and the server keeps
+    serving subsequent batches."""
+
+    class Boom:
+        def __init__(self, inner):
+            self._inner = inner
+            self.fuses = 1                      # first call raises
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def __call__(self, x):
+            if self.fuses:
+                self.fuses -= 1
+                raise RuntimeError("injected batch failure")
+            return self._inner(x)
+
+    server = SparseServer(plans, clock=FakeClock())
+    server.plans = Boom(plans)
+    bad = server.submit(np.zeros(plans.n_in, np.float32))
+    server.drain()                              # failing batch is contained
+    assert server.result(bad) is None
+    assert server.metrics.batch_failures == 1
+    assert server.metrics.failed_requests == 1
+    ok = server.submit(np.ones(plans.n_in, np.float32))
+    server.drain()                              # next batch serves normally
+    assert server.result(ok) is not None
+    assert server.metrics.served == 1
+
+
+def test_active_waiter_exempt_from_capacity_eviction(plans):
+    """A thread already blocked in wait(rid) must receive its served
+    result even when capacity eviction fires in the same batch."""
+    server = SparseServer(plans, max_batch=8, slo_ms=1e6, max_wait_ms=1e6,
+                          result_capacity=0)
+    rid0 = server.submit(np.ones(plans.n_in, np.float32))
+    rid1 = server.submit(np.zeros(plans.n_in, np.float32))
+    got = {}
+
+    def waiter():
+        got["y"] = server.wait(rid0, timeout=10.0)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    while server._results[rid0].waiters == 0:   # waiter registered
+        pass
+    server.drain()
+    t.join(timeout=15.0)
+    assert got["y"] is not None                 # waited-on result survived
+    assert server.result(rid1) is None          # unclaimed one was evicted
+    assert server.metrics.results_evicted == 1
+
+
+def test_shutdown_without_drain_abandons_backlog(plans):
+    server = SparseServer(plans, slo_ms=1e6, max_wait_ms=1e6).start()
+    rids = [server.submit(np.zeros(plans.n_in, np.float32))
+            for _ in range(3)]
+    server.shutdown(drain=False)
+    assert not server.running
+    # backlog abandoned: nothing more is served, waiters just time out
+    assert server.metrics.served + server.queue_depth == 3
+    if server.queue_depth:
+        assert server.wait(rids[-1], timeout=0.05) is None
+
+
+# --------------------------------------------------------------------------- #
+# plan hot-swap
+# --------------------------------------------------------------------------- #
+
+def test_swap_identical_weights_bit_identity(plans, make_stack):
+    """Swapping in a plan compiled from the SAME weights must not change a
+    single bit of any output."""
+    engine = Engine(backend="jnp")
+    server = SparseServer(plans, slo_ms=50.0, engine=engine)
+    rng = np.random.default_rng(4)
+    xs = [rng.standard_normal(plans.n_in).astype(np.float32)
+          for _ in range(5)]
+
+    old = server.swap(make_stack())    # same seed => identical weights
+    assert old is plans
+    assert server.metrics.swaps == 1
+
+    rids = [server.submit(x) for x in xs]
+    server.drain()
+    after = [server.result(r) for r in rids]
+    for b, a in zip(_expected_rows(plans, xs), after):
+        np.testing.assert_array_equal(b, a)
+
+
+def test_swap_new_weights_take_effect_next_batch(plans, make_stack):
+    engine = Engine(backend="jnp")
+    server = SparseServer(plans, slo_ms=50.0, engine=engine)
+    new_net = make_stack(seed=99)      # genuinely different weights
+    new_plans = BucketedPlanSet.compile(new_net, engine=engine, max_batch=8)
+
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal(plans.n_in).astype(np.float32)
+    server.swap(new_net)
+    rid = server.submit(x)
+    server.drain()
+    got = server.result(rid)
+    want_new = np.asarray(new_plans.base(x[None]))[0]
+    want_old = _expected_rows(plans, [x])[0]
+    np.testing.assert_array_equal(got, want_new)
+    assert not np.array_equal(got, want_old)
+
+
+def test_swap_queued_requests_not_dropped(plans, make_stack):
+    """Requests queued across a swap are all served (by the new plans)."""
+    server = SparseServer(plans, slo_ms=1e6, max_wait_ms=1e6,
+                          clock=FakeClock(), engine=Engine(backend="jnp"))
+    rng = np.random.default_rng(6)
+    xs = [rng.standard_normal(plans.n_in).astype(np.float32)
+          for _ in range(5)]
+    rids = [server.submit(x) for x in xs]
+    assert server.queue_depth == 5
+    server.swap(make_stack(seed=99))
+    assert server.queue_depth == 5     # nothing dropped by the swap
+    server.drain()
+    assert all(server.result(r) is not None for r in rids)
+
+
+def test_swap_rejects_shape_change(plans, make_stack):
+    server = SparseServer(plans, engine=Engine(backend="jnp"))
+    with pytest.raises(ValueError, match="shape"):
+        server.swap(make_stack(sizes=(64, 64)))
+    with pytest.raises(ValueError, match="exactly one"):
+        server.swap()
+    with pytest.raises(ValueError, match="engine"):
+        SparseServer(plans).swap(make_stack())
+
+
+@pytest.mark.stress
+def test_swap_atomic_under_concurrent_traffic(plans, make_stack):
+    """Repeated hot-swaps between two weight sets while clients hammer the
+    server: every result must match exactly one of the two weight sets —
+    a batch that saw mixed weights would match neither."""
+    engine = Engine(backend="jnp")
+    net_b = make_stack(seed=99)
+    plans_b = BucketedPlanSet.compile(net_b, engine=engine,
+                                      max_batch=8).warmup()
+    server = SparseServer(plans, slo_ms=30.0, max_queue=4096,
+                          result_capacity=4096, engine=engine).start()
+
+    rng = np.random.default_rng(7)
+    xs = [rng.standard_normal(plans.n_in).astype(np.float32)
+          for _ in range(120)]
+    want_a = _expected_rows(plans, xs)
+    want_b = [np.asarray(plans_b.base(x[None]))[0] for x in xs]
+
+    results = {}
+
+    def client(lo, hi):
+        for i in range(lo, hi):
+            rid = server.submit(xs[i])
+            results[i] = (rid, server.wait(rid, timeout=30.0))
+
+    clients = [threading.Thread(target=client, args=(i * 30, (i + 1) * 30))
+               for i in range(4)]
+
+    def swapper():
+        for k in range(6):
+            server.swap(plans=plans_b if k % 2 == 0 else plans)
+
+    sw = threading.Thread(target=swapper)
+    for t in clients + [sw]:
+        t.start()
+    for t in clients + [sw]:
+        t.join(timeout=60.0)
+    server.shutdown()
+
+    assert server.metrics.swaps == 6
+    for i, (rid, got) in results.items():
+        assert got is not None, f"request {i} lost under swap traffic"
+        ok_a = np.array_equal(got, want_a[i])
+        ok_b = np.array_equal(got, want_b[i])
+        assert ok_a or ok_b, \
+            f"request {i} matches NEITHER weight set: mixed-weight batch"
+
+
+# --------------------------------------------------------------------------- #
+# multi-model routing
+# --------------------------------------------------------------------------- #
+
+def test_router_routes_by_model_step_driven(make_stack):
+    engine = Engine(backend="jnp")
+    router = ModelRouter.compile(
+        {"a": make_stack(seed=0), "b": make_stack(seed=99)},
+        engine=engine, max_batch=8, clock=FakeClock())
+    rng = np.random.default_rng(8)
+    xs = [rng.standard_normal(router.servers["a"].plans.n_in)
+          .astype(np.float32) for _ in range(9)]
+    rids = [(name, router.submit(name, x))
+            for x, name in zip(xs, "abab abab a".replace(" ", ""))]
+    router.drain()
+    for (name, rid), x in zip(rids, xs):
+        got = router.result(name, rid)
+        want = np.asarray(router.servers[name].plans.base(x[None]))[0]
+        np.testing.assert_array_equal(got, want)
+    snap = router.metrics_snapshot()
+    assert snap["models"]["a"]["served"] == 5
+    assert snap["models"]["b"]["served"] == 4
+    assert snap["total"]["served"] == 9
+    with pytest.raises(KeyError, match="unknown model"):
+        router.submit("nope", xs[0])
+
+
+@pytest.mark.stress
+def test_router_async_no_cross_model_mixing(make_stack):
+    """Concurrent clients of two differently-pruned models through ONE
+    scheduler thread: every result comes from the right model."""
+    engine = Engine(backend="jnp")
+    nets = {"a": make_stack(seed=0), "b": make_stack(seed=99)}
+    router = ModelRouter.compile(nets, engine=engine, max_batch=8,
+                                 slo_ms=30.0, max_queue=4096).start()
+    rng = np.random.default_rng(9)
+    n_in = router.servers["a"].plans.n_in
+    xs = {m: [rng.standard_normal(n_in).astype(np.float32)
+              for _ in range(40)] for m in nets}
+    want = {m: [np.asarray(router.servers[m].plans.base(x[None]))[0]
+                for x in xs[m]] for m in nets}
+    got = {m: [] for m in nets}         # (input index, result) pairs
+
+    def client(model):
+        rids = [(i, router.submit(model, x))
+                for i, x in enumerate(xs[model])]
+        for i, rid in rids:
+            got[model].append((i, router.wait(model, rid, timeout=30.0)))
+
+    threads = [threading.Thread(target=client, args=(m,))
+               for m in nets for _ in range(2)]   # two clients per model
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    router.shutdown()
+
+    other = {"a": "b", "b": "a"}
+    for m in nets:
+        assert len(got[m]) == 80
+        for i, g in got[m]:
+            assert g is not None, f"{m}[{i}] lost"
+            np.testing.assert_array_equal(g, want[m][i])
+            # the two models genuinely disagree on these inputs, so a
+            # cross-model mix-up could not have produced this row
+            assert not np.array_equal(g, want[other[m]][i])
+    snap = router.metrics_snapshot()
+    assert snap["total"]["served"] == 160
+
+
+def test_router_swap_one_model_keeps_other(make_stack):
+    engine = Engine(backend="jnp")
+    router = ModelRouter.compile(
+        {"a": make_stack(seed=0), "b": make_stack(seed=99)},
+        engine=engine, max_batch=8, clock=FakeClock())
+    plans_b_before = router.servers["b"].plans
+    router.swap("a", make_stack(seed=7))
+    assert router.servers["b"].plans is plans_b_before
+    assert router.servers["a"].metrics.swaps == 1
+    assert router.servers["b"].metrics.swaps == 0

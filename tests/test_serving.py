@@ -7,6 +7,7 @@ injected clock — every wait-or-fire rule is driven through virtual time.
 
 import numpy as np
 import pytest
+from conftest import FakeClock
 
 from repro.engine import Engine
 from repro.serving import (
@@ -16,17 +17,6 @@ from repro.serving import (
     bucket_sizes,
     percentile,
 )
-
-
-class FakeClock:
-    def __init__(self, t=0.0):
-        self.t = t
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, dt):
-        self.t += dt
 
 
 @pytest.fixture
@@ -159,7 +149,7 @@ def test_fire_before_deadline_breach(plans):
     clock = FakeClock()
     server = SparseServer(plans, max_batch=8, slo_ms=1000.0,
                           max_wait_ms=1000.0, clock=clock)
-    server._lat_ewma = 0.010           # as if batches take 10 ms
+    server._lat_ewma[1] = 0.010        # as if 1-row batches take 10 ms
     server.submit(np.zeros(plans.n_in, np.float32), deadline_ms=15.0)
     assert not server.should_fire()    # 15 ms budget > 10 ms estimate: wait
     clock.advance(0.006)
@@ -186,6 +176,120 @@ def test_drain_serves_everything(plans):
     assert server.poll() == 8          # one full batch fires, 5 wait
     assert server.drain() == 5
     assert all(server.result(r) is not None for r in rids)
+
+
+def test_bucketed_call_casts_to_plan_dtype_no_retrace(make_stack):
+    """A float64 client must NOT lower a second program per bucket: inputs
+    are cast to the plan dtype before bucket padding.  The Python-callable
+    activation runs once per layer per trace, so it counts traces."""
+    traces = {"n": 0}
+
+    def act(x):
+        traces["n"] += 1
+        import jax.numpy as jnp
+        return jnp.maximum(x, 0)
+
+    plans = BucketedPlanSet.compile(
+        make_stack(), engine=Engine(backend="jnp", activation=act),
+        max_batch=4)
+    assert plans.dtype == np.float32
+    plans.warmup()
+    warm_traces = traces["n"]
+    assert warm_traces > 0
+
+    rng = np.random.default_rng(7)
+    # float16 retraces unconditionally without the cast; float64 does too
+    # whenever jax_enable_x64 is on (and costs a canonicalization otherwise)
+    x64 = rng.standard_normal((3, plans.n_in))          # float64 client
+    y64 = plans(x64)
+    assert traces["n"] == warm_traces, "float64 input retraced a bucket"
+    x16 = x64.astype(np.float16)
+    plans(x16)
+    assert traces["n"] == warm_traces, "float16 input retraced a bucket"
+    y32 = plans(x64.astype(np.float32))
+    assert traces["n"] == warm_traces
+    np.testing.assert_array_equal(y64, y32)
+
+
+def test_warmup_seeds_per_bucket_latency(plans):
+    assert plans.warmup_s == {}
+    plans.warmup()
+    assert set(plans.warmup_s) == set(plans.buckets)
+    assert all(t > 0 for t in plans.warmup_s.values())
+    # a server built on warmed plans has a live latency estimate (and so a
+    # live deadline clause) BEFORE any batch has completed
+    server = SparseServer(plans, clock=FakeClock())
+    est = server._estimated_batch_s(1)
+    assert est > 0
+    # a deadline tighter than the estimate fires immediately on submit —
+    # the cold-start SLO hole this seeding closes
+    server.submit(np.zeros(plans.n_in, np.float32),
+                  deadline_ms=est * 1e3 / 2)
+    assert server.should_fire()
+
+
+def test_cold_server_without_warmup_estimates_zero(plans):
+    server = SparseServer(plans, clock=FakeClock())
+    assert server._estimated_batch_s(1) == 0.0
+
+
+def test_result_capacity_eviction(plans):
+    """Never-collected results are bounded: oldest finished results are
+    evicted beyond result_capacity and counted."""
+    clock = FakeClock()
+    server = SparseServer(plans, max_batch=1, clock=clock,
+                          result_capacity=3)
+    rids = [server.submit(np.zeros(plans.n_in, np.float32))
+            for _ in range(8)]
+    server.drain()
+    assert server.metrics.served == 8
+    assert server.metrics.results_evicted == 5
+    # the oldest five are gone, the newest three still collectable
+    assert all(server.result(r) is None for r in rids[:5])
+    assert all(server.result(r) is not None for r in rids[5:])
+
+
+def test_result_ttl_eviction(plans):
+    clock = FakeClock()
+    server = SparseServer(plans, clock=clock, result_ttl_s=1.0)
+    rid = server.submit(np.zeros(plans.n_in, np.float32))
+    server.drain()
+    clock.advance(2.0)                 # result now stale
+    # the TTL sweep runs on the next submit (no background work needed)
+    rid2 = server.submit(np.zeros(plans.n_in, np.float32))
+    assert server.result(rid) is None
+    assert server.metrics.results_evicted == 1
+    server.drain()
+    assert server.result(rid2) is not None   # fresh results unaffected
+
+
+def test_queued_requests_never_evicted(plans):
+    """Capacity/TTL eviction only applies to FINISHED results; queued
+    requests always get served and stay collectable right after."""
+    clock = FakeClock()
+    server = SparseServer(plans, max_batch=8, clock=clock,
+                          result_capacity=2, result_ttl_s=1.0)
+    rids = [server.submit(np.zeros(plans.n_in, np.float32))
+            for _ in range(6)]
+    clock.advance(5.0)                 # queued far past the TTL
+    server.submit(np.zeros(plans.n_in, np.float32))   # triggers TTL sweep
+    assert server.queue_depth == 7
+    server.drain()
+    assert server.metrics.served == 7                # nothing dropped
+    assert server.metrics.results_evicted == 5       # 7 done - capacity 2
+    assert server.result(rids[5]) is not None        # newest survive
+
+
+def test_queue_depth_convention_is_arrival_depth(plans):
+    """Admitted and rejected submits record the SAME convention: the depth
+    observed on arrival.  max_queue_depth is the depth attained."""
+    clock = FakeClock()
+    server = SparseServer(plans, max_queue=2, clock=clock)
+    server.submit(np.zeros(plans.n_in, np.float32))   # sees depth 0
+    server.submit(np.zeros(plans.n_in, np.float32))   # sees depth 1
+    server.submit(np.zeros(plans.n_in, np.float32))   # rejected at depth 2
+    assert server.metrics.queue_depth == [0, 1, 2]
+    assert server.metrics.snapshot()["max_queue_depth"] == 2
 
 
 # --------------------------------------------------------------------------- #
