@@ -13,14 +13,17 @@
 
 from .backends import (
     BACKENDS,
+    activations_equal,
     make_forward,
     make_fused_forward,
+    make_fused_measure,
     make_sharded_forward,
     pad_batch,
     resolve_backend,
+    tile_occupancy,
 )
 from .engine import ACTIVATIONS, Engine
-from .plan import ExecutionPlan, IOReport
+from .plan import DynamicIOReport, ExecutionPlan, IOReport
 from .sharding import (
     Mesh,
     ShardedExecutionPlan,
@@ -31,16 +34,20 @@ from .sharding import (
 __all__ = [
     "ACTIVATIONS",
     "BACKENDS",
+    "DynamicIOReport",
     "Engine",
     "ExecutionPlan",
     "IOReport",
     "Mesh",
     "ShardedExecutionPlan",
     "ShardedIOReport",
+    "activations_equal",
     "make_forward",
     "make_fused_forward",
+    "make_fused_measure",
     "make_sharded_forward",
     "pad_batch",
     "partition_model",
     "resolve_backend",
+    "tile_occupancy",
 ]

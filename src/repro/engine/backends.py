@@ -30,6 +30,7 @@ the result is sliced back — odd batch sizes work on every backend.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, List, Optional, Sequence
 
 import jax
@@ -73,6 +74,55 @@ def pad_batch(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def tile_occupancy(
+    h: jnp.ndarray,
+    block: int,
+    grid: int,
+    valid: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Per-input-tile live-row counts of an activation: ``occ[t]`` is the
+    number of batch rows with any nonzero in tile ``t``; a tile is *dead*
+    (every consuming weight block skippable) exactly when ``occ[t] == 0``.
+
+    ``valid`` ([B] bool) restricts the count to real batch rows — padded
+    zero rows must be excluded from every batch-level reduction, because
+    non-odd epilogues (sigmoid, gelu, softmax-style) turn them nonzero and
+    would make dead tiles look live in the measured occupancy.  (Exclusion
+    only ever *lowers* counts for rows whose outputs are sliced away, so it
+    can never mark a tile dead that a real row needs.)
+    """
+    B = h.shape[0]
+    live = h.reshape(B, grid, block) != 0
+    if valid is not None:
+        live = live & valid.reshape(B, 1, 1)
+    return jnp.sum(jnp.any(live, axis=2), axis=0).astype(jnp.int32)
+
+
+def activations_equal(a, b) -> bool:
+    """Value-level equality for epilogue callables.
+
+    Plain callables compare by identity (``==`` on functions), but
+    ``functools.partial`` objects never do — two per-layer
+    ``partial(leaky_relu, 0.1)`` instances are equal-but-distinct and used
+    to silently lose the megakernel.  Compare partials structurally (same
+    func, same bound args); anything unhashable/ambiguous in the bound args
+    falls back to "not equal" rather than raising.
+    """
+    if a is b:
+        return True
+    if isinstance(a, functools.partial) and isinstance(b, functools.partial):
+        try:
+            return (activations_equal(a.func, b.func)
+                    and bool(a.args == b.args)
+                    and bool(a.keywords == b.keywords))
+        except (TypeError, ValueError):
+            return False
+    try:
+        return bool(a == b)
+    except (TypeError, ValueError):
+        return False
+
+
 # --------------------------------------------------------------------------- #
 # per-layer dispatch (layered baseline + fallback for non-uniform tiles)
 # --------------------------------------------------------------------------- #
@@ -82,6 +132,7 @@ def _jnp_layer(
     layer: BSRLayer,
     schedule: CompiledSchedule,
     activation: Optional[Callable],
+    occ: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """One layer of the schedule as gather → block matmul → segment-sum.
 
@@ -91,7 +142,7 @@ def _jnp_layer(
     return _jnp_segment(
         x, schedule.rows, schedule.cols, schedule.blocks,
         jnp.asarray(layer.bias), layer.block_m, layer.block_n,
-        layer.grid_in, layer.grid_out, activation,
+        layer.grid_in, layer.grid_out, activation, occ=occ,
     )
 
 
@@ -107,6 +158,7 @@ def _jnp_segment(
     grid_out: int,
     activation: Optional[Callable],
     pad_segments: int = 0,
+    occ: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """One schedule segment as gather → block matmul → segment-sum.
 
@@ -115,10 +167,20 @@ def _jnp_segment(
     bias/activation epilogue.  The sharded forward pads every shard's
     schedule to a uniform length with steps routed to the sink, so padding
     never perturbs a real output tile (not even by adding 0.0).
+
+    ``occ`` ([grid_in] int32, from :func:`tile_occupancy`) masks the gather:
+    steps whose input tile is dead contribute a hard zero instead of their
+    (already exactly-zero) tile values.  A dead tile's entries are all ±0,
+    and ``(±0) * 0 = ±0`` preserves each bit pattern, so the masked segment
+    is bit-identical to the unmasked one — the mask is how the jnp lowering
+    *expresses* the skip an I/O-aware kernel would take.
     """
     B = x.shape[0]
     xt = x.reshape(B, grid_in, bm).transpose(1, 0, 2)          # [gi, B, bm]
     gathered = jnp.take(xt, rows, axis=0)                      # [nnz, B, bm]
+    if occ is not None:
+        gathered = gathered * (occ[rows] > 0).astype(
+            gathered.dtype)[:, None, None]
     contrib = jnp.einsum(
         "gbm,gmn->gbn",
         gathered.astype(jnp.float32),
@@ -162,6 +224,7 @@ def make_forward(
     activations: Sequence[Optional[Callable]],
     backend: str,
     jit: bool = True,
+    gate: bool = False,
 ) -> Callable:
     """Per-layer dispatch forward: x [B, n_in] -> [B, n_out].
 
@@ -169,10 +232,15 @@ def make_forward(
     the PR-1 call pattern, kept as the layered baseline the megakernel is
     benchmarked against and as the fallback for nets the flat schedule
     cannot express (non-uniform tile sizes).
+
+    ``gate`` masks each layer's gather on runtime tile occupancy — honored
+    on the ``jnp`` path only (the per-layer Pallas kernel has no occupancy
+    predication; the engine records that on the plan's fallback reason).
     """
     layers = list(layers)
     schedules = list(schedules)
     activations = list(activations)
+    gate = gate and backend == "jnp"
 
     def forward(x):
         B = x.shape[0]
@@ -181,7 +249,9 @@ def make_forward(
             h = pad_batch(h)
         for layer, schedule, act in zip(layers, schedules, activations):
             if backend == "jnp":
-                h = _jnp_layer(h, layer, schedule, act)
+                occ = tile_occupancy(h, layer.block_m, layer.grid_in) \
+                    if gate else None
+                h = _jnp_layer(h, layer, schedule, act, occ=occ)
             else:
                 h = _pallas_layer(h, layer, schedule, act,
                                   interpret=(backend == "interpret"))
@@ -194,61 +264,80 @@ def make_forward(
 # fused dispatch: the whole net as one flat schedule
 # --------------------------------------------------------------------------- #
 
+def _check_fusible_activations(activations: Sequence[Optional[Callable]]):
+    """The megakernel fuses ONE hidden epilogue; equal-but-distinct
+    callables (per-layer partials with the same bound args) count as one."""
+    hidden = list(activations[:-1])
+    distinct = sum(1 for a in hidden[1:] if not activations_equal(hidden[0], a))
+    if distinct:
+        raise ValueError(
+            "the megakernel fuses ONE hidden-layer activation; got "
+            f"{distinct + 1} distinct hidden epilogues — use fuse=False "
+            "(per-layer dispatch) for heterogeneous activations"
+        )
+
+
+def _flat_segments(layers, flat: FlatSchedule, activations):
+    """Materialize per-layer views of the flat arrays once, outside any
+    trace, so no per-call slicing of the big block array survives into the
+    compiled program (shared by the fused jnp forward and its instrumented
+    measurement twin)."""
+    segs = []
+    bias_row = 0
+    for k, (s, e) in enumerate(flat.segments):
+        lay = layers[k]
+        bias = flat.bias_tiles[bias_row:bias_row + lay.grid_out].reshape(-1)
+        segs.append((flat.rows[s:e], flat.cols[s:e], flat.blocks[s:e],
+                     bias, lay.grid_in, lay.grid_out, activations[k]))
+        bias_row += lay.grid_out
+    return segs
+
+
 def make_fused_forward(
     layers: Sequence[BSRLayer],
     flat: FlatSchedule,
     activations: Sequence[Optional[Callable]],
     backend: str,
     jit: bool = True,
+    gate: bool = False,
 ) -> Callable:
     """Whole-network fused forward over one ``FlatSchedule``.
 
     ``pallas``/``interpret``: a single ``bsr_megakernel`` dispatch — one grid
     for all layers, hidden state in VMEM end to end.  ``jnp``: the identical
-    flat arrays consumed segment-by-segment (segment views are materialized
-    once here, outside the trace, so no per-call slicing of the big block
-    array survives into the compiled program).
+    flat arrays consumed segment-by-segment.
+
+    ``gate`` turns on runtime tile-occupancy gating: every segment's gather
+    (jnp) or grid step (megakernel) is predicated on its input tile holding
+    any nonzero activation, skipping work that would contribute exactly
+    zero — outputs stay bit-identical to the ungated forward.
     """
     layers = list(layers)
     activations = list(activations)
-    hidden = set(activations[:-1])
-    if len(hidden) > 1:
-        raise ValueError(
-            "the megakernel fuses ONE hidden-layer activation; got "
-            f"{len(hidden)} distinct hidden epilogues — use fuse=False "
-            "(per-layer dispatch) for heterogeneous activations"
-        )
+    _check_fusible_activations(activations)
     act = activations[0] if len(activations) > 1 else None
     fact = activations[-1]
 
     if backend == "jnp":
         bs = flat.block
-        segs = []
-        bias_row = 0
-        for k, (s, e) in enumerate(flat.segments):
-            lay = layers[k]
-            bias = flat.bias_tiles[bias_row:bias_row + lay.grid_out] \
-                .reshape(-1)
-            segs.append((flat.rows[s:e], flat.cols[s:e], flat.blocks[s:e],
-                         bias, lay.grid_in, lay.grid_out, activations[k]))
-            bias_row += lay.grid_out
+        segs = _flat_segments(layers, flat, activations)
 
         def forward_jnp(x):
             h = x
             for rows, cols, blocks, bias, gi, go, a in segs:
+                occ = tile_occupancy(h, bs, gi) if gate else None
                 h = _jnp_segment(h, rows, cols, blocks, bias,
-                                 bs, bs, gi, go, a)
+                                 bs, bs, gi, go, a, occ=occ)
             return h
 
         return jax.jit(forward_jnp) if jit else forward_jnp
 
+    grid_in0 = layers[0].grid_in
+
     def forward(x):
         B = x.shape[0]
         xp = pad_batch(x)
-        y = bsr_megakernel(
-            xp, flat.blocks, flat.rows, flat.cols, flat.first, flat.last,
-            flat.layer_id, flat.hbm_row, flat.out_tile, flat.bias_idx,
-            flat.bias_tiles,
+        kw = dict(
             n_layers=flat.n_layers,
             block=flat.block,
             grid_out_final=flat.grid_out_final,
@@ -257,9 +346,87 @@ def make_fused_forward(
             final_activation=fact,
             interpret=(backend == "interpret"),
         )
+        args = (xp, flat.blocks, flat.rows, flat.cols, flat.first,
+                flat.last, flat.layer_id, flat.hbm_row, flat.out_tile,
+                flat.bias_idx, flat.bias_tiles)
+        if gate:
+            # layer-0 occupancy over the UNPADDED rows (pad rows are zero
+            # anyway there, but valid_b also scopes the kernel's own
+            # hidden-layer occupancy counts to real rows)
+            occ0 = tile_occupancy(x, flat.block, grid_in0)
+            y, _ = bsr_megakernel(*args, occ0=occ0, gate=True, valid_b=B,
+                                  **kw)
+        else:
+            y = bsr_megakernel(*args, **kw)
         return y[:B]
 
     return jax.jit(forward) if jit else forward
+
+
+def make_fused_measure(
+    layers: Sequence[BSRLayer],
+    flat: FlatSchedule,
+    activations: Sequence[Optional[Callable]],
+    backend: str,
+    jit: bool = True,
+) -> Callable:
+    """Instrumented gated fused forward: ``x -> (y, occs)``.
+
+    ``occs[k]`` ([grid_in_k] int32) is the live-row count per input tile of
+    layer ``k`` — the exact counts the gated forward's predicates consumed
+    (the jnp lowering recomputes them identically; the kernel lowering reads
+    layer 0's from the same ``tile_occupancy`` and layers ≥ 1 from the
+    megakernel's own occupancy output, so the kernel's padded-row masking is
+    observable from the outside).  ``ExecutionPlan.measure_dynamic`` turns
+    these into the measured dynamic I/O report.
+    """
+    layers = list(layers)
+    activations = list(activations)
+    _check_fusible_activations(activations)
+    act = activations[0] if len(activations) > 1 else None
+    fact = activations[-1]
+    bs = flat.block
+
+    if backend == "jnp":
+        segs = _flat_segments(layers, flat, activations)
+
+        def measure_jnp(x):
+            h = x
+            occs = []
+            for rows, cols, blocks, bias, gi, go, a in segs:
+                occ = tile_occupancy(h, bs, gi)
+                occs.append(occ)
+                h = _jnp_segment(h, rows, cols, blocks, bias,
+                                 bs, bs, gi, go, a, occ=occ)
+            return h, tuple(occs)
+
+        return jax.jit(measure_jnp) if jit else measure_jnp
+
+    grid_ins = [lay.grid_in for lay in layers]
+
+    def measure(x):
+        B = x.shape[0]
+        occ0 = tile_occupancy(x, bs, grid_ins[0])
+        xp = pad_batch(x)
+        y, occ = bsr_megakernel(
+            xp, flat.blocks, flat.rows, flat.cols, flat.first, flat.last,
+            flat.layer_id, flat.hbm_row, flat.out_tile, flat.bias_idx,
+            flat.bias_tiles, occ0=occ0,
+            n_layers=flat.n_layers,
+            block=flat.block,
+            grid_out_final=flat.grid_out_final,
+            hidden_tiles=flat.hidden_tiles,
+            activation=act,
+            final_activation=fact,
+            interpret=(backend == "interpret"),
+            gate=True,
+            valid_b=B,
+        )
+        occs = (occ0,) + tuple(occ[k, :grid_ins[k + 1]]
+                               for k in range(flat.n_layers - 1))
+        return y[:B], occs
+
+    return jax.jit(measure) if jit else measure
 
 
 # --------------------------------------------------------------------------- #
@@ -289,10 +456,11 @@ class ShardedSegment:
     activation: Optional[Callable]
 
 
-def _shard_layer(h, seg: ShardedSegment, rows, cols, blocks, bias):
+def _shard_layer(h, seg: ShardedSegment, rows, cols, blocks, bias, occ=None):
     """One shard's slice of one layer over the full gathered activation."""
     return _jnp_segment(h, rows, cols, blocks, bias, seg.block_m, seg.block_n,
-                        seg.grid_in, seg.tps, seg.activation, pad_segments=1)
+                        seg.grid_in, seg.tps, seg.activation, pad_segments=1,
+                        occ=occ)
 
 
 def _reassemble(gathered, seg: ShardedSegment):
@@ -311,6 +479,7 @@ def make_sharded_forward(
     jax_mesh=None,
     base_forward: Optional[Callable] = None,
     jit: bool = True,
+    gate: bool = False,
 ) -> Callable:
     """Collective forward over a model×data mesh: x [B, n_in] -> [B, n_out].
 
@@ -327,6 +496,14 @@ def make_sharded_forward(
     anything: the per-device body is ``base_forward`` — the very forward the
     unsharded plan builders produced — which is what makes the single-device
     path the 1×1-mesh special case rather than a parallel code path.
+
+    With ``gate=True`` and ``model > 1`` the forward takes ``(x, valid)``:
+    ``valid`` ([B] bool) marks the real batch rows, because the sharded plan
+    pads the batch to the data-axis multiple *outside* this trace, and
+    occupancy must be computed over real rows only.  Every shard computes
+    the same occupancy from the same gathered activation, so gating composes
+    with per-shard schedules without any extra collective.  (``model == 1``
+    keeps the ``(x)`` signature: the base forward gates internally.)
     """
     if model == 1 and base_forward is None:
         raise ValueError("model=1 requires the base (unsharded) forward")
@@ -350,33 +527,59 @@ def make_sharded_forward(
     if jax_mesh is not None:
         from jax.sharding import PartitionSpec as P
 
-        def device_fn(x, *flat):
+        def device_fn(x, valid, *flat):
             h = x
             for k, seg in enumerate(segments):
                 rows, cols, blocks, bias = flat[4 * k:4 * k + 4]
-                y = _shard_layer(h, seg, rows[0], cols[0], blocks[0], bias[0])
+                occ = tile_occupancy(h, seg.block_m, seg.grid_in,
+                                     valid=valid) if gate else None
+                y = _shard_layer(h, seg, rows[0], cols[0], blocks[0],
+                                 bias[0], occ=occ)
                 g = jax.lax.all_gather(y, "model")
                 h = _reassemble(g, seg)
             return h
 
-        fn = compat_shard_map(
-            device_fn, jax_mesh,
-            in_specs=(P("data", None),) + (P("model"),) * len(arrs),
-            out_specs=P("data", None),
-        )
+        if gate:
+            fn = compat_shard_map(
+                device_fn, jax_mesh,
+                in_specs=(P("data", None), P("data"))
+                + (P("model"),) * len(arrs),
+                out_specs=P("data", None),
+            )
 
-        def forward(x):
-            return fn(x, *arrs)
+            def forward(x, valid):
+                return fn(x, valid, *arrs)
+        else:
+            def device_fn_ungated(x, *flat):
+                return device_fn(x, None, *flat)
+
+            fn = compat_shard_map(
+                device_fn_ungated, jax_mesh,
+                in_specs=(P("data", None),) + (P("model"),) * len(arrs),
+                out_specs=P("data", None),
+            )
+
+            def forward(x):
+                return fn(x, *arrs)
 
         return jax.jit(forward) if jit else forward
 
-    def forward_loop(x):
+    def forward_loop(x, valid=None):
         h = x
         for k, seg in enumerate(segments):
             rows, cols, blocks, bias = arrs[4 * k:4 * k + 4]
-            ys = [_shard_layer(h, seg, rows[s], cols[s], blocks[s], bias[s])
+            # one occupancy per layer: every shard reads the same gathered
+            # activation, so the mask is shared across the shard loop
+            occ = tile_occupancy(h, seg.block_m, seg.grid_in,
+                                 valid=valid) if gate else None
+            ys = [_shard_layer(h, seg, rows[s], cols[s], blocks[s], bias[s],
+                               occ=occ)
                   for s in range(model)]
             h = _reassemble(jnp.stack(ys), seg)
         return h
 
+    if not gate:
+        def forward_ungated(x):
+            return forward_loop(x)
+        return jax.jit(forward_ungated) if jit else forward_ungated
     return jax.jit(forward_loop) if jit else forward_loop

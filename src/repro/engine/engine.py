@@ -21,6 +21,7 @@ the same layers with the same settings returns the same plan object.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -41,7 +42,12 @@ from repro.core.reorder import connection_reordering
 from repro.kernels.ops import compile_flat_schedule, compile_schedule
 from repro.models.common import ACTIVATIONS as _MODEL_ACTIVATIONS
 
-from .backends import make_forward, make_fused_forward, resolve_backend
+from .backends import (
+    make_forward,
+    make_fused_forward,
+    make_fused_measure,
+    resolve_backend,
+)
 from .plan import ExecutionPlan, IOReport
 from .sharding import Mesh, ShardedExecutionPlan, build_sharded_plan
 
@@ -52,6 +58,7 @@ ACTIVATIONS: Dict[Optional[str], Optional[Callable]] = {
     "none": None,
     "linear": None,
     "tanh": jax.numpy.tanh,
+    "sigmoid": jax.nn.sigmoid,
     **_MODEL_ACTIVATIONS,
 }
 
@@ -79,7 +86,11 @@ class Engine:
         lowering elsewhere, so the same engine code runs (and is testable)
         on any machine.
       activation: epilogue fused into every layer but the last (name or
-        callable or None).
+        callable or None).  A list/tuple gives each *hidden* layer its own
+        epilogue (length must be ``len(layers) - 1``); the megakernel fuses
+        only when all hidden epilogues compare equal (``functools.partial``
+        instances are compared structurally), otherwise the plan falls back
+        to layered dispatch and records why in ``plan.fallback_reason``.
       final_activation: epilogue of the last layer (default linear).
       reorder: run Connection Reordering over the whole block DAG.
       M_tiles: VMEM budget (in tiles) used as the CR objective and for the
@@ -97,6 +108,13 @@ class Engine:
         tile shapes cannot be flattened (non-uniform block sizes) silently
         fall back to per-layer dispatch; ``fuse=False`` forces that layered
         path.
+      gate: runtime tile-occupancy gating.  The compiled forward computes a
+        per-batch nonzero-tile bitmap over each activation and skips the
+        weight blocks whose input tile is dead for the whole batch — the
+        jnp lowering masks its gather/einsum, the megakernel predicates the
+        matching grid steps (no-op steps still advance the double-buffered
+        weight stream).  Bit-exact with the ungated forward; gated plans
+        additionally expose :meth:`ExecutionPlan.measure_dynamic`.
     """
 
     backend: str = "auto"
@@ -109,6 +127,7 @@ class Engine:
     max_move_span: Optional[int] = None
     policy: str = "min"
     fuse: bool = True
+    gate: bool = False
     jit: bool = True
     _cache: Dict[Tuple, Union[ExecutionPlan, ShardedExecutionPlan]] = \
         dataclasses.field(default_factory=dict, repr=False)
@@ -186,18 +205,31 @@ class Engine:
         return ("mesh", None) if mesh is None \
             else ("mesh", mesh.model, mesh.data)
 
+    @staticmethod
+    def _act_key(act):
+        # plans (hence their activations) stay strongly referenced by the
+        # cache, so object ids cannot be recycled while an entry is alive.
+        if isinstance(act, (str, type(None))):
+            return act
+        if isinstance(act, (list, tuple)):
+            return tuple(Engine._act_key(a) for a in act)
+        if isinstance(act, functools.partial):
+            try:
+                kw = tuple(sorted(act.keywords.items()))
+                key = ("partial", Engine._act_key(act.func), act.args, kw)
+                hash(key)
+                return key
+            except TypeError:
+                return id(act)
+        return id(act)
+
     def _plan_key(self, bffnn: BlockFFNN, backend: str) -> Tuple:
-        # plans (hence their layers) stay strongly referenced by the cache,
-        # so object ids cannot be recycled while a cache entry is alive.
-        act = self.activation if isinstance(self.activation, (str, type(None))) \
-            else id(self.activation)
-        fact = self.final_activation \
-            if isinstance(self.final_activation, (str, type(None))) \
-            else id(self.final_activation)
         return (
-            tuple(id(l) for l in bffnn.layers), backend, act, fact,
+            tuple(id(l) for l in bffnn.layers), backend,
+            self._act_key(self.activation),
+            self._act_key(self.final_activation),
             self.reorder, self.M_tiles, self.reorder_iters, self.seed,
-            self.max_move_span, self.policy, self.fuse, self.jit,
+            self.max_move_span, self.policy, self.fuse, self.gate, self.jit,
         )
 
     # ------------------------------------------------------------------ #
@@ -215,23 +247,47 @@ class Engine:
             perm, _, _, _, _ = schedule_arrays(bffnn, order, k)
             schedules.append(compile_schedule(layers[k], perm))
 
-        act = _resolve_activation(self.activation)
+        if isinstance(self.activation, (list, tuple)):
+            if len(self.activation) != len(layers) - 1:
+                raise ValueError(
+                    f"per-layer activation sequence has {len(self.activation)} "
+                    f"entries but the net has {len(layers) - 1} hidden layers"
+                )
+            hidden = [_resolve_activation(a) for a in self.activation]
+        else:
+            hidden = [_resolve_activation(self.activation)] * (len(layers) - 1)
         fact = _resolve_activation(self.final_activation)
-        activations: List[Optional[Callable]] = \
-            [act] * (len(layers) - 1) + [fact]
+        activations: List[Optional[Callable]] = hidden + [fact]
 
         flat = None
+        fallback_reason: Optional[str] = None
         if self.fuse:
             try:
                 flat = compile_flat_schedule(layers, schedules)
-            except ValueError:
+            except ValueError as e:
                 flat = None  # non-uniform tiles: per-layer dispatch fallback
+                fallback_reason = str(e)
+        measure = None
         if flat is not None:
-            forward = make_fused_forward(layers, flat, activations, backend,
-                                         jit=self.jit)
-        else:
+            try:
+                forward = make_fused_forward(layers, flat, activations,
+                                             backend, jit=self.jit,
+                                             gate=self.gate)
+                if self.gate:
+                    measure = make_fused_measure(layers, flat, activations,
+                                                 backend, jit=self.jit)
+            except ValueError as e:
+                # e.g. heterogeneous hidden epilogues: the megakernel fuses
+                # exactly one — record why instead of failing silently.
+                flat = None
+                fallback_reason = str(e)
+        if flat is None:
             forward = make_forward(layers, schedules, activations, backend,
-                                   jit=self.jit)
+                                   jit=self.jit, gate=self.gate)
+            if self.gate and backend != "jnp":
+                note = "occupancy gating inactive on the layered pallas path"
+                fallback_reason = f"{fallback_reason}; {note}" \
+                    if fallback_reason else note
         if io is None:
             io = self.io_report(bffnn, order,
                                 schedules if flat is not None else None)
@@ -244,7 +300,10 @@ class Engine:
             block_ffnn=bffnn,
             io=io,
             flat=flat,
+            gate=self.gate,
+            fallback_reason=fallback_reason,
             _forward=forward,
+            _measure=measure,
             compile_s=time.perf_counter() - t0,
             annealer_iters=annealer_iters,
         )

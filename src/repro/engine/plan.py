@@ -15,7 +15,7 @@ Calling the plan runs inference; nothing is re-derived per call.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +24,88 @@ from repro.core.blocksparse import BlockFFNN, BSRLayer
 from repro.core.bounds import Bounds
 from repro.core.iosim import IOStats
 from repro.kernels.ops import CompiledSchedule, FlatSchedule
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicIOReport:
+    """Measured dynamic I/O of one gated forward on one concrete batch.
+
+    The static Theorem-1 schedule reads every scheduled weight block; a
+    gated forward only *consumes* the blocks whose input tile held a nonzero
+    activation for some real batch row.  ``per_layer_dynamic[k]`` counts the
+    scheduled layer-``k`` blocks that survived gating (the dynamic I/O a
+    demand-driven weight stream pays), next to the full
+    ``per_layer_static[k]`` schedule length; the per-block lower bound of
+    any schedule is the dynamic count itself, since each surviving block
+    must stream at least once.  Occupancy fields describe *why*:
+    ``per_layer_live_tiles[k]`` of ``per_layer_in_tiles[k]`` input tiles
+    were live, ``per_layer_row_occupancy[k]`` is the mean live-row fraction
+    per tile, and ``per_layer_hist[k]`` buckets tiles by live-row fraction
+    as ``(dead, (0,.25), [.25,.5), [.5,.75), [.75,1])``.
+
+    Counts are computed over *real* batch rows only — engine batch padding
+    is excluded, so sigmoid-style epilogues turning padded zero rows
+    nonzero cannot make a dead tile look live.
+    """
+
+    batch: int
+    per_layer_static: Tuple[int, ...]
+    per_layer_dynamic: Tuple[int, ...]
+    per_layer_in_tiles: Tuple[int, ...]
+    per_layer_live_tiles: Tuple[int, ...]
+    per_layer_row_occupancy: Tuple[float, ...]
+    per_layer_hist: Tuple[Tuple[int, int, int, int, int], ...]
+
+    @property
+    def static_total(self) -> int:
+        return sum(self.per_layer_static)
+
+    @property
+    def dynamic_total(self) -> int:
+        return sum(self.per_layer_dynamic)
+
+    @property
+    def blocks_skipped(self) -> int:
+        return self.static_total - self.dynamic_total
+
+    @property
+    def read_fraction(self) -> float:
+        """dynamic / static block reads (1.0 = nothing was skippable)."""
+        return self.dynamic_total / max(1, self.static_total)
+
+    def summary(self) -> str:
+        occ = "/".join(f"{f:.2f}" for f in self.per_layer_row_occupancy)
+        return (f"dynamic I/O at B={self.batch}: read "
+                f"{self.dynamic_total}/{self.static_total} scheduled weight "
+                f"blocks ({100 * self.read_fraction:.0f}%, "
+                f"{self.blocks_skipped} skipped); per-layer row occupancy "
+                f"[{occ}]")
+
+    def to_dict(self) -> dict:
+        return {
+            "batch": int(self.batch),
+            "per_layer_static": [int(v) for v in self.per_layer_static],
+            "per_layer_dynamic": [int(v) for v in self.per_layer_dynamic],
+            "per_layer_in_tiles": [int(v) for v in self.per_layer_in_tiles],
+            "per_layer_live_tiles": [int(v)
+                                     for v in self.per_layer_live_tiles],
+            "per_layer_row_occupancy": [float(v) for v in
+                                        self.per_layer_row_occupancy],
+            "per_layer_hist": [[int(v) for v in h]
+                               for h in self.per_layer_hist],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DynamicIOReport":
+        return cls(
+            batch=d["batch"],
+            per_layer_static=tuple(d["per_layer_static"]),
+            per_layer_dynamic=tuple(d["per_layer_dynamic"]),
+            per_layer_in_tiles=tuple(d["per_layer_in_tiles"]),
+            per_layer_live_tiles=tuple(d["per_layer_live_tiles"]),
+            per_layer_row_occupancy=tuple(d["per_layer_row_occupancy"]),
+            per_layer_hist=tuple(tuple(h) for h in d["per_layer_hist"]),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +135,10 @@ class IOReport:
     layered_writes: int = 0
     hidden_tiles_kept: int = 0
     hidden_bytes_kept_per_row: int = 0
+    # measured dynamic I/O of the latest gated measurement run (None until
+    # ExecutionPlan.measure_dynamic records one) — the static fields above
+    # are schedule properties; this one is a property of actual data
+    dynamic: Optional[DynamicIOReport] = None
 
     @property
     def within_total_bound(self) -> bool:
@@ -99,6 +185,8 @@ class IOReport:
             msg += (f"; fused saves {self.cross_layer_savings} tile I/Os vs "
                     f"layered ({self.hidden_tiles_kept} hidden tiles / "
                     f"{self.hidden_bytes_kept_per_row} B/row VMEM-resident)")
+        if self.dynamic is not None:
+            msg += "; " + self.dynamic.summary()
         return msg
 
     def to_dict(self) -> dict:
@@ -119,10 +207,13 @@ class IOReport:
             "layered_writes": int(self.layered_writes),
             "hidden_tiles_kept": int(self.hidden_tiles_kept),
             "hidden_bytes_kept_per_row": int(self.hidden_bytes_kept_per_row),
+            "dynamic": None if self.dynamic is None
+            else self.dynamic.to_dict(),
         }
 
     @classmethod
     def from_dict(cls, d: dict) -> "IOReport":
+        dyn = d.get("dynamic")
         return cls(
             simulated=IOStats(**d["simulated"]),
             bounds=Bounds(**d["bounds"]),
@@ -132,6 +223,7 @@ class IOReport:
             layered_writes=d.get("layered_writes", 0),
             hidden_tiles_kept=d.get("hidden_tiles_kept", 0),
             hidden_bytes_kept_per_row=d.get("hidden_bytes_kept_per_row", 0),
+            dynamic=None if dyn is None else DynamicIOReport.from_dict(dyn),
         )
 
 
@@ -151,6 +243,13 @@ class ExecutionPlan:
     calls: int = dataclasses.field(default=0, compare=False)
     compile_s: float = 0.0                  # wall time of Engine._build
     annealer_iters: int = 0                 # CR proposals paid for this plan
+    gate: bool = False                      # runtime tile-occupancy gating
+    # why the plan is not (fully) what was asked for: flat-schedule /
+    # megakernel fallbacks no longer degrade silently — the builder records
+    # the reason here and describe() surfaces it
+    fallback_reason: Optional[str] = None
+    _measure: Optional[Callable] = dataclasses.field(repr=False,
+                                                     default=None)
 
     @property
     def fused(self) -> bool:
@@ -192,26 +291,91 @@ class ExecutionPlan:
         """A copy of this plan with a newly lowered forward (call count 0).
 
         The schedule substrate — layers, schedules, flat arrays, order, I/O
-        report — is shared by reference; only the jitted dispatch is rebuilt.
-        This is how ``repro.serving.bucketing`` fans one compiled schedule
-        out across batch buckets without ever re-deriving it.
+        report — is shared by reference; only the jitted dispatch (and the
+        gated plan's instrumented measurement twin) is rebuilt.  This is how
+        ``repro.serving.bucketing`` fans one compiled schedule out across
+        batch buckets without ever re-deriving it.
         """
-        from .backends import make_forward, make_fused_forward
+        from .backends import (
+            make_forward,
+            make_fused_forward,
+            make_fused_measure,
+        )
 
+        measure = None
         if self.flat is not None:
             fwd = make_fused_forward(self.layers, self.flat, self.activations,
-                                     self.backend, jit=jit)
+                                     self.backend, jit=jit, gate=self.gate)
+            if self.gate:
+                measure = make_fused_measure(self.layers, self.flat,
+                                             self.activations, self.backend,
+                                             jit=jit)
         else:
             fwd = make_forward(self.layers, self.schedules, self.activations,
-                               self.backend, jit=jit)
-        return dataclasses.replace(self, _forward=fwd, calls=0)
+                               self.backend, jit=jit, gate=self.gate)
+        return dataclasses.replace(self, _forward=fwd, _measure=measure,
+                                   calls=0)
+
+    def measure_dynamic(self, x) -> DynamicIOReport:
+        """Run one instrumented gated forward on ``x`` and report measured
+        dynamic I/O: scheduled weight blocks actually consumed per layer vs
+        the static Theorem-1 schedule, plus per-layer occupancy histograms.
+        The report is also recorded on ``self.io.dynamic`` (so ``describe``
+        and the plan store's serialized report carry it).
+        """
+        if self._measure is None:
+            raise RuntimeError(
+                "dynamic I/O measurement needs a gated fused plan — compile "
+                "with Engine(gate=True) on a net the flat schedule can "
+                "express (uniform square tiles)"
+            )
+        x = jnp.asarray(x)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] != self.n_in:
+            raise ValueError(
+                f"expected input [B, {self.n_in}] or [{self.n_in}], "
+                f"got {tuple(x.shape)}"
+            )
+        _, occs = self._measure(x)
+        B = int(x.shape[0])
+        rows = np.asarray(self.flat.rows)
+        stat, dyn, in_tiles, live, row_occ, hists = [], [], [], [], [], []
+        for k, (s, e) in enumerate(self.flat.segments):
+            occ = np.asarray(occs[k])
+            stat.append(int(e - s))
+            dyn.append(int(np.sum(occ[rows[s:e]] > 0)))
+            in_tiles.append(int(occ.size))
+            live.append(int(np.sum(occ > 0)))
+            frac = occ.astype(np.float64) / max(1, B)
+            row_occ.append(float(frac.mean()) if frac.size else 0.0)
+            alive = frac[occ > 0]
+            hist = np.histogram(alive, bins=[0.0, 0.25, 0.5, 0.75,
+                                             1.0 + 1e-9])[0]
+            hists.append((int(np.sum(occ == 0)),)
+                         + tuple(int(n) for n in hist))
+        report = DynamicIOReport(
+            batch=B,
+            per_layer_static=tuple(stat),
+            per_layer_dynamic=tuple(dyn),
+            per_layer_in_tiles=tuple(in_tiles),
+            per_layer_live_tiles=tuple(live),
+            per_layer_row_occupancy=tuple(row_occ),
+            per_layer_hist=tuple(hists),
+        )
+        self.io = dataclasses.replace(self.io, dynamic=report)
+        return report
 
     def describe(self) -> str:
         shapes = " -> ".join(
             [str(self.n_in)] + [str(l.n_out) for l in self.layers])
         nnz = sum(l.nnz_blocks for l in self.layers)
         mode = "fused" if self.fused else "layered"
-        return (f"ExecutionPlan[{self.backend}/{mode}] {shapes} "
+        if self.gate:
+            mode += "+gated"
+        fallback = "" if self.fallback_reason is None \
+            else f" [fallback: {self.fallback_reason}]"
+        return (f"ExecutionPlan[{self.backend}/{mode}]{fallback} {shapes} "
                 f"({len(self.layers)} layers, {nnz} nonzero blocks); "
                 + self.io.summary()
                 + f"; compiled in {self.compile_s:.2f}s "

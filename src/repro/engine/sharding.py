@@ -298,6 +298,7 @@ class ShardedExecutionPlan:
     shards: List[ExecutionPlan]
     owned: List[List[np.ndarray]]   # [shard][layer] global output-tile ids
     backend: str
+    gate: bool = False              # runtime tile-occupancy gating
     block_ffnn: BlockFFNN = None    # the unpartitioned network
     _forward: Callable = dataclasses.field(repr=False, default=None)
     _rebuild: Callable = dataclasses.field(repr=False, default=None)
@@ -352,7 +353,14 @@ class ShardedExecutionPlan:
         pad = (-B) % self.mesh.data
         if pad:
             x = jnp.pad(x, ((0, pad), (0, 0)))
-        y = self._forward(x)[:B]
+        if self.gate and self.mesh.model > 1:
+            # padding happened outside the collective trace, so the gated
+            # forward takes the real-row mask explicitly (occupancy is
+            # computed over real rows only)
+            valid = jnp.arange(x.shape[0]) < B
+            y = self._forward(x, valid)[:B]
+        else:
+            y = self._forward(x)[:B]
         self.calls += 1
         return y[0] if single else y
 
@@ -374,6 +382,8 @@ class ShardedExecutionPlan:
         # instead of letting the backend name imply the megakernel ran
         mode = self.backend if len(self.shards) == 1 \
             else f"{self.backend}/jnp-collective"
+        if self.gate:
+            mode += "+gated"
         return (f"ShardedExecutionPlan[{mode}] "
                 f"mesh(model={self.mesh.model}, data={self.mesh.data}) "
                 f"{shapes} ({self.n_layers} layers, {nnz} nonzero blocks); "
@@ -457,6 +467,7 @@ def build_sharded_plan(
     re-simulation exactly like ``Engine.compile_with_order`` does.
     """
     t0 = time.perf_counter()
+    gate = bool(getattr(engine, "gate", False))
     specs = partition_model(bffnn, mesh.model)
     if orders is not None and len(orders) != len(specs):
         raise ValueError(
@@ -486,7 +497,7 @@ def build_sharded_plan(
                 return shard_plans[0].with_fresh_forward(jit=jit)._forward
             base = shard_plans[0].with_fresh_forward(jit=False)._forward
         return make_sharded_forward(segments, mesh.model, mesh.data, jm,
-                                    base_forward=base, jit=jit)
+                                    base_forward=base, jit=jit, gate=gate)
 
     if mesh.model == 1 and mesh.jax_mesh() is None:
         # the 1×1 (or device-starved model=1) case IS the unsharded path:
@@ -500,6 +511,7 @@ def build_sharded_plan(
         shards=shard_plans,
         owned=[spec.owned for spec in specs],
         backend=backend,
+        gate=gate,
         block_ffnn=bffnn,
         _forward=forward,
         _rebuild=rebuild,

@@ -124,50 +124,81 @@ def bsr_matmul(
 # --------------------------------------------------------------------------- #
 
 def _megakernel(
-    # scalar prefetch
+    # scalar prefetch (``occ0_ref`` is appended when gating is on)
     layer_ref, rows_ref, cols_ref, first_ref, last_ref,
     hbm_row_ref, out_tile_ref, bias_idx_ref,
-    # inputs
-    x_ref, w_ref, b_ref,
-    # outputs
-    o_ref,
-    # scratch
-    acc_ref, h0_ref, h1_ref,
-    *,
+    # inputs / outputs / scratch (layout depends on ``gate``; see below)
+    *rest,
     n_layers: int,
     activation: Optional[Callable],
     final_activation: Optional[Callable],
+    gate: bool,
+    valid_b: int,
 ):
     """One grid step per nonzero block of ANY layer, in whole-net Theorem-1
     order.  The hidden state ping-pongs between two VMEM buffers across layer
     boundaries (layer k reads h[(k-1) % 2], writes h[k % 2]); activations
     never touch HBM between layers.  Weight blocks stream through the Pallas
     pipeline, which double-buffers the ``w_ref`` fetch of step g+1 behind the
-    multiply of step g."""
+    multiply of step g.
+
+    With ``gate=True`` the kernel additionally predicates every
+    multiply-accumulate on runtime tile occupancy: a step whose input tile
+    holds no nonzero activation in any of the first ``valid_b`` batch rows
+    skips its dot (the skipped contribution is exactly ±0, so outputs are
+    bit-identical) while everything else — accumulator init, epilogues, the
+    streamed ``w_ref`` fetch of the next step — proceeds unchanged, so the
+    double-buffered weight pipeline never stalls.  Layer-0 occupancy arrives
+    precomputed as the ``occ0_ref`` scalar-prefetch array; hidden-layer
+    occupancy is produced *by the kernel itself*: each non-final epilogue
+    counts the valid rows with a nonzero in the tile it just activated and
+    records the count in the ``occ_ref`` output (constant index map, so the
+    buffer is readable across grid steps — the flat schedule guarantees all
+    of layer k's epilogues precede any layer k+1 step).  Rows past
+    ``valid_b`` are engine batch padding and are excluded from the counts:
+    non-odd activation epilogues (sigmoid-style) turn padded zero rows
+    nonzero, which must not make a dead tile look live in the measured
+    occupancy."""
+    if gate:
+        (occ0_ref, x_ref, w_ref, b_ref, o_ref, occ_ref,
+         acc_ref, h0_ref, h1_ref) = rest
+    else:
+        x_ref, w_ref, b_ref, o_ref, acc_ref, h0_ref, h1_ref = rest
     g = pl.program_id(0)
     lid = layer_ref[g]
+    r = rows_ref[g]
 
     @pl.when(first_ref[g] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # multiply-accumulate from this step's input tile
-    @pl.when(lid == 0)
+    if gate:
+        # occupancy of this step's input tile (clamped reads: the occ0 /
+        # occ_ref rows not addressed by this layer are never selected)
+        alive = occ0_ref[jnp.minimum(r, occ0_ref.shape[0] - 1)] > 0
+        if n_layers > 1:
+            prev = occ_ref[jnp.maximum(lid - 1, 0),
+                           jnp.minimum(r, occ_ref.shape[1] - 1)]
+            alive = jnp.where(lid == 0, alive, prev > 0)
+    else:
+        alive = True
+
+    # multiply-accumulate from this step's input tile (skipped when gating
+    # proves the tile dead — the contribution would be exactly zero)
+    @pl.when((lid == 0) & alive)
     def _from_hbm():
         acc_ref[...] += jnp.dot(
             x_ref[...], w_ref[0], preferred_element_type=jnp.float32
         )
 
     if n_layers > 1:
-        r = rows_ref[g]
-
-        @pl.when((lid > 0) & (lid % 2 == 1))
+        @pl.when((lid > 0) & (lid % 2 == 1) & alive)
         def _from_h0():
             acc_ref[...] += jnp.dot(
                 h0_ref[r], w_ref[0], preferred_element_type=jnp.float32
             )
 
-        @pl.when((lid > 0) & (lid % 2 == 0))
+        @pl.when((lid > 0) & (lid % 2 == 0) & alive)
         def _from_h1():
             acc_ref[...] += jnp.dot(
                 h1_ref[r], w_ref[0], preferred_element_type=jnp.float32
@@ -186,25 +217,31 @@ def _megakernel(
     if n_layers > 1:
         c = cols_ref[g]
 
-        @pl.when((last_ref[g] == 1) & ~is_final & (lid % 2 == 0))
-        def _stash_h0():
+        def _stash(h_ref):
             y = acc_ref[...] + b_ref[...].astype(jnp.float32)
             if activation is not None:
                 y = activation(y)
-            h0_ref[c] = y
+            h_ref[c] = y
+            if gate:
+                row = jax.lax.broadcasted_iota(jnp.int32, y.shape, 0)
+                live = jnp.any((y != 0.0) & (row < valid_b),
+                               axis=1, keepdims=True)
+                occ_ref[lid, c] = jnp.sum(live.astype(jnp.int32))
+
+        @pl.when((last_ref[g] == 1) & ~is_final & (lid % 2 == 0))
+        def _stash_h0():
+            _stash(h0_ref)
 
         @pl.when((last_ref[g] == 1) & ~is_final & (lid % 2 == 1))
         def _stash_h1():
-            y = acc_ref[...] + b_ref[...].astype(jnp.float32)
-            if activation is not None:
-                y = activation(y)
-            h1_ref[c] = y
+            _stash(h1_ref)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_layers", "block", "grid_out_final", "hidden_tiles",
-                     "activation", "final_activation", "interpret"),
+                     "activation", "final_activation", "interpret",
+                     "gate", "valid_b"),
 )
 def bsr_megakernel(
     x: jnp.ndarray,           # [B, n_in]
@@ -218,19 +255,30 @@ def bsr_megakernel(
     out_tile: jnp.ndarray,    # int32 [nnz_total] out-BlockSpec index
     bias_idx: jnp.ndarray,    # int32 [nnz_total] bias-tile index
     bias_tiles: jnp.ndarray,  # [total_out_tiles, bs]
-    n_layers: int,
-    block: int,
-    grid_out_final: int,
-    hidden_tiles: int,
+    occ0: Optional[jnp.ndarray] = None,  # int32 [grid_in_0] (gate only)
+    n_layers: int = 1,
+    block: int = 0,
+    grid_out_final: int = 0,
+    hidden_tiles: int = 1,
     activation: Optional[Callable] = None,
     final_activation: Optional[Callable] = None,
     interpret: bool = False,
-) -> jnp.ndarray:
+    gate: bool = False,
+    valid_b: int = 0,
+):
     """Run a whole multi-layer net as ONE ``pallas_call``.
 
     The grid is the flat cross-layer schedule (``kernels.ops.FlatSchedule``);
     see ``_megakernel`` for the VMEM residency story.  The batch dimension
     must already be padded to the sublane multiple (the engine does this).
+
+    With ``gate=True`` the call takes ``occ0`` (the per-input-tile live-row
+    counts of ``x``, over its first ``valid_b`` rows — rows past that are
+    engine padding) as a ninth scalar-prefetch array and returns
+    ``(y, occ)`` where ``occ[k, t]`` is the kernel-measured live-row count
+    of hidden activation ``k``'s tile ``t`` — the very counts the gating
+    predicates consumed, exported so dynamic I/O is measurable (and the
+    padded-row exclusion testable) from outside the kernel.
     """
     B, n_in = x.shape
     nnz = blocks.shape[0]
@@ -239,47 +287,56 @@ def bsr_megakernel(
     if n_in % bs:
         raise ValueError("n_in must be a multiple of the block size")
 
+    # index maps take (g, *scalar_prefetch); variadic so the same lambdas
+    # serve both the 8-array and the gated 9-array prefetch layout
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=8,
+        num_scalar_prefetch=9 if gate else 8,
         grid=(nnz,),
         in_specs=[
             # input tile: only layer-0 steps move this index; afterwards it
             # is frozen, so the block stays in VMEM untouched
-            pl.BlockSpec(
-                (B, bs),
-                lambda g, lid, r, c, f, l, hbm, out, bidx: (0, hbm[g])),
+            pl.BlockSpec((B, bs), lambda g, *s: (0, s[5][g])),
             # weight block of step g: streamed, double-buffered by the
-            # Pallas pipeline
-            pl.BlockSpec(
-                (1, bs, bs),
-                lambda g, lid, r, c, f, l, hbm, out, bidx: (g, 0, 0)),
+            # Pallas pipeline (gated no-op steps still advance it)
+            pl.BlockSpec((1, bs, bs), lambda g, *s: (g, 0, 0)),
             # bias tile of the current output tile (any layer)
-            pl.BlockSpec(
-                (1, bs),
-                lambda g, lid, r, c, f, l, hbm, out, bidx: (bidx[g], 0)),
+            pl.BlockSpec((1, bs), lambda g, *s: (s[7][g], 0)),
         ],
-        out_specs=pl.BlockSpec(
-            (B, bs),
-            lambda g, lid, r, c, f, l, hbm, out, bidx: (0, out[g])),
+        out_specs=(
+            pl.BlockSpec((B, bs), lambda g, *s: (0, s[6][g])),
+            # measured hidden occupancy: whole array SMEM-resident across
+            # every grid step (written by epilogues, read by later layers)
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ) if gate else pl.BlockSpec((B, bs), lambda g, *s: (0, s[6][g])),
         scratch_shapes=[
             pltpu.VMEM((B, bs), jnp.float32),                  # accumulator
             pltpu.VMEM((hidden_tiles, B, bs), jnp.float32),    # hidden ping
             pltpu.VMEM((hidden_tiles, B, bs), jnp.float32),    # hidden pong
         ],
     )
+    out_shape = jax.ShapeDtypeStruct((B, n_out), x.dtype)
+    if gate:
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((max(1, n_layers - 1),
+                                           hidden_tiles), jnp.int32))
     fn = pl.pallas_call(
         functools.partial(
             _megakernel,
             n_layers=n_layers,
             activation=activation,
             final_activation=final_activation,
+            gate=gate,
+            valid_b=valid_b,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, n_out), x.dtype),
+        out_shape=out_shape,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,
     )
-    return fn(layer_id, rows, cols, first, last, hbm_row, out_tile, bias_idx,
-              x, blocks, bias_tiles)
+    prefetch = (layer_id, rows, cols, first, last, hbm_row, out_tile,
+                bias_idx)
+    if gate:
+        prefetch += (occ0,)
+    return fn(*prefetch, x, blocks, bias_tiles)

@@ -80,7 +80,7 @@ def serve_sparse_ffnn(args) -> None:
     sizes = args.ffnn_sizes
     engine = Engine(backend=args.backend, activation="gelu", reorder=True,
                     reorder_iters=args.reorder_iters,
-                    fuse=not args.no_fuse)
+                    fuse=not args.no_fuse, gate=args.gate)
     mesh = Mesh.parse(args.mesh) if args.mesh else None
     store = PlanStore(args.plan_store) if args.plan_store else None
 
@@ -170,6 +170,14 @@ def serve_sparse_ffnn(args) -> None:
               f"({collected} collected) — {server.metrics.summary()}")
         print(f"bucket calls: "
               f"{ {b: n for b, n in plans.bucket_calls.items() if n} }")
+        base = getattr(plans, "base", None)
+        if args.gate and base is not None and \
+                getattr(base, "_measure", None) is not None:
+            # measured dynamic I/O of one representative batch: how many
+            # scheduled weight blocks a demand-driven stream actually read
+            xs = np.stack([rng.standard_normal(sizes[0]).astype(np.float32)
+                           for _ in range(min(args.batch, 8))])
+            print(base.measure_dynamic(xs).summary())
 
 
 def main():
@@ -199,6 +207,11 @@ def main():
     ap.add_argument("--no-fuse", action="store_true",
                     help="serve with per-layer dispatch instead of the fused "
                          "whole-network megakernel plan")
+    ap.add_argument("--gate", action="store_true",
+                    help="runtime tile-occupancy gating: skip weight blocks "
+                         "whose input tile is all-zero for the batch "
+                         "(bit-exact; prints the measured dynamic I/O report "
+                         "after serving)")
     ap.add_argument("--mesh", default=None, metavar="MODELxDATA",
                     help="serve through a sharded execution plan, e.g. 4x2 "
                          "= 4 model shards x 2 data replicas (sparse-ffnn "

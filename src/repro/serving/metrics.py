@@ -13,10 +13,16 @@ from typing import Dict, List, Optional
 
 
 def percentile(xs: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]); 0.0 for an empty series."""
+    """Nearest-rank percentile; 0.0 for an empty series.
+
+    Total on every input ``snapshot()`` can produce: a single-sample series
+    answers every q with its one value, and out-of-range q clamps to
+    [0, 100] (q=100 is the max, never an off-the-end index).
+    """
     if not xs:
         return 0.0
     ys = sorted(xs)
+    q = min(100.0, max(0.0, q))
     k = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
     return ys[k]
 

@@ -87,8 +87,8 @@ def plan_cache_key(engine: Engine,
     The mesh topology is part of the key — a sharded plan's per-shard
     orders are meaningless under any other partition, so changing the mesh
     shape (including sharded vs unsharded) must be a miss.  ``mesh`` /
-    ``max_move_span`` enter the dict only when set, so entries written by
-    earlier store versions stay warm.
+    ``max_move_span`` / ``gate`` enter the dict only when set, so entries
+    written by earlier store versions stay warm.
     """
     settings = {
         "format": FORMAT_VERSION,
@@ -102,6 +102,10 @@ def plan_cache_key(engine: Engine,
     }
     if getattr(engine, "max_move_span", None):
         settings["max_move_span"] = int(engine.max_move_span)
+    if getattr(engine, "gate", False):
+        # gated and ungated plans must never alias (their lowered forwards
+        # differ even though the schedule arrays are identical)
+        settings["gate"] = True
     if mesh is not None:
         settings["mesh"] = [int(mesh.model), int(mesh.data)]
     return hashlib.sha256(

@@ -1,0 +1,319 @@
+"""Runtime tile-occupancy gating: bit-exactness, measured dynamic I/O,
+pad-row hygiene, and the fallback-reason surfacing it rode in with.
+
+The gated forward must be BIT-IDENTICAL to the ungated one on every
+backend — gating only skips contributions that are exactly zero — so every
+comparison here is ``assert_array_equal``, never allclose.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import DynamicIOReport, Engine, Mesh, activations_equal
+
+CPU_BACKENDS = ("jnp", "interpret")
+
+
+def _kill_tiles(layers, frac, bias_val=-10.0):
+    """Force the first ``frac`` of every hidden layer's output tiles dead:
+    a large negative bias drives each pre-activation in the tile below
+    zero, so ReLU zeroes the tile for any in-range input."""
+    out = []
+    for k, lay in enumerate(layers):
+        if k < len(layers) - 1:
+            kill = int(frac * lay.grid_out)
+            bias = np.array(lay.bias, np.float32)
+            bias.reshape(lay.grid_out, lay.block_n)[:kill] = bias_val
+            lay = dataclasses.replace(lay, bias=bias)
+        out.append(lay)
+    return out
+
+
+def _zero_input_tiles(x, block, n_tiles):
+    """Zero the first ``n_tiles`` input tiles of every row."""
+    x = np.array(x)
+    x[:, : n_tiles * block] = 0.0
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# bit-exactness
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_gated_bit_exact_with_dead_tiles(make_stack, backend, batch):
+    """Gated == ungated bitwise on ReLU nets with half the hidden tiles
+    forced dead, across odd and even batch sizes."""
+    layers = _kill_tiles(make_stack(sizes=(128, 256, 256, 128)), 0.5)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((batch, 128)), jnp.float32)
+    gated = Engine(backend=backend, activation="relu",
+                   gate=True).compile(layers)
+    ungated = Engine(backend=backend, activation="relu").compile(layers)
+    np.testing.assert_array_equal(np.asarray(gated(x)),
+                                  np.asarray(ungated(x)))
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+def test_gated_bit_exact_with_zero_input_tiles(make_stack, backend):
+    """All-zero INPUT tiles (layer-0 gating, via the occ0 scalar prefetch on
+    the kernel path) are skipped without changing a bit."""
+    layers = make_stack(sizes=(128, 256, 128))
+    rng = np.random.default_rng(2)
+    x = _zero_input_tiles(
+        rng.standard_normal((5, 128)).astype(np.float32), 32, 2)
+    gated = Engine(backend=backend, activation="relu",
+                   gate=True).compile(layers)
+    ungated = Engine(backend=backend, activation="relu").compile(layers)
+    np.testing.assert_array_equal(np.asarray(gated(x)),
+                                  np.asarray(ungated(x)))
+
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+def test_gated_layered_path_bit_exact(make_stack, backend):
+    """fuse=False: the layered jnp lowering gates its per-layer gather; the
+    layered pallas path stays ungated (and says so) — both bit-exact."""
+    layers = _kill_tiles(make_stack(sizes=(128, 256, 128)), 0.5)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((3, 128)), jnp.float32)
+    gated = Engine(backend=backend, activation="relu", fuse=False,
+                   gate=True).compile(layers)
+    ungated = Engine(backend=backend, activation="relu",
+                     fuse=False).compile(layers)
+    np.testing.assert_array_equal(np.asarray(gated(x)),
+                                  np.asarray(ungated(x)))
+    if backend != "jnp":
+        assert "occupancy gating inactive" in gated.describe()
+
+
+def test_gated_sigmoid_epilogue_bit_exact(make_stack):
+    """Sigmoid is never zero at zero — the activation can only die by f32
+    underflow — yet gating must stay bit-exact (nothing skippable is not a
+    correctness bug, just no savings)."""
+    layers = make_stack(sizes=(128, 256, 128))
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((3, 128)), jnp.float32)
+    gated = Engine(backend="jnp", activation="sigmoid",
+                   gate=True).compile(layers)
+    ungated = Engine(backend="jnp", activation="sigmoid").compile(layers)
+    np.testing.assert_array_equal(np.asarray(gated(x)),
+                                  np.asarray(ungated(x)))
+
+
+# --------------------------------------------------------------------------- #
+# pad-row hygiene (the epilogue bugfix)
+# --------------------------------------------------------------------------- #
+
+def test_pad_rows_do_not_leak_into_occupancy():
+    """Odd-batch sigmoid regression on the kernel path.
+
+    The kernel pads the batch to the sublane multiple; sigmoid maps padded
+    zero rows to 0.5 — NONZERO — so occupancy computed over padded rows
+    would see every tile live.  Build a net whose real-row pre-activations
+    underflow f32 sigmoid to exact 0 in tile 0 (pre-activation <= -150) and
+    check the measured occupancy still reports that tile dead.
+    """
+    from repro.sparse import prune_dense_stack
+
+    rng = np.random.default_rng(5)
+    sizes = [64, 64, 64]
+    ws = [np.full((64, 64), -3.0, np.float32) for _ in range(2)]
+    bs = [np.zeros(64, np.float32) for _ in range(2)]
+    layers = prune_dense_stack(ws, bs, density=1.0, block_m=32, block_n=32)
+    # every input > 0 => each hidden pre-activation = -3 * sum(x) <= -192
+    x = jnp.asarray(rng.uniform(1.0, 2.0, (3, 64)), jnp.float32)
+
+    for backend in CPU_BACKENDS:
+        gated = Engine(backend=backend, activation="sigmoid",
+                       gate=True).compile(layers)
+        ungated = Engine(backend=backend,
+                         activation="sigmoid").compile(layers)
+        np.testing.assert_array_equal(np.asarray(gated(x)),
+                                      np.asarray(ungated(x)))
+        rep = gated.measure_dynamic(x)
+        # the whole hidden state underflows to exact zero: layer 1 reads
+        # nothing, and no 0.5-valued pad row resurrects a tile
+        assert rep.per_layer_live_tiles[1] == 0
+        assert rep.per_layer_dynamic[1] == 0
+
+
+# --------------------------------------------------------------------------- #
+# measured dynamic I/O
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+def test_dynamic_reads_below_static_with_dead_tiles(make_stack, backend):
+    """>= 50% dead hidden tiles => strictly fewer dynamic than static block
+    reads, and the occupancy fields explain the gap."""
+    layers = _kill_tiles(make_stack(sizes=(128, 256, 256, 128)), 0.5)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    plan = Engine(backend=backend, activation="relu",
+                  gate=True).compile(layers)
+    rep = plan.measure_dynamic(x)
+    assert rep.dynamic_total < rep.static_total
+    assert rep.blocks_skipped == rep.static_total - rep.dynamic_total
+    assert 0.0 < rep.read_fraction < 1.0
+    n_layers = len(layers)
+    assert len(rep.per_layer_static) == n_layers
+    # hidden layers 1.. see at most half their input tiles live
+    for k in range(1, n_layers):
+        assert rep.per_layer_live_tiles[k] <= rep.per_layer_in_tiles[k] // 2
+        # histogram is total over the tile count: dead + live buckets
+        assert sum(rep.per_layer_hist[k]) == rep.per_layer_in_tiles[k]
+        assert rep.per_layer_hist[k][0] == \
+            rep.per_layer_in_tiles[k] - rep.per_layer_live_tiles[k]
+    assert "dynamic I/O" in rep.summary()
+    # the measurement is recorded on the plan's IOReport (and serializes)
+    assert plan.io.dynamic is rep
+    assert "dynamic I/O" in plan.io.summary()
+    rt = DynamicIOReport.from_dict(rep.to_dict())
+    assert rt == rep
+
+
+def test_measure_matches_backends(make_stack):
+    """jnp and interpret (kernel occupancy output) agree on the counts."""
+    layers = _kill_tiles(make_stack(sizes=(128, 256, 256, 128)), 0.25)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((5, 128)), jnp.float32)
+    reps = [
+        Engine(backend=b, activation="relu",
+               gate=True).compile(layers).measure_dynamic(x)
+        for b in CPU_BACKENDS
+    ]
+    assert reps[0] == reps[1]
+
+
+def test_measure_dynamic_requires_gated_fused(make_stack):
+    layers = make_stack()
+    plan = Engine(backend="jnp", activation="relu").compile(layers)
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((2, 128)).astype(np.float32)
+    with pytest.raises(RuntimeError, match="gated fused plan"):
+        plan.measure_dynamic(x)
+    gated = Engine(backend="jnp", activation="relu",
+                   gate=True).compile(layers)
+    with pytest.raises(ValueError, match="expected input"):
+        gated.measure_dynamic(x[:, :64])
+
+
+# --------------------------------------------------------------------------- #
+# sharded gating
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("mesh", [Mesh(2, 1), Mesh(2, 2)])
+def test_sharded_gated_bit_exact(make_stack, mesh):
+    """Gated == ungated == unsharded bitwise through the collective path,
+    including the data-axis pad (B=3 under data=2 pads one row; the traced
+    valid mask must keep it out of the occupancy)."""
+    layers = _kill_tiles(make_stack(sizes=(128, 256, 256, 128)), 0.5)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((3, 128)), jnp.float32)
+    gated = Engine(backend="jnp", activation="relu",
+                   gate=True).compile(layers, mesh=mesh)
+    ungated = Engine(backend="jnp",
+                     activation="relu").compile(layers, mesh=mesh)
+    flat = Engine(backend="jnp", activation="relu").compile(layers)
+    y = np.asarray(gated(x))
+    np.testing.assert_array_equal(y, np.asarray(ungated(x)))
+    np.testing.assert_array_equal(y, np.asarray(flat(x)))
+    assert "+gated" in gated.describe()
+
+
+def test_sharded_gated_fresh_forward(make_stack):
+    """The bucketing rebuild path (with_fresh_forward) keeps gating."""
+    layers = _kill_tiles(make_stack(sizes=(128, 256, 128)), 0.5)
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    gated = Engine(backend="jnp", activation="relu",
+                   gate=True).compile(layers, mesh=Mesh(2, 2))
+    fresh = gated.with_fresh_forward()
+    np.testing.assert_array_equal(np.asarray(fresh(x)),
+                                  np.asarray(gated(x)))
+
+
+# --------------------------------------------------------------------------- #
+# fallback reporting (the make_fused_forward satellite)
+# --------------------------------------------------------------------------- #
+
+def _leaky(slope, x):
+    return jnp.where(x > 0, x, slope * x)
+
+
+def test_equal_partials_still_fuse(make_stack):
+    """Per-layer ``functools.partial`` epilogues with identical bound args
+    are ONE activation — the plan must keep the fused lowering instead of
+    silently dropping to layered dispatch on object identity."""
+    layers = make_stack(sizes=(128, 256, 256, 128))
+    acts = [functools.partial(_leaky, 0.1), functools.partial(_leaky, 0.1)]
+    assert acts[0] is not acts[1] and activations_equal(*acts)
+    plan = Engine(backend="jnp", activation=acts).compile(layers)
+    assert plan.fused
+    assert plan.fallback_reason is None
+    # and it computes the right thing
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((2, 128)), jnp.float32)
+    ref = Engine(backend="jnp",
+                 activation=functools.partial(_leaky, 0.1)).compile(layers)
+    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(ref(x)))
+
+
+def test_heterogeneous_activations_fall_back_with_reason(make_stack):
+    layers = make_stack(sizes=(128, 256, 256, 128))
+    plan = Engine(backend="jnp",
+                  activation=[jax.nn.relu, jax.nn.gelu]).compile(layers)
+    assert not plan.fused
+    assert plan.fallback_reason is not None
+    assert "ONE hidden-layer activation" in plan.fallback_reason
+    assert "[fallback:" in plan.describe()
+    # correctness of the layered lowering it fell back to
+    rng = np.random.default_rng(12)
+    x = np.asarray(rng.standard_normal((2, 128)), np.float32)
+    h = x
+    for lay, act in zip(layers, (jax.nn.relu, jax.nn.gelu, None)):
+        W = np.zeros((lay.n_in, lay.n_out), np.float32)
+        for r, c, b in zip(lay.rows, lay.cols, np.asarray(lay.blocks)):
+            W[r * lay.block_m:(r + 1) * lay.block_m,
+              c * lay.block_n:(c + 1) * lay.block_n] += b
+        h = h @ W + np.asarray(lay.bias)
+        if act is not None:
+            h = np.asarray(act(h))
+    np.testing.assert_allclose(np.asarray(plan(x)), h, rtol=1e-4, atol=1e-4)
+
+
+def test_activation_sequence_length_validated(make_stack):
+    layers = make_stack(sizes=(128, 256, 256, 128))
+    with pytest.raises(ValueError, match="hidden layers"):
+        Engine(backend="jnp", activation=[jax.nn.relu]).compile(layers)
+
+
+def test_activations_equal_semantics():
+    assert activations_equal(jax.nn.relu, jax.nn.relu)
+    assert not activations_equal(jax.nn.relu, jax.nn.gelu)
+    assert activations_equal(functools.partial(_leaky, 0.1),
+                             functools.partial(_leaky, 0.1))
+    assert not activations_equal(functools.partial(_leaky, 0.1),
+                                 functools.partial(_leaky, 0.2))
+    assert not activations_equal(functools.partial(_leaky, 0.1), _leaky)
+    assert activations_equal(None, None)
+
+
+def test_gate_in_plan_keys(make_stack, tmp_path):
+    """Gated and ungated plans never alias — neither in the in-memory engine
+    cache nor in the on-disk plan store key."""
+    from repro.serving.plancache import plan_cache_key
+
+    layers = make_stack()
+    eng = Engine(backend="jnp", activation="relu")
+    geng = Engine(backend="jnp", activation="relu", gate=True)
+    p, gp = eng.compile(layers), geng.compile(layers)
+    assert p is not gp and not p.gate and gp.gate
+    from repro.core.blocksparse import to_block_ffnn
+    net = to_block_ffnn(layers)
+    assert plan_cache_key(eng, net) != plan_cache_key(geng, net)

@@ -304,6 +304,37 @@ def test_percentile_nearest_rank():
     assert percentile([], 50) == 0.0
 
 
+def test_percentile_edge_cases():
+    """Total on every input snapshot() can produce: empty and single-sample
+    series, q=100 landing on max (never past the end), out-of-range q
+    clamped rather than raised."""
+    assert percentile([], 0) == 0.0
+    assert percentile([], 100) == 0.0
+    for q in (0, 50, 99, 100):
+        assert percentile([7.5], q) == 7.5
+    xs = [1.0, 2.0]
+    assert percentile(xs, 100) == 2.0
+    assert percentile(xs, 150) == 2.0     # clamps to q=100
+    assert percentile(xs, -10) == 1.0     # clamps to q=0
+    assert percentile(xs, 99) == 2.0      # nearest rank, not interpolation
+
+
+def test_metrics_snapshot_never_raises_when_fresh():
+    """A server that saw zero traffic must still snapshot/summarize."""
+    m = ServingMetrics()
+    s = m.snapshot()
+    assert s["served"] == 0
+    assert s["throughput_rps"] == 0.0
+    assert s["latency_ms"]["p99"] == 0.0
+    assert s["mean_batch_size"] == 0.0
+    assert isinstance(m.summary(), str)
+    # a single served request exercises the len-1 percentile path end-to-end
+    m.record_submit(0.0, 0, admitted=True)
+    m.record_batch(1.0, n=1, bucket=1, exec_s=0.25, waits_s=[0.5], misses=0)
+    s = m.snapshot()
+    assert s["latency_ms"]["p50"] == s["latency_ms"]["p99"] == 750.0
+
+
 def test_metrics_snapshot_shape():
     m = ServingMetrics()
     m.record_submit(0.0, 1, admitted=True)
