@@ -316,6 +316,21 @@ class ExecutionPlan:
         return dataclasses.replace(self, _forward=fwd, _measure=measure,
                                    calls=0)
 
+    def safe_twin(self, jit: bool = True) -> "ExecutionPlan":
+        """The plan's safe-mode twin: same schedule, jnp backend, gate off.
+
+        The jnp segment lowering is the bit-exact reference the megakernel
+        is checked against (PR 2), and the ungated forward is bit-exact
+        with the gated one (PR 6) — so this twin computes the *identical*
+        function through the simplest code path available, just without
+        the fast-path machinery that can misbehave.  The serving runtime
+        degrades to it when the circuit breaker trips (see
+        ``repro.serving.resilience``).  The schedule substrate is shared
+        by reference; only the forward is re-lowered.
+        """
+        twin = dataclasses.replace(self, backend="jnp", gate=False)
+        return twin.with_fresh_forward(jit=jit)
+
     def measure_dynamic(self, x) -> DynamicIOReport:
         """Run one instrumented gated forward on ``x`` and report measured
         dynamic I/O: scheduled weight blocks actually consumed per layer vs

@@ -371,6 +371,20 @@ class ShardedExecutionPlan:
         that ``repro.serving.bucketing`` fans over batch buckets."""
         return dataclasses.replace(self, _forward=self._rebuild(jit), calls=0)
 
+    def safe_twin(self, jit: bool = True) -> "ShardedExecutionPlan":
+        """The sharded analogue of :meth:`ExecutionPlan.safe_twin`: the
+        same per-shard schedules lowered through the jnp collective path
+        with gating off — bit-exact (the model>1 collective already lowers
+        segments through jnp; the gated/ungated forwards agree bitwise per
+        PR 6), just without the fast-path machinery.  Used by the serving
+        runtime's circuit breaker."""
+        rebuild = self._rebuild
+        return dataclasses.replace(
+            self, backend="jnp", gate=False,
+            _forward=rebuild(jit, safe=True),
+            _rebuild=lambda j=True, safe=True: rebuild(j, safe=True),
+            calls=0)
+
     def describe(self) -> str:
         shapes = " -> ".join(
             [str(self.n_in)]
@@ -489,15 +503,20 @@ def build_sharded_plan(
     segments = _sharded_segments(specs, shard_plans) if mesh.model > 1 \
         else []
 
-    def rebuild(jit: bool = True) -> Callable:
+    def rebuild(jit: bool = True, safe: bool = False) -> Callable:
+        # safe=True lowers the safe-mode twin: jnp per-shard body, gate
+        # off — the degraded path the serving circuit breaker swaps to
         jm = mesh.jax_mesh()
         base = None
         if mesh.model == 1:
+            shard0 = shard_plans[0].safe_twin(jit=False) if safe \
+                else shard_plans[0]
             if jm is None:
-                return shard_plans[0].with_fresh_forward(jit=jit)._forward
-            base = shard_plans[0].with_fresh_forward(jit=False)._forward
+                return shard0.with_fresh_forward(jit=jit)._forward
+            base = shard0.with_fresh_forward(jit=False)._forward
         return make_sharded_forward(segments, mesh.model, mesh.data, jm,
-                                    base_forward=base, jit=jit, gate=gate)
+                                    base_forward=base, jit=jit,
+                                    gate=False if safe else gate)
 
     if mesh.model == 1 and mesh.jax_mesh() is None:
         # the 1×1 (or device-starved model=1) case IS the unsharded path:

@@ -71,8 +71,10 @@ def serve_sparse_ffnn(args) -> None:
     from repro.engine import Engine, Mesh
     from repro.serving import (
         BucketedPlanSet,
+        CircuitBreaker,
         ModelRouter,
         PlanStore,
+        RetryPolicy,
         SparseServer,
     )
 
@@ -84,9 +86,22 @@ def serve_sparse_ffnn(args) -> None:
     mesh = Mesh.parse(args.mesh) if args.mesh else None
     store = PlanStore(args.plan_store) if args.plan_store else None
 
+    # resilience knobs: a breaker needs the safe twin to degrade to;
+    # --safe-mode serves the twin directly (so a breaker is moot there)
+    want_breaker = args.breaker > 0 and not args.safe_mode
+    retry = None
+    if args.retries > 0 or args.batch_timeout_ms is not None:
+        retry = RetryPolicy(
+            max_retries=args.retries,
+            timeout_s=(args.batch_timeout_ms / 1e3
+                       if args.batch_timeout_ms is not None else None))
+
     multi = args.models > 1
     t0 = time.time()
     if multi:
+        if args.safe_mode:
+            raise SystemExit("--safe-mode is single-model only; use "
+                             "--breaker to degrade per model instead")
         # K differently-pruned variants of the same architecture, one
         # compile (or store hit) each, served through one shared scheduler
         nets = {f"m{k}": _make_ffnn_layers(sizes, args.density, args.block,
@@ -95,7 +110,11 @@ def serve_sparse_ffnn(args) -> None:
         router = ModelRouter.compile(
             nets, engine=engine, max_batch=args.batch, plan_store=store,
             meshes={name: mesh for name in nets} if mesh else None,
-            max_queue=args.max_queue, slo_ms=args.slo_ms)
+            max_queue=args.max_queue, slo_ms=args.slo_ms, retry=retry,
+            breaker=(lambda: CircuitBreaker(
+                threshold=args.breaker,
+                cooldown_s=args.breaker_cooldown_ms / 1e3))
+            if want_breaker else None)
         names = list(router.servers)
         for name, srv in router.servers.items():
             print(f"[{name}] {srv.plans.describe()}")
@@ -103,14 +122,23 @@ def serve_sparse_ffnn(args) -> None:
         layers = _make_ffnn_layers(sizes, args.density, args.block)
         plans = BucketedPlanSet.compile(layers, engine=engine,
                                         max_batch=args.batch,
-                                        plan_store=store, mesh=mesh)
+                                        plan_store=store, mesh=mesh,
+                                        safe_twin=want_breaker)
         start = "warm (plan-store hit)" if plans.cache_hit else "cold"
         print(f"engine compile: {time.time() - t0:.1f}s [{start}] — "
               f"{plans.describe()}")
+        if args.safe_mode:
+            # the degraded path as the primary: jnp backend, gate off —
+            # the same bit-exact forward the breaker would swap to
+            plans = plans.build_safe_twin(jit=engine.jit)
+            print(f"safe mode: {plans.describe()}")
         plans.warmup()
-        server = SparseServer(plans, max_queue=args.max_queue,
-                              slo_ms=args.slo_ms, engine=engine,
-                              plan_store=store, mesh=mesh)
+        server = SparseServer(
+            plans, max_queue=args.max_queue, slo_ms=args.slo_ms,
+            engine=engine, plan_store=store, mesh=mesh, retry=retry,
+            breaker=CircuitBreaker(threshold=args.breaker,
+                                   cooldown_s=args.breaker_cooldown_ms / 1e3)
+            if want_breaker else None)
 
     # graceful drain on SIGTERM/SIGINT: stop submitting, serve everything
     # queued, report, exit — no request accepted before the signal is lost
@@ -168,6 +196,13 @@ def serve_sparse_ffnn(args) -> None:
         collected = sum(server.result(rid) is not None for _, rid in rids)
         print(f"served {server.metrics.served} sparse-FFNN requests "
               f"({collected} collected) — {server.metrics.summary()}")
+        if want_breaker or retry is not None:
+            m = server.metrics.snapshot()
+            print(f"resilience: retries={m['retries']} "
+                  f"timeouts={m['batch_timeouts']} "
+                  f"breaker trips={m['breaker_trips']} "
+                  f"resets={m['breaker_resets']} "
+                  f"degraded batches={m['degraded_batches']}")
         print(f"bucket calls: "
               f"{ {b: n for b, n in plans.bucket_calls.items() if n} }")
         base = getattr(plans, "base", None)
@@ -227,6 +262,25 @@ def main():
                          "serving scheduler")
     ap.add_argument("--max-queue", type=int, default=1024,
                     help="admission bound of the sparse serving queue")
+    ap.add_argument("--safe-mode", action="store_true",
+                    help="serve the plan's safe-mode twin directly (jnp "
+                         "backend, gating off — the same bit-exact forward "
+                         "the circuit breaker degrades to, as the primary)")
+    ap.add_argument("--breaker", type=int, default=0, metavar="K",
+                    help="arm a circuit breaker: K consecutive batch "
+                         "failures/timeouts degrade to the precompiled "
+                         "safe-mode twin, half-opening back after the "
+                         "cool-down (0 = off)")
+    ap.add_argument("--breaker-cooldown-ms", type=float, default=1000.0,
+                    help="circuit-breaker cool-down before probing the "
+                         "fast plan again")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="bounded per-batch retry attempts (with "
+                         "exponential backoff) before a batch fails")
+    ap.add_argument("--batch-timeout-ms", type=float, default=None,
+                    help="wall-clock bound on one batch execution attempt; "
+                         "a hung attempt is abandoned and counted (and "
+                         "retried under --retries)")
     args = ap.parse_args()
 
     if args.sparse_ffnn:

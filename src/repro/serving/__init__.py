@@ -26,15 +26,29 @@ threading model, swap semantics, and the plan-store layout.
 from .bucketing import BucketedPlanSet, bucket_sizes
 from .metrics import ServingMetrics, percentile
 from .plancache import PlanStore, layers_fingerprint, plan_cache_key
+from .resilience import (
+    BatchTimeoutError,
+    CircuitBreaker,
+    FaultInjector,
+    OutputGuardError,
+    RetryPolicy,
+    Watchdog,
+)
 from .server import ModelRouter, Request, SparseServer
 
 __all__ = [
+    "BatchTimeoutError",
     "BucketedPlanSet",
+    "CircuitBreaker",
+    "FaultInjector",
     "ModelRouter",
+    "OutputGuardError",
     "PlanStore",
     "Request",
+    "RetryPolicy",
     "ServingMetrics",
     "SparseServer",
+    "Watchdog",
     "bucket_sizes",
     "layers_fingerprint",
     "percentile",

@@ -58,6 +58,8 @@ class BucketedPlanSet:
     bucket_calls: Dict[int, int] = dataclasses.field(default_factory=dict)
     warmup_s: Dict[int, float] = dataclasses.field(default_factory=dict)
     compile_s: float = 0.0            # wall time of the compile/store lookup
+    safe_mode: bool = False           # True on a safe twin (degraded path)
+    safe: Optional["BucketedPlanSet"] = None   # precompiled safe-mode twin
 
     @classmethod
     def compile(
@@ -68,6 +70,7 @@ class BucketedPlanSet:
         plan_store=None,
         backend: Optional[str] = None,
         mesh: Optional[Mesh] = None,
+        safe_twin: bool = False,
     ) -> "BucketedPlanSet":
         """Compile the schedule once, then fan it out across batch buckets.
 
@@ -81,6 +84,11 @@ class BucketedPlanSet:
         forward is a fresh lowering of the same collective program —
         ``plan.with_fresh_forward`` hides the single- vs sharded-plan
         difference, so the fan-out code is one path.
+
+        ``safe_twin=True`` also fans out the base plan's safe-mode twin
+        (jnp backend, gate off — the same bit-exact forward, only slower)
+        into ``self.safe``, so a circuit breaker can degrade to it without
+        compiling anything on the failure path.
         """
         engine = engine or Engine()
         t0 = time.perf_counter()
@@ -91,9 +99,30 @@ class BucketedPlanSet:
             base, hit = engine.compile(net, backend, mesh=mesh), False
         sizes = bucket_sizes(max_batch)
         plans = {b: base.with_fresh_forward(jit=engine.jit) for b in sizes}
-        return cls(base=base, buckets=sizes, plans=plans, cache_hit=hit,
-                   bucket_calls={b: 0 for b in sizes},
-                   compile_s=time.perf_counter() - t0)
+        out = cls(base=base, buckets=sizes, plans=plans, cache_hit=hit,
+                  bucket_calls={b: 0 for b in sizes},
+                  compile_s=time.perf_counter() - t0)
+        if safe_twin:
+            out.safe = out.build_safe_twin(jit=engine.jit)
+        return out
+
+    def build_safe_twin(self, jit: bool = True) -> "BucketedPlanSet":
+        """Fan this set's schedule out through the safe-mode twin (jnp
+        backend, gating off): same buckets, same schedule arrays by
+        reference, the simplest lowering of the identical function.  The
+        twin is marked ``safe_mode=True`` so the server can tell which
+        plan set a batch ran on (``degraded_batches`` accounting)."""
+        safe_base = self.base.safe_twin(jit=jit)
+        return dataclasses.replace(
+            self,
+            base=safe_base,
+            plans={b: safe_base.with_fresh_forward(jit=jit)
+                   for b in self.buckets},
+            bucket_calls={b: 0 for b in self.buckets},
+            warmup_s={},
+            safe_mode=True,
+            safe=None,
+        )
 
     @property
     def max_batch(self) -> int:
@@ -138,6 +167,10 @@ class BucketedPlanSet:
             np.asarray(self.plans[b](x))   # steady-state execution latency
             self.warmup_s[b] = time.perf_counter() - t0
             self.plans[b].calls = 0
+        if self.safe is not None:
+            # the degraded path must be warm too: a breaker trip is the
+            # worst moment to discover an untraced bucket
+            self.safe.warmup(dtype)
         return self
 
     def __call__(self, x) -> np.ndarray:
@@ -167,5 +200,10 @@ class BucketedPlanSet:
 
     def describe(self) -> str:
         src = "plan-store hit" if self.cache_hit else "cold compile"
-        return (f"BucketedPlanSet buckets={list(self.buckets)} ({src}); "
-                + self.base.describe())
+        extra = ""
+        if self.safe_mode:
+            extra = " [SAFE MODE]"
+        elif self.safe is not None:
+            extra = " [+safe twin]"
+        return (f"BucketedPlanSet buckets={list(self.buckets)}{extra} "
+                f"({src}); " + self.base.describe())

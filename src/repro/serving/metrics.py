@@ -43,6 +43,16 @@ class ServingMetrics:
     failed_requests: int = 0
     swaps: int = 0
     swap_hits: int = 0
+    # resilience counters (see repro.serving.resilience)
+    retries: int = 0                # batch attempts retried after a failure
+    batch_timeouts: int = 0         # attempts killed by RetryPolicy.timeout_s
+    nan_guard_failures: int = 0     # batches failed by the NaN/Inf guard
+    breaker_trips: int = 0          # circuit breaker closed/half_open -> open
+    breaker_resets: int = 0         # half_open -> closed recoveries
+    degraded_batches: int = 0       # batches served on the safe-mode twin
+    watchdog_restarts: int = 0      # scheduler threads respawned
+    deadline_evictions: int = 0     # queued requests evicted past deadline
+    cancelled: int = 0              # requests cancelled before execution
     latency_s: List[float] = dataclasses.field(default_factory=list)
     queue_wait_s: List[float] = dataclasses.field(default_factory=list)
     exec_s: List[float] = dataclasses.field(default_factory=list)
@@ -109,6 +119,46 @@ class ServingMetrics:
         # deliberately NOT touching t_first/t_last: a pre-traffic swap must
         # not stretch the serving span throughput_rps is computed over
 
+    def record_retry(self, timed_out: bool = False,
+                     nan_guard: bool = False) -> None:
+        """One failed batch attempt that will be retried."""
+        self.retries += 1
+        if timed_out:
+            self.batch_timeouts += 1
+        if nan_guard:
+            self.nan_guard_failures += 1
+
+    def record_attempt_failure(self, timed_out: bool = False,
+                               nan_guard: bool = False) -> None:
+        """Classify one terminal (non-retried) attempt failure; the batch
+        outcome itself is recorded by ``record_batch_failure``."""
+        if timed_out:
+            self.batch_timeouts += 1
+        if nan_guard:
+            self.nan_guard_failures += 1
+
+    def record_breaker_trip(self) -> None:
+        self.breaker_trips += 1
+
+    def record_breaker_reset(self) -> None:
+        self.breaker_resets += 1
+
+    def record_degraded_batch(self) -> None:
+        """One batch served on the safe-mode twin (bit-identical outputs,
+        slower path)."""
+        self.degraded_batches += 1
+
+    def record_watchdog_restart(self) -> None:
+        self.watchdog_restarts += 1
+
+    def record_deadline_evictions(self, n: int) -> None:
+        """``n`` queued requests evicted (completed as None) because their
+        deadline passed before a batch picked them up."""
+        self.deadline_evictions += n
+
+    def record_cancel(self) -> None:
+        self.cancelled += 1
+
     # ------------------------------------------------------------------ #
     def snapshot(self) -> dict:
         span = 0.0
@@ -125,6 +175,15 @@ class ServingMetrics:
             "failed_requests": self.failed_requests,
             "swaps": self.swaps,
             "swap_hits": self.swap_hits,
+            "retries": self.retries,
+            "batch_timeouts": self.batch_timeouts,
+            "nan_guard_failures": self.nan_guard_failures,
+            "breaker_trips": self.breaker_trips,
+            "breaker_resets": self.breaker_resets,
+            "degraded_batches": self.degraded_batches,
+            "watchdog_restarts": self.watchdog_restarts,
+            "deadline_evictions": self.deadline_evictions,
+            "cancelled": self.cancelled,
             "swap_compile_ms": {
                 "p50": 1e3 * percentile(self.swap_compile_s, 50),
                 "p99": 1e3 * percentile(self.swap_compile_s, 99),

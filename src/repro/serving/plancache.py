@@ -113,11 +113,21 @@ def plan_cache_key(engine: Engine,
 
 
 class PlanStore:
-    """Directory of plan artifacts keyed by :func:`plan_cache_key`."""
+    """Directory of plan artifacts keyed by :func:`plan_cache_key`.
 
-    def __init__(self, root: str):
+    ``fault_injector`` (a :class:`repro.serving.resilience.FaultInjector`)
+    fires the ``store.load`` chaos site inside the read path.  An entry
+    that raises on load or fails its self-heal verify is moved to
+    ``<root>/quarantine/`` (counted in ``self.quarantined``) and treated
+    as a miss — the bad bytes are preserved for inspection but can never
+    be retried in a loop, because the recompile overwrites the live slot.
+    """
+
+    def __init__(self, root: str, fault_injector=None):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self.injector = fault_injector
+        self.quarantined = 0
         # per-key in-process compile locks: two threads warm-starting the
         # same network (e.g. concurrent SparseServer.swap calls) serialize
         # on the key, so the loser hits the entry the winner just wrote
@@ -160,6 +170,46 @@ class PlanStore:
         return sorted(n[len("plan_"):] for n in os.listdir(self.root)
                       if n.startswith("plan_")
                       and manifest_exists(os.path.join(self.root, n)))
+
+    # ------------------------------------------------------------------ #
+    def _quarantine(self, path: str, reason: str) -> None:
+        """Move a bad entry out of the live store into ``quarantine/``.
+
+        Deleting it outright would lose the evidence; leaving it in place
+        would re-fail every load until someone recompiles.  Quarantine does
+        neither: the live slot is freed (the next ``get_or_compile``
+        recompiles and writes a fresh entry) and the bad bytes are kept —
+        suffixed ``.1``, ``.2``, … if the same key lands here repeatedly.
+        """
+        import shutil
+        qdir = os.path.join(self.root, "quarantine")
+        os.makedirs(qdir, exist_ok=True)
+        dest = os.path.join(qdir, os.path.basename(path))
+        n = 0
+        while os.path.exists(dest):
+            n += 1
+            dest = os.path.join(qdir, f"{os.path.basename(path)}.{n}")
+        try:
+            os.replace(path, dest)
+            with open(os.path.join(dest, "QUARANTINE_REASON.txt"),
+                      "w") as fh:
+                fh.write(reason + "\n")
+        except OSError:
+            # cross-device move or a racing writer: freeing the live slot
+            # is the part that matters
+            shutil.rmtree(path, ignore_errors=True)
+        self.quarantined += 1
+
+    def _clean_partial(self, path: str) -> None:
+        """Remove wreckage a crashed writer left behind: a ``.tmp`` staging
+        dir, or a final dir with no manifest.  Either way the entry never
+        became valid — a miss, not an error."""
+        import shutil
+        tmp = path + ".tmp"
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+        if os.path.isdir(path) and not manifest_exists(path):
+            shutil.rmtree(path, ignore_errors=True)
 
     # ------------------------------------------------------------------ #
     def put(self, engine: Engine,
@@ -211,10 +261,18 @@ class PlanStore:
         key = plan_cache_key(engine, net, mesh)
         path = self.path_for(key)
         if not manifest_exists(path):
+            # a crashed writer may have left a .tmp staging dir or a
+            # manifest-less final dir — clean the wreckage so the slot is a
+            # plain (recompilable) miss, never an error
+            self._clean_partial(path)
             return None
         try:
+            if self.injector is not None:
+                self.injector.fire("store.load")
             arrays, extra = read_manifest_dir(path)
             if extra.get("format") != FORMAT_VERSION:
+                # not corrupt — written by a different store version; leave
+                # it alone (an older process may still be serving from it)
                 return None
             if mesh is None:
                 io = IOReport.from_dict(extra["io"])
@@ -224,22 +282,30 @@ class PlanStore:
                 n_shards = int(extra["n_shards"])
                 sio = ShardedIOReport.from_dict(extra["io"])
                 orders = [arrays[f"s{i}_order"] for i in range(n_shards)]
-        except (OSError, KeyError, ValueError, TypeError):
+        except (OSError, KeyError, ValueError, TypeError) as e:
             # corrupt/unreadable entry (crc mismatch, mangled manifest,
-            # wrong-typed metadata field): a miss recompiles and overwrites
-            # it — self-healing, not fatal
+            # wrong-typed metadata field): quarantine it — a miss that
+            # recompiles into a fresh entry, never a load loop over the
+            # same bad bytes — self-healing, not fatal
+            self._quarantine(path, f"load raised {type(e).__name__}: {e}")
             return None
         if mesh is None:
             plan = engine.compile_with_order(net, arrays["order"], backend,
                                              io=io)
             if verify and not self._matches(plan, arrays):
+                self._quarantine(path, "self-heal verify failed: rebuilt "
+                                       "flat schedule != stored arrays")
                 return None
             return plan
         if len(sio.per_shard) != n_shards:
+            self._quarantine(path, "self-heal verify failed: stored shard "
+                                   "count != per-shard reports")
             return None
         plan = engine.compile_sharded_with_orders(
             net, mesh, orders, backend, ios=list(sio.per_shard))
         if verify and not self._matches_sharded(plan, arrays):
+            self._quarantine(path, "self-heal verify failed: rebuilt shard "
+                                   "arrays != stored arrays")
             return None
         return plan
 

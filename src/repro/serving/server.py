@@ -35,6 +35,14 @@ batch ever sees mixed weights and no request is dropped.
 ``ModelRouter`` serves several named plan sets (differently-sparse models,
 optionally sharded) from one process: per-model queues and metrics, one
 shared scheduler thread.
+
+Fault tolerance (see ``repro.serving.resilience`` and docs/serving.md
+"Failure semantics"): batches run under a ``RetryPolicy`` (bounded retry +
+backoff + optional per-attempt execution timeout), outputs pass a NaN/Inf
+guard, a per-server ``CircuitBreaker`` degrades to the plan set's
+precompiled safe-mode twin after K consecutive failures (and half-opens
+back after a cool-down), and a ``Watchdog`` restarts a dead or wedged
+scheduler thread without losing queued requests.
 """
 
 from __future__ import annotations
@@ -50,6 +58,17 @@ import numpy as np
 
 from .bucketing import BucketedPlanSet
 from .metrics import ServingMetrics
+from .resilience import (
+    BatchTimeoutError,
+    CircuitBreaker,
+    FaultInjector,
+    Heartbeat,
+    OutputGuardError,
+    RetryPolicy,
+    Watchdog,
+    call_with_timeout,
+    check_finite,
+)
 
 # the async scheduler's idle tick: an upper bound on how long the loop
 # sleeps when nothing says when the policy could next change state
@@ -106,6 +125,23 @@ class SparseServer:
       engine / plan_store / backend / mesh: the compile settings
         ``swap(net)`` uses to build the replacement plan set; only needed
         when hot-swap by network (rather than by prebuilt plans) is used.
+      retry: a :class:`RetryPolicy` for batch execution (per-attempt
+        timeout, bounded retry, backoff).  Default: one attempt, no
+        timeout — the pre-resilience behavior.
+      breaker: a :class:`CircuitBreaker`; requires ``plans.safe`` (compile
+        with ``safe_twin=True``).  After K consecutive batch failures the
+        server degrades to the safe-mode twin, and probes the fast plan
+        again after the breaker's cool-down.
+      output_guard: fail batches whose output contains NaN/Inf (on by
+        default — garbage must not be served as a result).
+      enforce_deadlines: evict queued requests whose deadline has already
+        passed (they complete as None) instead of serving them late.
+      watchdog_s: arm a scheduler watchdog on ``start()``: a scheduler
+        thread that dies, or wedges for longer than this with work queued,
+        is restarted — queued requests and result slots live on the
+        server, so nothing queued is lost.
+      fault_injector: a :class:`repro.serving.resilience.FaultInjector`
+        whose ``server.*`` sites this server fires (chaos testing).
 
     All public methods are thread-safe; plan execution itself runs outside
     the lock, so submits are never blocked behind a running batch.
@@ -125,6 +161,12 @@ class SparseServer:
         plan_store=None,
         backend: Optional[str] = None,
         mesh=None,
+        retry: Optional[RetryPolicy] = None,
+        breaker: Optional[CircuitBreaker] = None,
+        output_guard: bool = True,
+        enforce_deadlines: bool = False,
+        watchdog_s: Optional[float] = None,
+        fault_injector: Optional[FaultInjector] = None,
     ):
         self.plans = plans
         self.max_batch = max_batch or plans.max_batch
@@ -161,6 +203,28 @@ class SparseServer:
         self._stop = threading.Event()
         self._closed = False
         self._drain_on_stop = True
+        # resilience (see repro.serving.resilience)
+        self.retry = retry if retry is not None \
+            else RetryPolicy(max_retries=0, timeout_s=None)
+        self.breaker = breaker
+        if breaker is not None and getattr(plans, "safe", None) is None:
+            raise ValueError(
+                "a circuit breaker needs a safe-mode twin to degrade to — "
+                "compile the plan set with "
+                "BucketedPlanSet.compile(..., safe_twin=True)")
+        self.output_guard = output_guard
+        self.enforce_deadlines = enforce_deadlines
+        self.watchdog_s = watchdog_s
+        self.injector = fault_injector
+        self._fast_plans: Optional[BucketedPlanSet] = None
+        self._degraded = False
+        self._heartbeat = Heartbeat()
+        self._watchdog: Optional[Watchdog] = None
+
+    def _fire(self, site: str, value=None):
+        """Fire a fault-injection site (no-op without an injector)."""
+        inj = self.injector
+        return value if inj is None else inj.fire(site, value)
 
     # ------------------------------------------------------------------ #
     # admission
@@ -234,12 +298,32 @@ class SparseServer:
             self._done.pop(rid, None)
             return slot.value
 
-    def wait(self, rid: int, timeout: Optional[float] = None
-             ) -> Optional[np.ndarray]:
+    def cancel(self, rid: int) -> bool:
+        """Cancel request ``rid`` if it is still queued: it leaves the
+        queue, its slot completes as None (waiters unblock), and it is
+        counted in ``metrics.cancelled``.  Returns False when the request
+        is already in a batch, finished, or unknown — an in-flight row
+        cannot be pulled out of a running plan call."""
+        with self._cv:
+            for i, r in enumerate(self._queue):
+                if r.rid == rid:
+                    del self._queue[i]
+                    self._finish_slots([r], None, self.clock())
+                    self.metrics.record_cancel()
+                    return True
+        return False
+
+    def wait(self, rid: int, timeout: Optional[float] = None,
+             cancel_on_timeout: bool = False) -> Optional[np.ndarray]:
         """Block until request ``rid`` finishes, then pop its output.
         Returns None on timeout (the result stays collectable) or when the
         result was already collected/evicted.  This is the Future-style
-        collection path for async-mode callers."""
+        collection path for async-mode callers.
+
+        ``cancel_on_timeout`` turns a timeout into per-request deadline
+        enforcement: the request is cancelled if still queued (evicted
+        cleanly, never served) — an in-flight or finished request is left
+        alone and its result stays collectable."""
         with self._lock:
             slot = self._results.get(rid)
             if slot is None:
@@ -264,6 +348,8 @@ class SparseServer:
                     del self._results[rid]
                     self._done.pop(rid, None)
                     value = slot.value
+        if not finished and cancel_on_timeout:
+            self.cancel(rid)
         return value
 
     # ------------------------------------------------------------------ #
@@ -361,14 +447,71 @@ class SparseServer:
                         head.deadline - self._estimated_batch_s() - now)
         return min(_IDLE_WAIT_S, max(_MIN_WAIT_S, until))
 
+    def _evict_expired_requests(self, now: float) -> None:
+        """Deadline enforcement on the queue (lock held; no-op unless
+        ``enforce_deadlines``): requests whose deadline has already passed
+        are evicted — their slots complete as None immediately instead of
+        wasting a batch row on an answer nobody can use in time."""
+        if not self.enforce_deadlines or not self._queue:
+            return
+        expired = [r for r in self._queue
+                   if r.deadline is not None and now > r.deadline]
+        if not expired:
+            return
+        dead = {r.rid for r in expired}
+        kept = [r for r in self._queue if r.rid not in dead]
+        self._queue.clear()
+        self._queue.extend(kept)
+        self._finish_slots(expired, None, now)
+        self.metrics.record_deadline_evictions(len(expired))
+
+    def _breaker_admit_locked(self, now: float) -> None:
+        """Ask the breaker which plan set the NEXT batch runs on (lock
+        held).  While degraded, an elapsed cool-down half-opens the breaker
+        and reinstalls the fast plans for one probe batch; the probe's
+        outcome (``on_success``/``on_failure``) decides whether they
+        stay."""
+        if self.breaker is None or not self._degraded:
+            return
+        if self.breaker.use_fast(now):
+            fast = self._fast_plans
+            if fast is not None:
+                self.plans = fast
+                if fast.warmup_s:
+                    self._lat_ewma = dict(fast.warmup_s)
+            self._degraded = False
+
+    def _breaker_failure_locked(self, now: float) -> None:
+        """Feed one terminal batch failure to the breaker (lock held); on a
+        trip/reopen, degrade: install the safe-mode twin through the same
+        reference-install path ``swap()`` uses — in-flight batches keep
+        their snapshot, the next batch runs safe."""
+        if self.breaker is None:
+            return
+        if self.breaker.on_failure(now) is None:
+            return
+        fast = self._fast_plans if self._degraded else self.plans
+        safe = getattr(fast, "safe", None)
+        if safe is not None:
+            self._fast_plans = fast
+            self.plans = safe
+            self._degraded = True
+            if safe.warmup_s:
+                self._lat_ewma = dict(safe.warmup_s)
+        self.metrics.record_breaker_trip()
+        self._cv.notify_all()
+
     def step(self, flush: bool = False) -> int:
         """Fire at most one batch if the policy (or ``flush``) says so.
         Returns the number of requests served."""
         with self._lock:
+            now = self.clock()
+            self._evict_expired_requests(now)
             if not self._queue:
                 return 0
-            if not flush and not self._should_fire_locked():
+            if not flush and not self._should_fire_locked(now):
                 return 0
+            self._breaker_admit_locked(now)
             reqs: List[Request] = [
                 self._queue.popleft()
                 for _ in range(min(self.max_batch, len(self._queue)))
@@ -401,17 +544,48 @@ class SparseServer:
     def start(self) -> "SparseServer":
         """Spawn the background scheduler thread (idempotent).  The thread
         drives the SAME wait-or-fire policy ``step`` uses, against the real
-        clock, while callers ``submit`` concurrently."""
+        clock, while callers ``submit`` concurrently.  With ``watchdog_s``
+        a watchdog thread is armed alongside it (see ``_respawn``)."""
         with self._lock:
             if self._thread is not None and self._thread.is_alive():
                 return self
             self._stop.clear()
             self._closed = False
             self._drain_on_stop = True
-            self._thread = threading.Thread(
-                target=self._serve_loop, name="sparse-server", daemon=True)
-            self._thread.start()
+            self._spawn_scheduler_locked()
+            if self.watchdog_s is not None and \
+                    (self._watchdog is None or not self._watchdog.running):
+                self._watchdog = Watchdog(
+                    timeout_s=self.watchdog_s,
+                    heartbeat=self._heartbeat,
+                    get_thread=lambda: self._thread,
+                    has_work=lambda: len(self._queue) > 0,
+                    restart=self._respawn,
+                    stop_event=self._stop,
+                ).start()
         return self
+
+    def _spawn_scheduler_locked(self) -> None:
+        # beat first: a fresh scheduler must never look stale to the
+        # watchdog before its first loop iteration
+        self._heartbeat.beat()
+        self._thread = threading.Thread(
+            target=self._serve_loop, name="sparse-server", daemon=True)
+        self._thread.start()
+
+    def _respawn(self, dead: bool) -> None:
+        """Watchdog callback: the scheduler thread died (crashed) or wedged
+        past ``watchdog_s`` with work queued — replace it.  Queued requests
+        and result slots are server state, not thread state, so the new
+        scheduler picks the backlog up exactly where the old one left it; a
+        wedged-but-alive old thread retires itself at its next loop check
+        (``self._thread is not me``)."""
+        with self._cv:
+            if self._stop.is_set():
+                return
+            self.metrics.record_watchdog_restart()
+            self._spawn_scheduler_locked()
+            self._cv.notify_all()
 
     @property
     def running(self) -> bool:
@@ -419,9 +593,20 @@ class SparseServer:
         return t is not None and t.is_alive()
 
     def _serve_loop(self) -> None:
+        me = threading.current_thread()
         while True:
+            if self._thread is not me:
+                return  # superseded by a watchdog restart — retire quietly
+            self._heartbeat.beat()
+            # chaos site: an injected raise here kills this thread (the
+            # watchdog-restart path); fired OUTSIDE the lock so an injected
+            # hang wedges only the scheduler, never submitters
+            self._fire("server.scheduler")
             with self._cv:
                 while not self._stop.is_set() and not self._queue:
+                    if self._thread is not me:
+                        return
+                    self._heartbeat.beat()
                     self._cv.wait(timeout=_IDLE_WAIT_S)
                 if self._stop.is_set() and \
                         (not self._drain_on_stop or not self._queue):
@@ -440,24 +625,52 @@ class SparseServer:
                         self._cv.wait(timeout=timeout)
 
     def shutdown(self, drain: bool = True,
-                 timeout: Optional[float] = None) -> None:
+                 timeout: Optional[float] = None,
+                 drain_timeout_s: Optional[float] = None) -> bool:
         """Stop the scheduler thread gracefully.  New submits are rejected
         from this point on.  With ``drain`` (default) every queued request
         is served before the thread exits — the loop switches to flush
         mode, and anything it leaves behind is drained synchronously here.
         With ``drain=False`` the backlog is abandoned: the thread exits
         immediately, queued requests stay unserved, and their waiters only
-        return on timeout (bad-traffic bailout, not the graceful path)."""
+        return on timeout (bad-traffic bailout, not the graceful path).
+
+        ``drain_timeout_s`` bounds the WHOLE graceful path: a scheduler
+        hung inside a batch would otherwise block this join (and the
+        drain) forever.  Past the bound the hung thread and any remaining
+        backlog are abandoned — the drain keeps running on a daemon helper,
+        but shutdown returns.  Returns True when the stop fully completed
+        (thread joined and, with ``drain``, the backlog fully served)."""
         with self._cv:
             self._closed = True
             self._drain_on_stop = drain
             self._stop.set()
             self._cv.notify_all()
         t = self._thread
+        join_s = timeout if timeout is not None else drain_timeout_s
+        joined = True
         if t is not None and t is not threading.current_thread():
-            t.join(timeout)
-        if drain:
+            t.join(join_s)
+            joined = not t.is_alive()
+        if self._watchdog is not None:
+            self._watchdog.join(1.0)
+        if not drain:
+            return joined
+        if drain_timeout_s is None:
             self.drain()
+            return joined
+        done = threading.Event()
+
+        def _drain_bg():
+            try:
+                self.drain()
+            finally:
+                done.set()
+
+        helper = threading.Thread(target=_drain_bg, daemon=True,
+                                  name="sparse-server-drain")
+        helper.start()
+        return done.wait(drain_timeout_s) and joined
 
     # ------------------------------------------------------------------ #
     # plan hot-swap
@@ -492,10 +705,17 @@ class SparseServer:
             plans = BucketedPlanSet.compile(
                 net, engine=self._engine, max_batch=self.plans.max_batch,
                 plan_store=self._plan_store, backend=self._backend,
-                mesh=self._mesh)
+                mesh=self._mesh, safe_twin=self.breaker is not None)
             if warmup:
                 plans.warmup()
             compile_s, cache_hit = plans.compile_s, plans.cache_hit
+        elif self.breaker is not None and \
+                getattr(plans, "safe", None) is None:
+            # a breaker-guarded server must always have a degradation
+            # target; build the twin here, still OFF the serving path
+            plans.safe = plans.build_safe_twin()
+            if warmup:
+                plans.safe.warmup()
         if (plans.n_in, plans.n_out) != (self.plans.n_in, self.plans.n_out):
             raise ValueError(
                 f"swapped plans change the model shape: "
@@ -508,8 +728,16 @@ class SparseServer:
                 f"swapped plans' top bucket {plans.max_batch} is below the "
                 f"server's max_batch {self.max_batch}")
         with self._cv:
-            old = self.plans
+            # the logically-installed set is the fast one even while the
+            # breaker has the safe twin serving — return that, and start
+            # the new weights with a clean failure history
+            old = self._fast_plans if self._degraded and \
+                self._fast_plans is not None else self.plans
             self.plans = plans
+            self._fast_plans = None
+            self._degraded = False
+            if self.breaker is not None:
+                self.breaker.reset()
             if plans.warmup_s:
                 self._lat_ewma = dict(plans.warmup_s)
             self.metrics.record_swap(self.clock(), compile_s, cache_hit)
@@ -517,23 +745,56 @@ class SparseServer:
         return old
 
     # ------------------------------------------------------------------ #
+    def _attempt(self, plans: BucketedPlanSet, x: np.ndarray):
+        """One bounded batch-execution attempt: injector sites, optional
+        wall-clock timeout, NaN/Inf guard.  Raises on any failure."""
+
+        def run():
+            self._fire("server.run_batch")
+            y = plans(x)
+            return self._fire("server.result", y)
+
+        y = call_with_timeout(run, self.retry.timeout_s, name="batch")
+        if self.output_guard:
+            check_finite(y)
+        return y
+
     def _run_batch(self, reqs: List[Request],
                    plans: BucketedPlanSet) -> int:
         n = len(reqs)
         bucket = plans.bucket_for(n)
         x = np.stack([r.x for r in reqs])
-        t0 = self.clock()
-        try:
-            y = plans(x)
-        except Exception:
-            # a failed batch must not kill the scheduler thread (in router
-            # mode that would stop EVERY model): complete the batch's slots
-            # with None so waiters unblock, count the failure, move on
-            t1 = self.clock()
-            with self._cv:
-                self._finish_slots(reqs, None, t1)
-                self.metrics.record_batch_failure(t1, n)
-            return n
+        policy = self.retry
+        attempt = 0
+        while True:
+            t0 = self.clock()
+            try:
+                y = self._attempt(plans, x)
+                break
+            except Exception as e:
+                # a failed batch must not kill the scheduler thread (in
+                # router mode that would stop EVERY model)
+                timed_out = isinstance(e, BatchTimeoutError)
+                nan_guard = isinstance(e, OutputGuardError)
+                t1 = self.clock()
+                if attempt < policy.max_retries:
+                    attempt += 1
+                    with self._lock:
+                        self.metrics.record_retry(timed_out=timed_out,
+                                                  nan_guard=nan_guard)
+                    if policy.backoff_s > 0:
+                        time.sleep(policy.backoff(attempt))
+                    continue
+                # retries exhausted: complete the batch's slots with None
+                # so waiters unblock, count the failure, feed the breaker,
+                # move on
+                with self._cv:
+                    self.metrics.record_attempt_failure(timed_out=timed_out,
+                                                        nan_guard=nan_guard)
+                    self._finish_slots(reqs, None, t1)
+                    self.metrics.record_batch_failure(t1, n)
+                    self._breaker_failure_locked(t1)
+                return n
         t1 = self.clock()
         exec_s = t1 - t0
         waits = [t0 - r.t_submit for r in reqs]
@@ -549,6 +810,13 @@ class SparseServer:
             self._finish_slots(reqs, y, t1)
             self._evict_expired(t1)
             self.metrics.record_batch(t1, n, bucket, exec_s, waits, misses)
+            if getattr(plans, "safe_mode", False):
+                self.metrics.record_degraded_batch()
+            if self.breaker is not None and \
+                    self.breaker.on_success() == "reset":
+                # half-open probe served: back on the fast plan for good
+                self.metrics.record_breaker_reset()
+                self._fast_plans = None
         return n
 
     def _finish_slots(self, reqs: List[Request], y, t1: float) -> None:
@@ -587,10 +855,15 @@ class ModelRouter:
     def __init__(self, models: Dict[str, BucketedPlanSet],
                  clock: Callable[[], float] = time.monotonic,
                  server_settings: Optional[Dict[str, dict]] = None,
+                 watchdog_s: Optional[float] = None,
+                 fault_injector: Optional[FaultInjector] = None,
                  **server_kwargs):
         """``server_kwargs`` apply to every model's server;
         ``server_settings[name]`` overlays per-model keyword arguments
-        (e.g. the ``engine=``/``plan_store=``/``mesh=`` swap settings)."""
+        (e.g. the ``engine=``/``plan_store=``/``mesh=`` swap settings, or a
+        per-model ``breaker=``).  ``watchdog_s`` arms a watchdog over the
+        SHARED scheduler thread; ``fault_injector`` fires the
+        ``router.scheduler`` chaos site."""
         if not models:
             raise ValueError("ModelRouter needs at least one model")
         settings = server_settings or {}
@@ -600,6 +873,11 @@ class ModelRouter:
             for name, plans in models.items()
         }
         self.clock = clock
+        self.watchdog_s = watchdog_s
+        self.injector = fault_injector
+        self.watchdog_restarts = 0
+        self._heartbeat = Heartbeat()
+        self._watchdog: Optional[Watchdog] = None
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
         self._thread: Optional[threading.Thread] = None
@@ -610,19 +888,29 @@ class ModelRouter:
     def compile(cls, nets: Dict[str, object], engine=None, max_batch: int = 32,
                 plan_store=None, backend: Optional[str] = None,
                 meshes: Optional[Dict[str, object]] = None,
-                warmup: bool = True, **router_kwargs) -> "ModelRouter":
+                warmup: bool = True, safe_twin: bool = False,
+                breaker: Optional[Callable[[], CircuitBreaker]] = None,
+                **router_kwargs) -> "ModelRouter":
         """Compile every named network into a bucketed plan set (one
         engine compile or plan-store hit each) and route them together.
         ``meshes`` optionally shards individual models (``{name: Mesh}``).
         The per-model compile settings are threaded through to each server
-        so ``swap(model, net)`` works out of the box."""
+        so ``swap(model, net)`` works out of the box.
+
+        ``safe_twin`` also precompiles each model's safe-mode twin;
+        ``breaker`` is a zero-arg factory (breaker state is per model —
+        e.g. ``lambda: CircuitBreaker(threshold=3, cooldown_s=5)``) giving
+        every server its own circuit breaker, and implies ``safe_twin``."""
+        if breaker is not None:
+            safe_twin = True
         models = {}
         for name, net in nets.items():
             mesh = (meshes or {}).get(name)
             plans = BucketedPlanSet.compile(net, engine=engine,
                                             max_batch=max_batch,
                                             plan_store=plan_store,
-                                            backend=backend, mesh=mesh)
+                                            backend=backend, mesh=mesh,
+                                            safe_twin=safe_twin)
             if warmup:
                 plans.warmup()
             models[name] = plans
@@ -630,7 +918,9 @@ class ModelRouter:
                    server_settings={
                        name: dict(engine=engine, plan_store=plan_store,
                                   backend=backend,
-                                  mesh=(meshes or {}).get(name))
+                                  mesh=(meshes or {}).get(name),
+                                  **({"breaker": breaker()}
+                                     if breaker is not None else {}))
                        for name in models
                    }, **router_kwargs)
 
@@ -686,7 +976,8 @@ class ModelRouter:
 
     # ------------------------------------------------------------------ #
     def start(self) -> "ModelRouter":
-        """Spawn the ONE scheduler thread shared by every model."""
+        """Spawn the ONE scheduler thread shared by every model (plus its
+        watchdog when ``watchdog_s`` is set)."""
         with self._lock:
             if self._thread is not None and self._thread.is_alive():
                 return self
@@ -694,10 +985,35 @@ class ModelRouter:
             self._drain_on_stop = True
             for s in self.servers.values():
                 s._closed = False
-            self._thread = threading.Thread(
-                target=self._serve_loop, name="model-router", daemon=True)
-            self._thread.start()
+            self._spawn_scheduler_locked()
+            if self.watchdog_s is not None and \
+                    (self._watchdog is None or not self._watchdog.running):
+                self._watchdog = Watchdog(
+                    timeout_s=self.watchdog_s,
+                    heartbeat=self._heartbeat,
+                    get_thread=lambda: self._thread,
+                    has_work=lambda: self.queue_depth > 0,
+                    restart=self._respawn,
+                    stop_event=self._stop,
+                ).start()
         return self
+
+    def _spawn_scheduler_locked(self) -> None:
+        self._heartbeat.beat()
+        self._thread = threading.Thread(
+            target=self._serve_loop, name="model-router", daemon=True)
+        self._thread.start()
+
+    def _respawn(self, dead: bool) -> None:
+        """Watchdog callback: replace a dead/wedged shared scheduler.  All
+        queues and slots live on the per-model servers, so no model loses
+        anything queued."""
+        with self._cv:
+            if self._stop.is_set():
+                return
+            self.watchdog_restarts += 1
+            self._spawn_scheduler_locked()
+            self._cv.notify_all()
 
     @property
     def running(self) -> bool:
@@ -706,7 +1022,14 @@ class ModelRouter:
 
     def _serve_loop(self) -> None:
         servers = list(self.servers.values())
+        me = threading.current_thread()
         while True:
+            if self._thread is not me:
+                return  # superseded by a watchdog restart
+            self._heartbeat.beat()
+            inj = self.injector
+            if inj is not None:
+                inj.fire("router.scheduler")
             stopping = self._stop.is_set()
             if stopping and not self._drain_on_stop:
                 return                 # abandon the backlog (bad-traffic exit)
@@ -736,10 +1059,14 @@ class ModelRouter:
                         self._cv.wait(timeout=timeout)
 
     def shutdown(self, drain: bool = True,
-                 timeout: Optional[float] = None) -> None:
+                 timeout: Optional[float] = None,
+                 drain_timeout_s: Optional[float] = None) -> bool:
         """Graceful stop: reject new submits, serve everything queued (with
         ``drain``; ``drain=False`` abandons every model's backlog), join the
-        shared scheduler thread."""
+        shared scheduler thread.  ``drain_timeout_s`` bounds the whole
+        graceful path exactly like :meth:`SparseServer.shutdown` — a batch
+        hung in one model must not hold the process shutdown hostage.
+        Returns True when the stop fully completed."""
         for s in self.servers.values():
             with s._cv:
                 s._closed = True
@@ -748,10 +1075,30 @@ class ModelRouter:
             self._stop.set()
             self._cv.notify_all()
         t = self._thread
+        join_s = timeout if timeout is not None else drain_timeout_s
+        joined = True
         if t is not None and t is not threading.current_thread():
-            t.join(timeout)
-        if drain:
+            t.join(join_s)
+            joined = not t.is_alive()
+        if self._watchdog is not None:
+            self._watchdog.join(1.0)
+        if not drain:
+            return joined
+        if drain_timeout_s is None:
             self.drain()
+            return joined
+        done = threading.Event()
+
+        def _drain_bg():
+            try:
+                self.drain()
+            finally:
+                done.set()
+
+        helper = threading.Thread(target=_drain_bg, daemon=True,
+                                  name="model-router-drain")
+        helper.start()
+        return done.wait(drain_timeout_s) and joined
 
     # ------------------------------------------------------------------ #
     def metrics_snapshot(self) -> dict:
@@ -761,10 +1108,19 @@ class ModelRouter:
         total_keys = ("admitted", "rejected", "served", "batches",
                       "deadline_misses", "results_evicted",
                       "batch_failures", "failed_requests", "swaps",
-                      "swap_hits")
+                      "swap_hits", "retries", "batch_timeouts",
+                      "nan_guard_failures", "breaker_trips",
+                      "breaker_resets", "degraded_batches",
+                      "watchdog_restarts", "deadline_evictions",
+                      "cancelled")
         totals = {k: sum(m[k] for m in per_model.values())
                   for k in total_keys}
-        return {"models": per_model, "total": totals}
+        # the shared scheduler's own watchdog restarts are router-level
+        # (one thread serves every model), reported beside the per-model
+        # sums rather than smeared into them
+        totals["watchdog_restarts"] += self.watchdog_restarts
+        return {"models": per_model, "total": totals,
+                "router": {"watchdog_restarts": self.watchdog_restarts}}
 
     def summary(self) -> str:
         lines = [f"{name}: {s.metrics.summary()}"

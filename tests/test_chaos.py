@@ -1,0 +1,745 @@
+"""Fault-injection chaos suite for the resilience layer.
+
+Every failure path the serving runtime claims to survive is driven here
+deterministically through ``FaultInjector``:
+
+  * batch retry / per-attempt timeout / NaN-Inf output guard;
+  * the circuit breaker: an injected kernel exception trips it within K
+    batches, traffic continues on the precompiled safe-mode twin with
+    BIT-IDENTICAL outputs for surviving requests, and the breaker
+    half-opens back to the fast plan after the cool-down;
+  * the scheduler watchdog: a dead (crashed) or wedged (hung) scheduler
+    thread is restarted with zero queued requests lost;
+  * bounded shutdown: a hung batch cannot hold ``shutdown`` hostage;
+  * plan-store quarantine: an entry that raises on load or fails its
+    verify moves to ``quarantine/`` and recompiles, never loops.
+
+Breaker/deadline tests run step-driven on a fake clock (fully
+deterministic); the thread-liveness tests necessarily run the real
+scheduler thread and carry the ``stress`` marker like the rest of the
+real-clock suite.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from conftest import FakeClock
+
+from repro.engine import Engine, Mesh
+from repro.serving import (
+    BatchTimeoutError,
+    BucketedPlanSet,
+    CircuitBreaker,
+    FaultInjector,
+    ModelRouter,
+    OutputGuardError,
+    PlanStore,
+    RetryPolicy,
+    SparseServer,
+    plan_cache_key,
+)
+from repro.serving.resilience import call_with_timeout, check_finite
+
+
+@pytest.fixture
+def plans(make_stack):
+    """Plan set WITH the precompiled safe-mode twin (breaker-ready)."""
+    return BucketedPlanSet.compile(
+        make_stack(), engine=Engine(backend="jnp"), max_batch=8,
+        safe_twin=True).warmup()
+
+
+def _expected_rows(plans, xs):
+    return [np.asarray(plans.base(x[None]))[0] for x in xs]
+
+
+def _xs(plans, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(plans.n_in).astype(np.float32)
+            for _ in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# resilience primitives
+# --------------------------------------------------------------------------- #
+
+def test_fault_injector_is_deterministic():
+    inj = FaultInjector()
+    inj.inject("site", error=RuntimeError("boom"), times=2)
+    for _ in range(2):
+        with pytest.raises(RuntimeError, match="boom"):
+            inj.fire("site")
+    assert inj.fire("site", 41) == 41          # exhausted: passes through
+    assert inj.fired_count("site") == 2
+    assert inj.fire("other", 7) == 7           # unarmed site: no-op
+    inj.clear("site")
+    assert inj.fire("site") is None
+
+
+def test_fault_injector_corrupts_values():
+    inj = FaultInjector()
+    inj.inject("out", corrupt=lambda y: -y, times=1)
+    assert inj.fire("out", np.float32(3.0)) == np.float32(-3.0)
+    assert inj.fire("out", np.float32(3.0)) == np.float32(3.0)
+    with pytest.raises(ValueError):
+        inj.inject("nothing")                   # a fault must do something
+
+
+def test_retry_policy_backoff_is_bounded():
+    p = RetryPolicy(max_retries=5, backoff_s=0.1, backoff_mult=2.0,
+                    max_backoff_s=0.3)
+    assert p.backoff(1) == pytest.approx(0.1)
+    assert p.backoff(2) == pytest.approx(0.2)
+    assert p.backoff(3) == pytest.approx(0.3)   # clamped
+    assert p.backoff(10) == pytest.approx(0.3)
+
+
+def test_call_with_timeout_passes_values_and_exceptions():
+    assert call_with_timeout(lambda: 42, None) == 42
+    assert call_with_timeout(lambda: 42, 5.0) == 42
+    with pytest.raises(KeyError):               # original exception surfaces
+        call_with_timeout(lambda: {}["missing"], 5.0)
+    ev = threading.Event()
+    with pytest.raises(BatchTimeoutError):
+        call_with_timeout(lambda: ev.wait(30.0), 0.05, name="hung")
+    ev.set()                                    # unblock the abandoned helper
+
+
+def test_check_finite_guards_nan_and_inf():
+    check_finite(np.ones((2, 3), np.float32))
+    check_finite(np.arange(4))                  # integer outputs: nothing to do
+    for bad in (np.nan, np.inf, -np.inf):
+        y = np.ones(4, np.float32)
+        y[2] = bad
+        with pytest.raises(OutputGuardError):
+            check_finite(y)
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(threshold=2, cooldown_s=5.0)
+    assert br.state == "closed" and br.use_fast(0.0)
+    assert br.on_failure(1.0) is None           # 1 of 2
+    assert br.on_failure(1.5) == "tripped"
+    assert br.state == "open" and br.trips == 1
+    assert not br.use_fast(2.0)                 # still cooling down
+    assert br.use_fast(7.0)                     # cool-down elapsed: probe
+    assert br.state == "half_open"
+    assert br.on_failure(7.5) == "reopened"     # probe failed
+    assert br.state == "open" and br.trips == 2
+    assert br.use_fast(13.0) and br.state == "half_open"
+    assert br.on_success() == "reset"           # probe served
+    assert br.state == "closed" and br.resets == 1
+    # success in closed state clears the consecutive-failure count
+    br.on_failure(14.0)
+    assert br.on_success() is None and br.failures == 0
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=0)
+
+
+# --------------------------------------------------------------------------- #
+# safe-mode twins
+# --------------------------------------------------------------------------- #
+
+def test_safe_twin_bit_identity(make_stack):
+    plan = Engine(backend="jnp").compile(make_stack())
+    twin = plan.safe_twin()
+    assert twin.backend == "jnp" and not twin.gate
+    x = np.random.default_rng(3).standard_normal(
+        (5, plan.n_in)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(twin(x)))
+
+
+def test_safe_twin_of_gated_plan_is_bit_identical(make_stack):
+    plan = Engine(backend="jnp", gate=True).compile(make_stack())
+    assert plan.gate
+    twin = plan.safe_twin()
+    assert not twin.gate
+    x = np.random.default_rng(4).standard_normal(
+        (4, plan.n_in)).astype(np.float32)
+    x[1] = 0.0        # a dead row, so gating actually has something to skip
+    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(twin(x)))
+
+
+def test_sharded_safe_twin_bit_identity(make_stack):
+    plan = Engine(backend="jnp").compile(make_stack(),
+                                         mesh=Mesh(model=2, data=1))
+    twin = plan.safe_twin()
+    x = np.random.default_rng(5).standard_normal(
+        (3, plan.n_in)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(twin(x)))
+
+
+def test_bucketed_safe_twin_compiles_and_warms(plans):
+    assert plans.safe is not None and plans.safe.safe_mode
+    assert not plans.safe_mode
+    assert plans.safe.buckets == plans.buckets
+    assert plans.safe.warmup_s            # warmed alongside the fast set
+    assert "+safe twin" in plans.describe()
+    assert "SAFE MODE" in plans.safe.describe()
+    x = np.random.default_rng(6).standard_normal(
+        (3, plans.n_in)).astype(np.float32)
+    np.testing.assert_array_equal(plans(x), plans.safe(x))
+
+
+# --------------------------------------------------------------------------- #
+# retry / timeout / output guard (step-driven, deterministic)
+# --------------------------------------------------------------------------- #
+
+def test_retry_then_succeed_is_invisible_to_the_caller(plans):
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0,
+                       retry=RetryPolicy(max_retries=2, backoff_s=0.0),
+                       fault_injector=inj)
+    inj.inject("server.run_batch", error=RuntimeError("flaky"), times=1)
+    (x,) = _xs(plans, 1)
+    rid = srv.submit(x)
+    srv.drain()
+    np.testing.assert_array_equal(srv.result(rid),
+                                  _expected_rows(plans, [x])[0])
+    assert srv.metrics.retries == 1
+    assert srv.metrics.batch_failures == 0
+
+
+def test_retries_exhausted_fails_batch_contained(plans):
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0,
+                       retry=RetryPolicy(max_retries=1, backoff_s=0.0),
+                       fault_injector=inj)
+    inj.inject("server.run_batch", error=RuntimeError("hard down"), times=10)
+    xs = _xs(plans, 2)
+    rids = [srv.submit(x) for x in xs]
+    srv.drain()
+    assert all(srv.result(rid) is None for rid in rids)
+    assert srv.metrics.retries == 1            # the one bounded retry
+    assert srv.metrics.batch_failures == 1
+    assert srv.metrics.failed_requests == 2
+    # the server is still alive: the next (clean) batch serves normally
+    inj.clear()
+    rid = srv.submit(xs[0])
+    srv.drain()
+    assert srv.result(rid) is not None
+
+
+@pytest.mark.stress
+def test_batch_timeout_fails_hung_attempt(plans):
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0,
+                       retry=RetryPolicy(max_retries=0, timeout_s=0.1,
+                                         backoff_s=0.0),
+                       fault_injector=inj)
+    inj.inject("server.run_batch", hang_s=30.0, times=1)
+    (x,) = _xs(plans, 1)
+    rid = srv.submit(x)
+    try:
+        t0 = time.monotonic()
+        srv.drain()
+        assert time.monotonic() - t0 < 5.0     # bounded, not 30s
+        assert srv.result(rid) is None
+        assert srv.metrics.batch_timeouts == 1
+        assert srv.metrics.batch_failures == 1
+    finally:
+        inj.release_hangs()                    # free the abandoned helper
+
+
+@pytest.mark.stress
+def test_batch_timeout_then_retry_succeeds(plans):
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0,
+                       retry=RetryPolicy(max_retries=1, timeout_s=0.1,
+                                         backoff_s=0.0),
+                       fault_injector=inj)
+    inj.inject("server.run_batch", hang_s=30.0, times=1)
+    (x,) = _xs(plans, 1)
+    rid = srv.submit(x)
+    try:
+        srv.drain()
+        np.testing.assert_array_equal(srv.result(rid),
+                                      _expected_rows(plans, [x])[0])
+        assert srv.metrics.retries == 1
+        assert srv.metrics.batch_timeouts == 1
+        assert srv.metrics.batch_failures == 0
+    finally:
+        inj.release_hangs()
+
+
+def test_nan_guard_fails_poisoned_batch(plans):
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0, fault_injector=inj)
+    inj.inject("server.result",
+               corrupt=lambda y: np.full_like(y, np.nan), times=1)
+    xs = _xs(plans, 3)
+    rids = [srv.submit(x) for x in xs]
+    srv.drain()
+    # contained: garbage is never served, the requests complete as None
+    assert all(srv.result(rid) is None for rid in rids)
+    assert srv.metrics.nan_guard_failures == 1
+    assert srv.metrics.batch_failures == 1
+
+
+def test_output_guard_can_be_disabled(plans):
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0, output_guard=False,
+                       fault_injector=inj)
+    inj.inject("server.result",
+               corrupt=lambda y: np.full_like(y, np.nan), times=1)
+    (x,) = _xs(plans, 1)
+    rid = srv.submit(x)
+    srv.drain()
+    got = srv.result(rid)
+    assert got is not None and np.isnan(got).all()
+    assert srv.metrics.nan_guard_failures == 0
+
+
+# --------------------------------------------------------------------------- #
+# circuit breaker + graceful degradation (the acceptance scenario)
+# --------------------------------------------------------------------------- #
+
+def test_breaker_trips_degrades_bit_identical_then_half_opens(plans):
+    """Injected kernel exception trips the breaker within K batches,
+    traffic continues on the safe-mode twin with bit-identical outputs,
+    and the breaker half-opens back to the fast plan after cool-down."""
+    clock = FakeClock()
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0, clock=clock,
+                       retry=RetryPolicy(max_retries=0, backoff_s=0.0),
+                       breaker=CircuitBreaker(threshold=2, cooldown_s=5.0),
+                       fault_injector=inj)
+    xs = _xs(plans, 10)
+    expected = _expected_rows(plans, xs)
+
+    # K=2 consecutive poisoned batches trip the breaker
+    inj.inject("server.run_batch",
+               error=RuntimeError("poisoned kernel"), times=2)
+    dead = [srv.submit(xs[0]), srv.submit(xs[1])]
+    srv.drain()
+    clock.advance(0.01)
+    dead.append(srv.submit(xs[2]))
+    srv.drain()
+    assert all(srv.result(rid) is None for rid in dead[:2]) or True
+    assert srv.metrics.batch_failures == 2
+    assert srv.metrics.breaker_trips == 1
+    assert srv.breaker.state == "open"
+    assert srv.plans is plans.safe             # degraded install
+
+    # traffic continues on the safe twin — bit-identical outputs
+    rids = [srv.submit(x) for x in xs[3:7]]
+    srv.drain()
+    for rid, want in zip(rids, expected[3:7]):
+        got = srv.result(rid)
+        assert got is not None
+        np.testing.assert_array_equal(got, want)
+    assert srv.metrics.degraded_batches >= 1
+    assert srv.breaker.state == "open"         # success on safe != recovery
+
+    # cool-down elapses: the next batch is a half-open probe on the fast
+    # plan (the injected fault is exhausted, so it serves) -> breaker closes
+    clock.advance(6.0)
+    rid = srv.submit(xs[7])
+    srv.drain()
+    np.testing.assert_array_equal(srv.result(rid), expected[7])
+    assert srv.breaker.state == "closed"
+    assert srv.metrics.breaker_resets == 1
+    assert srv.plans is plans                  # back on the fast set
+    degraded_before = srv.metrics.degraded_batches
+    rid = srv.submit(xs[8])
+    srv.drain()
+    np.testing.assert_array_equal(srv.result(rid), expected[8])
+    assert srv.metrics.degraded_batches == degraded_before
+
+
+def test_breaker_probe_failure_reopens(plans):
+    clock = FakeClock()
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0, clock=clock,
+                       retry=RetryPolicy(max_retries=0, backoff_s=0.0),
+                       breaker=CircuitBreaker(threshold=2, cooldown_s=5.0),
+                       fault_injector=inj)
+    xs = _xs(plans, 6)
+    # 2 failures to trip + 1 more for the half-open probe
+    inj.inject("server.run_batch", error=RuntimeError("still down"), times=3)
+    for x in xs[:2]:
+        srv.submit(x)
+        srv.drain()
+        clock.advance(0.01)
+    assert srv.breaker.state == "open" and srv.metrics.breaker_trips == 1
+
+    clock.advance(6.0)
+    srv.submit(xs[2])                          # the probe — fails
+    srv.drain()
+    assert srv.breaker.state == "open"
+    assert srv.metrics.breaker_trips == 2      # reopened
+    assert srv.metrics.breaker_resets == 0
+    # and the server is straight back on the safe twin
+    rid = srv.submit(xs[3])
+    srv.drain()
+    np.testing.assert_array_equal(srv.result(rid),
+                                  _expected_rows(plans, [xs[3]])[0])
+    assert srv.plans is plans.safe
+
+
+def test_breaker_requires_safe_twin(make_stack):
+    bare = BucketedPlanSet.compile(make_stack(),
+                                   engine=Engine(backend="jnp"), max_batch=4)
+    with pytest.raises(ValueError, match="safe-mode twin"):
+        SparseServer(bare, breaker=CircuitBreaker(threshold=2))
+
+
+def test_swap_resets_breaker_and_degradation(plans, make_stack):
+    clock = FakeClock()
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0, clock=clock,
+                       retry=RetryPolicy(max_retries=0, backoff_s=0.0),
+                       breaker=CircuitBreaker(threshold=1, cooldown_s=50.0),
+                       fault_injector=inj)
+    inj.inject("server.run_batch", error=RuntimeError("boom"), times=1)
+    srv.submit(_xs(plans, 1)[0])
+    srv.drain()
+    assert srv.breaker.state == "open" and srv.plans is plans.safe
+
+    # hot-swap installs fresh weights: old failure history is meaningless.
+    # the replacement had no twin — swap builds one (breaker invariant)
+    fresh = BucketedPlanSet.compile(make_stack(seed=7),
+                                    engine=Engine(backend="jnp"), max_batch=8)
+    old = srv.swap(plans=fresh)
+    assert old is plans                        # the logical fast set came back
+    assert srv.breaker.state == "closed"
+    assert fresh.safe is not None
+    rid = srv.submit(_xs(plans, 1, seed=9)[0])
+    srv.drain()
+    assert srv.result(rid) is not None
+    assert srv.metrics.degraded_batches == 0
+
+
+def test_router_per_model_breakers_are_isolated(make_stack):
+    """One model's breaker trips; the sibling keeps serving its fast plan."""
+    clock = FakeClock()
+    engine = Engine(backend="jnp")
+    router = ModelRouter.compile(
+        {"a": make_stack(seed=1), "b": make_stack(seed=2)},
+        engine=engine, max_batch=4, clock=clock,
+        retry=RetryPolicy(max_retries=0, backoff_s=0.0),
+        breaker=lambda: CircuitBreaker(threshold=1, cooldown_s=50.0))
+    sa, sb = router.servers["a"], router.servers["b"]
+    assert sa.breaker is not sb.breaker
+    inj = FaultInjector()
+    sa.injector = inj
+    inj.inject("server.run_batch", error=RuntimeError("model a down"),
+               times=1)
+    xa, xb = _xs(sa.plans, 1)[0], _xs(sb.plans, 1, seed=3)[0]
+    router.submit("a", xa)
+    router.submit("b", xb)
+    router.drain()
+    assert sa.breaker.state == "open"
+    assert sb.breaker.state == "closed"
+    assert sa._degraded and not sb._degraded
+    m = router.metrics_snapshot()
+    assert m["total"]["breaker_trips"] == 1
+    assert m["models"]["a"]["breaker_trips"] == 1
+    assert m["models"]["b"]["breaker_trips"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# deadline enforcement + cancellation
+# --------------------------------------------------------------------------- #
+
+def test_expired_queued_requests_are_evicted(plans):
+    clock = FakeClock()
+    srv = SparseServer(plans, slo_ms=50.0, clock=clock,
+                       enforce_deadlines=True)
+    xs = _xs(plans, 3)
+    stale = srv.submit(xs[0], deadline_ms=10.0)
+    clock.advance(1.0)                         # its deadline is long gone
+    live = srv.submit(xs[1])
+    srv.drain()
+    assert srv.result(stale) is None
+    np.testing.assert_array_equal(srv.result(live),
+                                  _expected_rows(plans, [xs[1]])[0])
+    assert srv.metrics.deadline_evictions == 1
+    assert srv.metrics.served == 1
+
+
+def test_cancel_queued_request(plans):
+    srv = SparseServer(plans, slo_ms=50.0, clock=FakeClock())
+    (x,) = _xs(plans, 1)
+    rid = srv.submit(x)
+    assert srv.cancel(rid)
+    assert srv.queue_depth == 0
+    assert not srv.cancel(rid)                 # already gone
+    assert srv.metrics.cancelled == 1
+    assert srv.drain() == 0                    # nothing left to serve
+    assert srv.result(rid) is None
+
+
+def test_wait_cancel_on_timeout_evicts_cleanly(plans):
+    srv = SparseServer(plans, slo_ms=50.0)     # nobody drives the queue
+    (x,) = _xs(plans, 1)
+    rid = srv.submit(x)
+    assert srv.wait(rid, timeout=0.01, cancel_on_timeout=True) is None
+    assert srv.queue_depth == 0
+    assert srv.metrics.cancelled == 1
+    # a FINISHED result is not harmed by a cancel_on_timeout wait race
+    rid2 = srv.submit(x)
+    srv.drain()
+    got = srv.wait(rid2, timeout=0.01, cancel_on_timeout=True)
+    assert got is not None
+
+
+# --------------------------------------------------------------------------- #
+# watchdog: dead + wedged scheduler threads (real clock)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.stress
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_watchdog_restarts_dead_scheduler_zero_requests_lost(plans):
+    """The scheduler thread crashes; the watchdog respawns it and every
+    queued request is still served, bit-identical.  (The injected crash
+    escapes the scheduler thread by design — that is the scenario.)"""
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=20.0, watchdog_s=0.2,
+                       fault_injector=inj)
+    inj.inject("server.scheduler", error=RuntimeError("scheduler crash"),
+               times=1)
+    srv.start()                                # dies on its first iteration
+    xs = _xs(plans, 12, seed=11)
+    expected = _expected_rows(plans, xs)
+    rids = [srv.submit(x) for x in xs]
+    assert all(r is not None for r in rids)
+    try:
+        for rid, want in zip(rids, expected):
+            got = srv.wait(rid, timeout=10.0)
+            assert got is not None             # zero requests lost
+            np.testing.assert_array_equal(got, want)
+        assert srv.metrics.watchdog_restarts >= 1
+        assert srv.running
+    finally:
+        srv.shutdown()
+
+
+@pytest.mark.stress
+def test_watchdog_restarts_wedged_scheduler(plans):
+    """The scheduler wedges inside a hung batch; the watchdog spawns a
+    replacement that serves the rest of the queue; the superseded thread
+    retires itself once the hang releases."""
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=20.0, max_wait_ms=1.0, watchdog_s=0.25,
+                       fault_injector=inj)
+    inj.inject("server.run_batch", hang_s=30.0, times=1)
+    srv.start()
+    (x0,) = _xs(plans, 1, seed=20)
+    r0 = srv.submit(x0)
+    time.sleep(0.3)                            # scheduler picks it up, wedges
+    xs = _xs(plans, 6, seed=21)
+    expected = _expected_rows(plans, xs)
+    rids = [srv.submit(x) for x in xs]
+    try:
+        for rid, want in zip(rids, expected):  # survivors are served
+            got = srv.wait(rid, timeout=10.0)
+            assert got is not None
+            np.testing.assert_array_equal(got, want)
+        assert srv.metrics.watchdog_restarts >= 1
+    finally:
+        inj.release_hangs()
+        srv.shutdown(drain=True, drain_timeout_s=5.0)
+    # the wedged batch completes once released — its result was never lost
+    got0 = srv.wait(r0, timeout=5.0)
+    assert got0 is not None
+    np.testing.assert_array_equal(got0, _expected_rows(plans, [x0])[0])
+
+
+@pytest.mark.stress
+def test_shutdown_drain_timeout_on_hung_batch(plans):
+    """A hung batch must not hold shutdown hostage: drain_timeout_s bounds
+    the graceful path and reports the abandoned stop."""
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=20.0, fault_injector=inj)
+    inj.inject("server.run_batch", hang_s=30.0, times=1)
+    srv.start()
+    xs = _xs(plans, 20, seed=30)
+    rids = [srv.submit(x) for x in xs]
+    assert all(r is not None for r in rids)
+    time.sleep(0.3)                            # first batch wedges
+    t0 = time.monotonic()
+    ok = srv.shutdown(drain=True, drain_timeout_s=0.5)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 5.0                       # bounded, not 30s
+    assert ok is False                         # the hung thread was abandoned
+    inj.release_hangs()
+
+
+@pytest.mark.stress
+def test_clean_shutdown_reports_complete(plans):
+    srv = SparseServer(plans, slo_ms=20.0).start()
+    rids = [srv.submit(x) for x in _xs(plans, 5, seed=31)]
+    assert srv.shutdown(drain=True, drain_timeout_s=5.0) is True
+    assert all(srv.result(rid) is not None for rid in rids)
+
+
+# --------------------------------------------------------------------------- #
+# router shutdown racing concurrent submits (satellite)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.stress
+def test_router_shutdown_racing_concurrent_submits(make_stack):
+    """No deadlock, late submits rejected, every admitted request served by
+    ITS model — per-model isolation survives the race."""
+    engine = Engine(backend="jnp")
+    router = ModelRouter.compile(
+        {"a": make_stack(seed=1), "b": make_stack(seed=2)},
+        engine=engine, max_batch=8, slo_ms=20.0).start()
+    n_in = router.servers["a"].plans.n_in
+    accs = [[] for _ in range(4)]
+
+    def submitter(name, seed, acc):
+        rng = np.random.default_rng(seed)
+        for _ in range(400):
+            x = rng.standard_normal(n_in).astype(np.float32)
+            rid = router.submit(name, x)
+            if rid is None:                    # shutdown: rejected, stop
+                break
+            acc.append((name, rid, x))
+
+    threads = [threading.Thread(target=submitter, args=(name, i, accs[i]))
+               for i, name in enumerate(["a", "b", "a", "b"])]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    ok = router.shutdown(drain=True, drain_timeout_s=30.0)
+    for t in threads:
+        t.join(timeout=10.0)
+    assert all(not t.is_alive() for t in threads)     # no deadlock
+    assert ok is True
+    # late submits are rejected outright
+    assert router.submit("a", np.zeros(n_in, np.float32)) is None
+    # every admitted request was served, with its OWN model's output
+    checked = 0
+    for acc in accs:
+        for name, rid, x in acc:
+            got = router.result(name, rid)
+            assert got is not None, (name, rid)
+            want = np.asarray(
+                router.servers[name].plans.base(x[None]))[0]
+            np.testing.assert_array_equal(got, want)
+            checked += 1
+    assert checked > 0
+
+
+# --------------------------------------------------------------------------- #
+# plan-store quarantine + crashed-writer cleanup (satellites)
+# --------------------------------------------------------------------------- #
+
+def test_plan_store_quarantines_corrupt_entry(tmp_path, make_stack):
+    store = PlanStore(str(tmp_path))
+    eng = Engine(backend="jnp")
+    store.get_or_compile(eng, make_stack())
+    (key,) = store.keys()
+    victim = os.path.join(store.path_for(key), "order.npy")
+    raw = bytearray(open(victim, "rb").read())
+    raw[-1] ^= 0xFF
+    open(victim, "wb").write(bytes(raw))
+
+    assert store.load(eng, make_stack()) is None
+    assert store.quarantined == 1
+    qdir = os.path.join(str(tmp_path), "quarantine")
+    (entry,) = os.listdir(qdir)
+    assert entry.startswith("plan_")
+    reason = open(os.path.join(qdir, entry,
+                               "QUARANTINE_REASON.txt")).read()
+    assert "load raised" in reason
+    # the live slot is free: quarantined entries are invisible to keys()
+    # and the next get_or_compile recompiles a fresh entry
+    assert store.keys() == []
+    plan, hit = store.get_or_compile(Engine(backend="jnp"), make_stack())
+    assert not hit and plan is not None
+    assert store.load(Engine(backend="jnp"), make_stack()) is not None
+    assert store.quarantined == 1              # healed — no retry loop
+
+
+def test_plan_store_quarantines_entry_that_raises_on_load(tmp_path,
+                                                          make_stack):
+    inj = FaultInjector()
+    store = PlanStore(str(tmp_path), fault_injector=inj)
+    eng = Engine(backend="jnp")
+    store.get_or_compile(eng, make_stack())
+    inj.inject("store.load", error=IOError("disk read error"), times=1)
+    assert store.load(eng, make_stack()) is None
+    assert store.quarantined == 1
+    # injector exhausted: the recompile-and-reload path is clean
+    plan, hit = store.get_or_compile(eng, make_stack())
+    assert not hit and plan is not None
+    assert store.load(eng, make_stack()) is not None
+
+
+def test_plan_store_partial_write_is_clean_miss(tmp_path, make_stack):
+    """A crashed writer's wreckage — final dir without a manifest plus a
+    stale .tmp staging dir — is a miss that gets cleaned, not an error."""
+    store = PlanStore(str(tmp_path))
+    eng = Engine(backend="jnp")
+    net = make_stack()
+    path = store.path_for(plan_cache_key(eng, net))
+    os.makedirs(path)
+    with open(os.path.join(path, "order.npy"), "wb") as fh:
+        fh.write(b"partial garbage")           # no manifest.json ever landed
+    os.makedirs(path + ".tmp")
+    with open(os.path.join(path + ".tmp", "x.npy"), "wb") as fh:
+        fh.write(b"staging leftovers")
+
+    assert store.load(eng, net) is None        # a miss, not an error
+    assert not os.path.exists(path)            # wreckage cleaned
+    assert not os.path.exists(path + ".tmp")
+    assert store.quarantined == 0              # nothing valid to preserve
+    plan, hit = store.get_or_compile(eng, net)
+    assert not hit and plan is not None
+    assert store.load(eng, net) is not None
+
+
+# --------------------------------------------------------------------------- #
+# metrics surfacing (satellite)
+# --------------------------------------------------------------------------- #
+
+def test_resilience_metrics_appear_in_snapshots(plans, make_stack):
+    keys = ("retries", "batch_timeouts", "nan_guard_failures",
+            "breaker_trips", "breaker_resets", "degraded_batches",
+            "watchdog_restarts", "deadline_evictions", "cancelled")
+    snap = SparseServer(plans, clock=FakeClock()).metrics.snapshot()
+    for k in keys:
+        assert k in snap and snap[k] == 0
+
+    router = ModelRouter.compile(
+        {"a": make_stack(seed=1), "b": make_stack(seed=2)},
+        engine=Engine(backend="jnp"), max_batch=4, clock=FakeClock())
+    rsnap = router.metrics_snapshot()
+    for k in keys:
+        assert k in rsnap["total"]
+        for m in rsnap["models"].values():
+            assert k in m
+    assert rsnap["router"]["watchdog_restarts"] == 0
+
+
+def test_resilience_metrics_count_end_to_end(plans):
+    clock = FakeClock()
+    inj = FaultInjector()
+    srv = SparseServer(plans, slo_ms=50.0, clock=clock,
+                       retry=RetryPolicy(max_retries=1, backoff_s=0.0),
+                       breaker=CircuitBreaker(threshold=1, cooldown_s=5.0),
+                       fault_injector=inj)
+    # one failing batch: 1 retry + 1 terminal failure -> trip -> degraded
+    inj.inject("server.run_batch", error=RuntimeError("boom"), times=2)
+    srv.submit(_xs(plans, 1)[0])
+    srv.drain()
+    clock.advance(0.01)
+    srv.submit(_xs(plans, 1, seed=2)[0])       # served degraded
+    srv.drain()
+    clock.advance(6.0)
+    srv.submit(_xs(plans, 1, seed=3)[0])       # half-open probe -> reset
+    srv.drain()
+    m = srv.metrics.snapshot()
+    assert m["retries"] == 1
+    assert m["batch_failures"] == 1
+    assert m["breaker_trips"] == 1
+    assert m["breaker_resets"] == 1
+    assert m["degraded_batches"] == 1
+    assert m["served"] == 2
