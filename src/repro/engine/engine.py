@@ -41,6 +41,7 @@ from repro.core.iosim import simulate
 from repro.core.reorder import connection_reordering
 from repro.kernels.ops import compile_flat_schedule, compile_schedule
 from repro.models.common import ACTIVATIONS as _MODEL_ACTIVATIONS
+from repro.obs.trace import NULL_TRACER
 
 from .backends import (
     make_forward,
@@ -129,8 +130,18 @@ class Engine:
     fuse: bool = True
     gate: bool = False
     jit: bool = True
+    # a repro.obs.Tracer recording compile-phase spans (Theorem-1 schedule,
+    # CR/annealing, packing, backend lowering, I/O simulation).  Not part
+    # of _plan_key — tracing never changes what gets compiled or cached.
+    tracer: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
     _cache: Dict[Tuple, Union[ExecutionPlan, ShardedExecutionPlan]] = \
         dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def _tr(self):
+        tr = self.tracer
+        return tr if tr is not None else NULL_TRACER
 
     # ------------------------------------------------------------------ #
     def compile(
@@ -237,15 +248,17 @@ class Engine:
                order: Optional[np.ndarray] = None,
                io: Optional[IOReport] = None) -> ExecutionPlan:
         t0 = time.perf_counter()
+        tr = self._tr
         layers = bffnn.layers
         annealer_iters = 0
         if order is None:
             order = self.schedule_order(bffnn)
             annealer_iters = self.reorder_iters if self.reorder else 0
-        schedules = []
-        for k in range(len(layers)):
-            perm, _, _, _, _ = schedule_arrays(bffnn, order, k)
-            schedules.append(compile_schedule(layers[k], perm))
+        with tr.span("compile.pack", layers=len(layers)):
+            schedules = []
+            for k in range(len(layers)):
+                perm, _, _, _, _ = schedule_arrays(bffnn, order, k)
+                schedules.append(compile_schedule(layers[k], perm))
 
         if isinstance(self.activation, (list, tuple)):
             if len(self.activation) != len(layers) - 1:
@@ -259,38 +272,46 @@ class Engine:
         fact = _resolve_activation(self.final_activation)
         activations: List[Optional[Callable]] = hidden + [fact]
 
-        flat = None
-        fallback_reason: Optional[str] = None
-        if self.fuse:
-            try:
-                flat = compile_flat_schedule(layers, schedules)
-            except ValueError as e:
-                flat = None  # non-uniform tiles: per-layer dispatch fallback
-                fallback_reason = str(e)
-        measure = None
-        if flat is not None:
-            try:
-                forward = make_fused_forward(layers, flat, activations,
-                                             backend, jit=self.jit,
-                                             gate=self.gate)
-                if self.gate:
-                    measure = make_fused_measure(layers, flat, activations,
-                                                 backend, jit=self.jit)
-            except ValueError as e:
-                # e.g. heterogeneous hidden epilogues: the megakernel fuses
-                # exactly one — record why instead of failing silently.
-                flat = None
-                fallback_reason = str(e)
-        if flat is None:
-            forward = make_forward(layers, schedules, activations, backend,
-                                   jit=self.jit, gate=self.gate)
-            if self.gate and backend != "jnp":
-                note = "occupancy gating inactive on the layered pallas path"
-                fallback_reason = f"{fallback_reason}; {note}" \
-                    if fallback_reason else note
+        with tr.span("compile.lower", backend=backend,
+                     gate=self.gate) as sp:
+            flat = None
+            fallback_reason: Optional[str] = None
+            if self.fuse:
+                try:
+                    flat = compile_flat_schedule(layers, schedules)
+                except ValueError as e:
+                    flat = None  # non-uniform tiles: per-layer fallback
+                    fallback_reason = str(e)
+            measure = None
+            if flat is not None:
+                try:
+                    forward = make_fused_forward(layers, flat, activations,
+                                                 backend, jit=self.jit,
+                                                 gate=self.gate)
+                    if self.gate:
+                        measure = make_fused_measure(layers, flat,
+                                                     activations, backend,
+                                                     jit=self.jit)
+                except ValueError as e:
+                    # e.g. heterogeneous hidden epilogues: the megakernel
+                    # fuses exactly one — record why instead of failing
+                    # silently.
+                    flat = None
+                    fallback_reason = str(e)
+            if flat is None:
+                forward = make_forward(layers, schedules, activations,
+                                       backend, jit=self.jit, gate=self.gate)
+                if self.gate and backend != "jnp":
+                    note = ("occupancy gating inactive on the layered "
+                            "pallas path")
+                    fallback_reason = f"{fallback_reason}; {note}" \
+                        if fallback_reason else note
+            sp["fused"] = flat is not None
         if io is None:
-            io = self.io_report(bffnn, order,
-                                schedules if flat is not None else None)
+            with tr.span("compile.io_report", policy=self.policy,
+                         M_tiles=self.M_tiles):
+                io = self.io_report(bffnn, order,
+                                    schedules if flat is not None else None)
         return ExecutionPlan(
             layers=list(layers),
             schedules=schedules,
@@ -311,14 +332,20 @@ class Engine:
     def schedule_order(self, bffnn: BlockFFNN) -> np.ndarray:
         """Whole-DAG connection order: Theorem-1 grouping, then optional CR
         re-grouped back into the kernel-compatible 2-optimal family."""
-        order = bffnn.net.theorem1_order()
+        tr = self._tr
+        with tr.span("compile.theorem1") as sp:
+            order = bffnn.net.theorem1_order()
+            sp["connections"] = int(len(order))
         if self.reorder:
-            res = connection_reordering(
-                bffnn.net, order, M=self.M_tiles, policy=self.policy,
-                T=self.reorder_iters, seed=self.seed,
-                max_move_span=self.max_move_span,
-            )
-            order = regroup_by_output(bffnn.net, res.order)
+            with tr.span("compile.reorder", iters=self.reorder_iters,
+                         M_tiles=self.M_tiles,
+                         max_move_span=self.max_move_span):
+                res = connection_reordering(
+                    bffnn.net, order, M=self.M_tiles, policy=self.policy,
+                    T=self.reorder_iters, seed=self.seed,
+                    max_move_span=self.max_move_span,
+                )
+                order = regroup_by_output(bffnn.net, res.order)
         return order
 
     def io_report(self, bffnn: BlockFFNN, order: np.ndarray,

@@ -381,6 +381,15 @@ class ExecutionPlan:
         self.io = dataclasses.replace(self.io, dynamic=report)
         return report
 
+    def trace_attrs(self) -> dict:
+        """Flat span-attribute dict describing this plan's I/O profile —
+        backend, fusion/gating, simulated tile I/O vs the Theorem-1 lower
+        bound, and the latest measured dynamic read counts when present
+        (:func:`repro.obs.telemetry.plan_io_attrs`).  This is what the
+        serving runtime stamps on every ``batch.execute`` span."""
+        from repro.obs.telemetry import plan_io_attrs
+        return plan_io_attrs(self)
+
     def describe(self) -> str:
         shapes = " -> ".join(
             [str(self.n_in)] + [str(l.n_out) for l in self.layers])

@@ -22,6 +22,17 @@ variants from one process via a shared-scheduler ``ModelRouter``:
 
     PYTHONPATH=src python -m repro.launch.serve --sparse-ffnn --async \
         --models 2 --requests 64
+
+Observability: ``--metrics-port P`` exposes a Prometheus text endpoint
+(``/metrics``, port 0 = ephemeral) with the full serving snapshot — SLO
+metrics, resilience state, and the per-bucket static-vs-dynamic I/O gauges
+from the engine's block-read accounting; ``--trace-out PATH`` records the
+request lifecycle (submit -> queue -> batch -> result, plus compile phases
+and breaker transitions) and dumps a Chrome-trace JSON (or ``.jsonl``) on
+exit, including graceful SIGTERM drain:
+
+    PYTHONPATH=src python -m repro.launch.serve --sparse-ffnn --gate \
+        --requests 64 --metrics-port 0 --trace-out /tmp/serve_trace.json
 """
 
 from __future__ import annotations
@@ -69,6 +80,7 @@ def serve_sparse_ffnn(args) -> None:
     import signal
 
     from repro.engine import Engine, Mesh
+    from repro.obs import MetricsServer, Tracer
     from repro.serving import (
         BucketedPlanSet,
         CircuitBreaker,
@@ -80,11 +92,18 @@ def serve_sparse_ffnn(args) -> None:
 
     rng = np.random.default_rng(0)
     sizes = args.ffnn_sizes
+    # one tracer for the whole process: engine compile phases, plan-store
+    # hits/misses, and every request's lifecycle land in a single export
+    tracer = Tracer() if args.trace_out else None
     engine = Engine(backend=args.backend, activation="gelu", reorder=True,
                     reorder_iters=args.reorder_iters,
-                    fuse=not args.no_fuse, gate=args.gate)
+                    fuse=not args.no_fuse, gate=args.gate, tracer=tracer)
     mesh = Mesh.parse(args.mesh) if args.mesh else None
-    store = PlanStore(args.plan_store) if args.plan_store else None
+    store = (PlanStore(args.plan_store, tracer=tracer)
+             if args.plan_store else None)
+    # gating makes the measured dynamic-I/O path available: sample every
+    # batch so the metrics endpoint carries live dynamic-vs-static gauges
+    measure_every = 1 if args.gate else 0
 
     # resilience knobs: a breaker needs the safe twin to degrade to;
     # --safe-mode serves the twin directly (so a breaker is moot there)
@@ -111,6 +130,7 @@ def serve_sparse_ffnn(args) -> None:
             nets, engine=engine, max_batch=args.batch, plan_store=store,
             meshes={name: mesh for name in nets} if mesh else None,
             max_queue=args.max_queue, slo_ms=args.slo_ms, retry=retry,
+            tracer=tracer, measure_dynamic_every=measure_every,
             breaker=(lambda: CircuitBreaker(
                 threshold=args.breaker,
                 cooldown_s=args.breaker_cooldown_ms / 1e3))
@@ -136,6 +156,7 @@ def serve_sparse_ffnn(args) -> None:
         server = SparseServer(
             plans, max_queue=args.max_queue, slo_ms=args.slo_ms,
             engine=engine, plan_store=store, mesh=mesh, retry=retry,
+            tracer=tracer, measure_dynamic_every=measure_every,
             breaker=CircuitBreaker(threshold=args.breaker,
                                    cooldown_s=args.breaker_cooldown_ms / 1e3)
             if want_breaker else None)
@@ -151,6 +172,11 @@ def serve_sparse_ffnn(args) -> None:
         signal.signal(sig, _drain_handler)
 
     runtime = router if multi else server
+    metrics_srv = None
+    if args.metrics_port is not None:
+        metrics_srv = MetricsServer(runtime.snapshot,
+                                    port=args.metrics_port).start()
+        print(f"metrics endpoint: {metrics_srv.url}")
     if args.async_mode:
         runtime.start()
         print("async scheduler thread started")
@@ -213,6 +239,25 @@ def serve_sparse_ffnn(args) -> None:
             xs = np.stack([rng.standard_normal(sizes[0]).astype(np.float32)
                            for _ in range(min(args.batch, 8))])
             print(base.measure_dynamic(xs).summary())
+
+    if metrics_srv is not None:
+        # scrape our own endpoint once so the run exercises the full HTTP
+        # exposition path (the CI smoke greps these lines)
+        import urllib.request
+        with urllib.request.urlopen(metrics_srv.url, timeout=5) as resp:
+            body = resp.read().decode("utf-8")
+        lines = body.splitlines()
+        print(f"metrics scrape: {len(lines)} lines from {metrics_srv.url}")
+        for ln in lines[:8]:
+            print(f"  {ln}")
+        for ln in lines:
+            if "_io_" in ln and not ln.startswith("#"):
+                print(f"  {ln}")
+        metrics_srv.stop()
+    if args.trace_out and tracer is not None:
+        path = tracer.export(args.trace_out)
+        print(f"trace: {tracer.recorded} spans recorded "
+              f"({tracer.dropped} dropped) -> {path}")
 
 
 def main():
@@ -277,6 +322,17 @@ def main():
     ap.add_argument("--retries", type=int, default=0,
                     help="bounded per-batch retry attempts (with "
                          "exponential backoff) before a batch fails")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
+                    help="expose a Prometheus text endpoint (/metrics) on "
+                         "this port with the live serving snapshot: SLO "
+                         "quantiles, resilience state, per-bucket static/"
+                         "dynamic block-read gauges (0 = ephemeral port; "
+                         "sparse-ffnn only)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request/compile/breaker spans and write a "
+                         "Chrome-trace JSON (.jsonl for line-delimited "
+                         "spans) on exit — open in chrome://tracing or "
+                         "Perfetto (sparse-ffnn only)")
     ap.add_argument("--batch-timeout-ms", type=float, default=None,
                     help="wall-clock bound on one batch execution attempt; "
                          "a hung attempt is abandoned and counted (and "

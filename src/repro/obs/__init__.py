@@ -1,0 +1,27 @@
+"""repro.obs — observability substrate for the serving runtime.
+
+Three pieces, documented in ``docs/observability.md``:
+
+  * :mod:`repro.obs.trace` — :class:`Tracer`, a thread-safe bounded
+    ring-buffer span recorder with Chrome-trace / JSONL export;
+  * :mod:`repro.obs.series` — :class:`BoundedSeries`, capped-memory metric
+    series with exact-then-bucketed percentiles;
+  * :mod:`repro.obs.telemetry` / :mod:`repro.obs.prom` — per-bucket I/O
+    gauges from the compiled plans and Prometheus text exposition.
+"""
+
+from .series import BoundedSeries
+from .telemetry import IOTelemetry, plan_io_attrs
+from .trace import NULL_TRACER, Span, Tracer
+from .prom import MetricsServer, render_prometheus
+
+__all__ = [
+    "BoundedSeries",
+    "IOTelemetry",
+    "plan_io_attrs",
+    "NULL_TRACER",
+    "Span",
+    "Tracer",
+    "MetricsServer",
+    "render_prometheus",
+]

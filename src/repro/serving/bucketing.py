@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.blocksparse import BlockFFNN, BSRLayer
 from repro.engine import Engine, ExecutionPlan, Mesh, ShardedExecutionPlan
+from repro.obs.trace import NULL_TRACER
 
 AnyPlan = Union[ExecutionPlan, ShardedExecutionPlan]
 
@@ -60,6 +61,15 @@ class BucketedPlanSet:
     compile_s: float = 0.0            # wall time of the compile/store lookup
     safe_mode: bool = False           # True on a safe twin (degraded path)
     safe: Optional["BucketedPlanSet"] = None   # precompiled safe-mode twin
+    # the engine's tracer (when set): fan-out and per-bucket warmup emit
+    # compile-phase spans through it.  Never part of equality/repr.
+    tracer: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
+
+    @property
+    def _tr(self):
+        tr = self.tracer
+        return tr if tr is not None else NULL_TRACER
 
     @classmethod
     def compile(
@@ -91,6 +101,8 @@ class BucketedPlanSet:
         compiling anything on the failure path.
         """
         engine = engine or Engine()
+        tracer = getattr(engine, "tracer", None)
+        tr = tracer if tracer is not None else NULL_TRACER
         t0 = time.perf_counter()
         if plan_store is not None:
             base, hit = plan_store.get_or_compile(engine, net, backend,
@@ -98,10 +110,12 @@ class BucketedPlanSet:
         else:
             base, hit = engine.compile(net, backend, mesh=mesh), False
         sizes = bucket_sizes(max_batch)
-        plans = {b: base.with_fresh_forward(jit=engine.jit) for b in sizes}
+        with tr.span("bucket.fanout", buckets=len(sizes), cache_hit=hit):
+            plans = {b: base.with_fresh_forward(jit=engine.jit)
+                     for b in sizes}
         out = cls(base=base, buckets=sizes, plans=plans, cache_hit=hit,
                   bucket_calls={b: 0 for b in sizes},
-                  compile_s=time.perf_counter() - t0)
+                  compile_s=time.perf_counter() - t0, tracer=tracer)
         if safe_twin:
             out.safe = out.build_safe_twin(jit=engine.jit)
         return out
@@ -160,12 +174,16 @@ class BucketedPlanSet:
         clause is dead until the first real batch completes).  Warmup calls
         are not counted."""
         dtype = self.dtype if dtype is None else dtype
+        tr = self._tr
         for b in self.buckets:
-            x = np.zeros((b, self.n_in), dtype)
-            np.asarray(self.plans[b](x))   # block until the trace completes
-            t0 = time.perf_counter()
-            np.asarray(self.plans[b](x))   # steady-state execution latency
-            self.warmup_s[b] = time.perf_counter() - t0
+            with tr.span("bucket.warmup", bucket=b,
+                         safe_mode=self.safe_mode) as sp:
+                x = np.zeros((b, self.n_in), dtype)
+                np.asarray(self.plans[b](x))   # block until trace completes
+                t0 = time.perf_counter()
+                np.asarray(self.plans[b](x))   # steady-state exec latency
+                self.warmup_s[b] = time.perf_counter() - t0
+                sp["warmup_s"] = round(self.warmup_s[b], 6)
             self.plans[b].calls = 0
         if self.safe is not None:
             # the degraded path must be warm too: a breaker trip is the

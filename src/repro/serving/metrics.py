@@ -4,12 +4,29 @@ Everything is recorded against the server's injected clock, so tests drive
 time deterministically and production uses ``time.monotonic``.  ``snapshot``
 returns a plain JSON-serializable dict — the same shape
 ``benchmarks/bench_serving.py`` writes into ``BENCH_serving.json``.
+
+Two properties matter for long-lived servers (PR 8):
+
+  * **bounded memory** — the observation series (``latency_s``,
+    ``queue_wait_s``, ``exec_s``, ``queue_depth``, ``swap_compile_s``,
+    ``batch_sizes``) are :class:`repro.obs.BoundedSeries`, not lists:
+    exact percentiles up to 4096 samples, then fixed log-bucket
+    estimates within ~12% relative error, O(1) memory forever after;
+  * **atomic snapshots** — all ``record_*`` methods and ``snapshot()``
+    share one internal lock, so a snapshot taken under traffic is a
+    consistent cut (``served`` always equals the latency series count,
+    never a torn read between them).  The lock is a *leaf*: nothing is
+    called while holding it, so it composes with the server/router locks
+    in any order.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional
+
+from ..obs.series import BoundedSeries
 
 
 def percentile(xs: List[float], q: float) -> float:
@@ -27,9 +44,13 @@ def percentile(xs: List[float], q: float) -> float:
     return ys[k]
 
 
+def _series() -> BoundedSeries:
+    return BoundedSeries()
+
+
 @dataclasses.dataclass
 class ServingMetrics:
-    """Counters + series for one server lifetime."""
+    """Counters + bounded series for one server lifetime."""
 
     admitted: int = 0
     rejected: int = 0
@@ -53,16 +74,21 @@ class ServingMetrics:
     watchdog_restarts: int = 0      # scheduler threads respawned
     deadline_evictions: int = 0     # queued requests evicted past deadline
     cancelled: int = 0              # requests cancelled before execution
-    latency_s: List[float] = dataclasses.field(default_factory=list)
-    queue_wait_s: List[float] = dataclasses.field(default_factory=list)
-    exec_s: List[float] = dataclasses.field(default_factory=list)
-    swap_compile_s: List[float] = dataclasses.field(default_factory=list)
-    queue_depth: List[int] = dataclasses.field(default_factory=list)
-    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    latency_s: BoundedSeries = dataclasses.field(default_factory=_series)
+    queue_wait_s: BoundedSeries = dataclasses.field(default_factory=_series)
+    exec_s: BoundedSeries = dataclasses.field(default_factory=_series)
+    swap_compile_s: BoundedSeries = dataclasses.field(default_factory=_series)
+    queue_depth: BoundedSeries = dataclasses.field(default_factory=_series)
+    batch_sizes: BoundedSeries = dataclasses.field(default_factory=_series)
     bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
     max_queue_depth: int = 0
     t_first: Optional[float] = None
     t_last: Optional[float] = None
+    # leaf lock: record_* are called from submit, scheduler, and watchdog
+    # threads while snapshot() runs from metrics scrapes — one lock makes
+    # every snapshot a consistent cut.  Nothing is called while held.
+    _mu: threading.Lock = dataclasses.field(default_factory=threading.Lock,
+                                            repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     def record_submit(self, now: float, depth: int, admitted: bool) -> None:
@@ -71,144 +97,161 @@ class ServingMetrics:
         rejected submits, so the ``queue_depth`` series is comparable across
         both.  ``max_queue_depth`` separately tracks the depth *attained*:
         an admitted request deepens the queue to ``depth + 1``."""
-        if self.t_first is None:
-            self.t_first = now
-        if admitted:
-            self.admitted += 1
-            self.max_queue_depth = max(self.max_queue_depth, depth + 1)
-        else:
-            self.rejected += 1
-            self.max_queue_depth = max(self.max_queue_depth, depth)
-        self.queue_depth.append(depth)
+        with self._mu:
+            if self.t_first is None:
+                self.t_first = now
+            if admitted:
+                self.admitted += 1
+                self.max_queue_depth = max(self.max_queue_depth, depth + 1)
+            else:
+                self.rejected += 1
+                self.max_queue_depth = max(self.max_queue_depth, depth)
+            self.queue_depth.add(depth)
 
     def record_batch(self, now: float, n: int, bucket: int, exec_s: float,
                      waits_s: List[float], misses: int) -> None:
-        self.batches += 1
-        self.served += n
-        self.batch_sizes.append(n)
-        self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
-        self.padded_rows += bucket - n
-        self.batched_rows += bucket
-        self.exec_s.append(exec_s)
-        self.deadline_misses += misses
-        for w in waits_s:
-            self.queue_wait_s.append(w)
-            self.latency_s.append(w + exec_s)
-        self.t_last = now
+        with self._mu:
+            self.batches += 1
+            self.served += n
+            self.batch_sizes.add(n)
+            self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
+            self.padded_rows += bucket - n
+            self.batched_rows += bucket
+            self.exec_s.add(exec_s)
+            self.deadline_misses += misses
+            for w in waits_s:
+                self.queue_wait_s.add(w)
+                self.latency_s.add(w + exec_s)
+            self.t_last = now
 
     def record_batch_failure(self, now: float, n: int) -> None:
         """One batch whose plan execution raised: its ``n`` requests were
         consumed (slots complete as None) but not served."""
-        self.batch_failures += 1
-        self.failed_requests += n
-        self.t_last = now
+        with self._mu:
+            self.batch_failures += 1
+            self.failed_requests += n
+            self.t_last = now
 
     def record_result_evictions(self, n: int) -> None:
         """``n`` finished results dropped before the caller collected them
         (capacity/TTL eviction — see ``SparseServer`` result retention)."""
-        self.results_evicted += n
+        with self._mu:
+            self.results_evicted += n
 
     def record_swap(self, now: float, compile_s: float,
                     cache_hit: bool) -> None:
         """One plan hot-swap: the off-path compile (or plan-store hit) that
         produced the swapped-in plan set."""
-        self.swaps += 1
-        if cache_hit:
-            self.swap_hits += 1
-        self.swap_compile_s.append(compile_s)
-        # deliberately NOT touching t_first/t_last: a pre-traffic swap must
-        # not stretch the serving span throughput_rps is computed over
+        with self._mu:
+            self.swaps += 1
+            if cache_hit:
+                self.swap_hits += 1
+            self.swap_compile_s.add(compile_s)
+            # deliberately NOT touching t_first/t_last: a pre-traffic swap
+            # must not stretch the serving span throughput_rps is computed
+            # over
 
     def record_retry(self, timed_out: bool = False,
                      nan_guard: bool = False) -> None:
         """One failed batch attempt that will be retried."""
-        self.retries += 1
-        if timed_out:
-            self.batch_timeouts += 1
-        if nan_guard:
-            self.nan_guard_failures += 1
+        with self._mu:
+            self.retries += 1
+            if timed_out:
+                self.batch_timeouts += 1
+            if nan_guard:
+                self.nan_guard_failures += 1
 
     def record_attempt_failure(self, timed_out: bool = False,
                                nan_guard: bool = False) -> None:
         """Classify one terminal (non-retried) attempt failure; the batch
         outcome itself is recorded by ``record_batch_failure``."""
-        if timed_out:
-            self.batch_timeouts += 1
-        if nan_guard:
-            self.nan_guard_failures += 1
+        with self._mu:
+            if timed_out:
+                self.batch_timeouts += 1
+            if nan_guard:
+                self.nan_guard_failures += 1
 
     def record_breaker_trip(self) -> None:
-        self.breaker_trips += 1
+        with self._mu:
+            self.breaker_trips += 1
 
     def record_breaker_reset(self) -> None:
-        self.breaker_resets += 1
+        with self._mu:
+            self.breaker_resets += 1
 
     def record_degraded_batch(self) -> None:
         """One batch served on the safe-mode twin (bit-identical outputs,
         slower path)."""
-        self.degraded_batches += 1
+        with self._mu:
+            self.degraded_batches += 1
 
     def record_watchdog_restart(self) -> None:
-        self.watchdog_restarts += 1
+        with self._mu:
+            self.watchdog_restarts += 1
 
     def record_deadline_evictions(self, n: int) -> None:
         """``n`` queued requests evicted (completed as None) because their
         deadline passed before a batch picked them up."""
-        self.deadline_evictions += n
+        with self._mu:
+            self.deadline_evictions += n
 
     def record_cancel(self) -> None:
-        self.cancelled += 1
+        with self._mu:
+            self.cancelled += 1
 
     # ------------------------------------------------------------------ #
-    def snapshot(self) -> dict:
-        span = 0.0
-        if self.t_first is not None and self.t_last is not None:
-            span = max(0.0, self.t_last - self.t_first)
+    @staticmethod
+    def _quantiles_ms(s: BoundedSeries) -> dict:
         return {
-            "admitted": self.admitted,
-            "rejected": self.rejected,
-            "served": self.served,
-            "batches": self.batches,
-            "deadline_misses": self.deadline_misses,
-            "results_evicted": self.results_evicted,
-            "batch_failures": self.batch_failures,
-            "failed_requests": self.failed_requests,
-            "swaps": self.swaps,
-            "swap_hits": self.swap_hits,
-            "retries": self.retries,
-            "batch_timeouts": self.batch_timeouts,
-            "nan_guard_failures": self.nan_guard_failures,
-            "breaker_trips": self.breaker_trips,
-            "breaker_resets": self.breaker_resets,
-            "degraded_batches": self.degraded_batches,
-            "watchdog_restarts": self.watchdog_restarts,
-            "deadline_evictions": self.deadline_evictions,
-            "cancelled": self.cancelled,
-            "swap_compile_ms": {
-                "p50": 1e3 * percentile(self.swap_compile_s, 50),
-                "p99": 1e3 * percentile(self.swap_compile_s, 99),
-            },
-            "throughput_rps": self.served / span if span > 0 else 0.0,
-            "latency_ms": {
-                "p50": 1e3 * percentile(self.latency_s, 50),
-                "p99": 1e3 * percentile(self.latency_s, 99),
-            },
-            "queue_wait_ms": {
-                "p50": 1e3 * percentile(self.queue_wait_s, 50),
-                "p99": 1e3 * percentile(self.queue_wait_s, 99),
-            },
-            "exec_ms": {
-                "p50": 1e3 * percentile(self.exec_s, 50),
-                "p99": 1e3 * percentile(self.exec_s, 99),
-            },
-            "mean_batch_size": (sum(self.batch_sizes) / self.batches
-                                if self.batches else 0.0),
-            "max_queue_depth": self.max_queue_depth,
-            "padding_fraction": (self.padded_rows / self.batched_rows
-                                 if self.batched_rows else 0.0),
-            "bucket_hist": {str(k): v
-                            for k, v in sorted(self.bucket_hist.items())},
+            "p50": 1e3 * s.percentile(50),
+            "p99": 1e3 * s.percentile(99),
+            "count": len(s),
         }
+
+    def snapshot(self) -> dict:
+        """A consistent cut of every counter and series.
+
+        Holds the same lock ``record_*`` take, so concurrent traffic can
+        never produce a torn read (e.g. ``served`` updated but the latency
+        series not yet — the invariant ``served == latency_ms["count"]``
+        holds in every snapshot)."""
+        with self._mu:
+            span = 0.0
+            if self.t_first is not None and self.t_last is not None:
+                span = max(0.0, self.t_last - self.t_first)
+            return {
+                "admitted": self.admitted,
+                "rejected": self.rejected,
+                "served": self.served,
+                "batches": self.batches,
+                "deadline_misses": self.deadline_misses,
+                "results_evicted": self.results_evicted,
+                "batch_failures": self.batch_failures,
+                "failed_requests": self.failed_requests,
+                "swaps": self.swaps,
+                "swap_hits": self.swap_hits,
+                "retries": self.retries,
+                "batch_timeouts": self.batch_timeouts,
+                "nan_guard_failures": self.nan_guard_failures,
+                "breaker_trips": self.breaker_trips,
+                "breaker_resets": self.breaker_resets,
+                "degraded_batches": self.degraded_batches,
+                "watchdog_restarts": self.watchdog_restarts,
+                "deadline_evictions": self.deadline_evictions,
+                "cancelled": self.cancelled,
+                "swap_compile_ms": self._quantiles_ms(self.swap_compile_s),
+                "throughput_rps": self.served / span if span > 0 else 0.0,
+                "latency_ms": self._quantiles_ms(self.latency_s),
+                "queue_wait_ms": self._quantiles_ms(self.queue_wait_s),
+                "exec_ms": self._quantiles_ms(self.exec_s),
+                "mean_batch_size": (self.batch_sizes.total / self.batches
+                                    if self.batches else 0.0),
+                "max_queue_depth": self.max_queue_depth,
+                "padding_fraction": (self.padded_rows / self.batched_rows
+                                     if self.batched_rows else 0.0),
+                "bucket_hist": {str(k): v
+                                for k, v in sorted(self.bucket_hist.items())},
+            }
 
     def summary(self) -> str:
         s = self.snapshot()

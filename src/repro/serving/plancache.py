@@ -123,10 +123,12 @@ class PlanStore:
     be retried in a loop, because the recompile overwrites the live slot.
     """
 
-    def __init__(self, root: str, fault_injector=None):
+    def __init__(self, root: str, fault_injector=None, tracer=None):
+        from repro.obs.trace import NULL_TRACER
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.injector = fault_injector
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.quarantined = 0
         # per-key in-process compile locks: two threads warm-starting the
         # same network (e.g. concurrent SparseServer.swap calls) serialize
@@ -199,6 +201,9 @@ class PlanStore:
             # is the part that matters
             shutil.rmtree(path, ignore_errors=True)
         self.quarantined += 1
+        if self.tracer.enabled:
+            self.tracer.event("store.quarantine",
+                              entry=os.path.basename(path), reason=reason)
 
     def _clean_partial(self, path: str) -> None:
         """Remove wreckage a crashed writer left behind: a ``.tmp`` staging
@@ -357,10 +362,14 @@ class PlanStore:
         Thread-safe: concurrent callers with the same key serialize on a
         per-key lock, so at most one of them pays the compile.
         """
-        with self._key_lock(plan_cache_key(engine, net, mesh)):
-            plan = self.load(engine, net, backend, mesh=mesh)
+        key = plan_cache_key(engine, net, mesh)
+        with self._key_lock(key):
+            with self.tracer.span("store.load", key=key[:12]) as sp:
+                plan = self.load(engine, net, backend, mesh=mesh)
+                sp["hit"] = plan is not None
             if plan is not None:
                 return plan, True
-            plan = engine.compile(net, backend, mesh=mesh)
-            self.put(engine, plan)
+            with self.tracer.span("store.compile", key=key[:12]):
+                plan = engine.compile(net, backend, mesh=mesh)
+                self.put(engine, plan)
             return plan, False

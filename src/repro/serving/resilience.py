@@ -158,19 +158,34 @@ class CircuitBreaker:
     (``SparseServer`` drives it through the same install path ``swap()``
     uses).  Methods return a transition event string (or None) so the
     server can count trips/resets in its metrics.
+
+    ``on_transition`` (settable after construction) is called as
+    ``on_transition(event, new_state)`` on EVERY state change — including
+    the ``open -> half_open`` probe admission, which no return value
+    surfaces — outside the breaker's lock.  The server wires its tracer
+    through this so breaker transitions appear in exported traces.
     """
 
-    def __init__(self, threshold: int = 3, cooldown_s: float = 5.0):
+    def __init__(self, threshold: int = 3, cooldown_s: float = 5.0,
+                 on_transition: Optional[Callable[[str, str], None]] = None):
         if threshold < 1:
             raise ValueError(f"threshold must be >= 1, got {threshold}")
         self.threshold = threshold
         self.cooldown_s = cooldown_s
+        self.on_transition = on_transition
         self._mu = threading.Lock()
         self._state = "closed"
         self._failures = 0
         self._opened_at = 0.0
         self.trips = 0          # transitions into `open` (incl. reopen)
         self.resets = 0         # half_open -> closed recoveries
+
+    def _notify(self, event: Optional[str]) -> Optional[str]:
+        """Fire ``on_transition`` for ``event`` (lock NOT held — the
+        callback may take other locks, e.g. a tracer's)."""
+        if event is not None and self.on_transition is not None:
+            self.on_transition(event, self.state)
+        return event
 
     @property
     def state(self) -> str:
@@ -190,8 +205,10 @@ class CircuitBreaker:
             if self._state == "half_open":
                 self._state = "closed"
                 self.resets += 1
-                return "reset"
-            return None
+                event = "reset"
+            else:
+                event = None
+        return self._notify(event)
 
     def on_failure(self, now: float) -> Optional[str]:
         """A batch failed/timed out.  Returns ``"tripped"`` (closed -> open)
@@ -202,32 +219,40 @@ class CircuitBreaker:
                 self._state = "open"
                 self._opened_at = now
                 self.trips += 1
-                return "reopened"
-            if self._state == "closed" and self._failures >= self.threshold:
+                event = "reopened"
+            elif self._state == "closed" and \
+                    self._failures >= self.threshold:
                 self._state = "open"
                 self._opened_at = now
                 self.trips += 1
-                return "tripped"
-            return None
+                event = "tripped"
+            else:
+                event = None
+        return self._notify(event)
 
     def use_fast(self, now: float) -> bool:
         """Should the NEXT batch run on the fast plan?  In ``open`` state
         this flips to ``half_open`` (and answers yes — the probe) once the
         cool-down has elapsed."""
         with self._mu:
+            event = None
             if self._state == "open":
                 if now - self._opened_at >= self.cooldown_s:
                     self._state = "half_open"
-                    return True
-                return False
-            return True
+                    event = "half_open"
+                else:
+                    return False
+        self._notify(event)
+        return True
 
     def reset(self) -> None:
         """Force-close (a plan hot-swap installs fresh weights — old
         failure history is meaningless for them)."""
         with self._mu:
+            changed = self._state != "closed"
             self._state = "closed"
             self._failures = 0
+        self._notify("force_reset" if changed else None)
 
 
 # --------------------------------------------------------------------------- #

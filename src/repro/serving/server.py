@@ -56,6 +56,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..obs.telemetry import IOTelemetry, plan_io_attrs
+from ..obs.trace import NULL_TRACER, Tracer
 from .bucketing import BucketedPlanSet
 from .metrics import ServingMetrics
 from .resilience import (
@@ -142,9 +144,22 @@ class SparseServer:
         server, so nothing queued is lost.
       fault_injector: a :class:`repro.serving.resilience.FaultInjector`
         whose ``server.*`` sites this server fires (chaos testing).
+      name: model name stamped on every span and metric this server emits
+        (``ModelRouter`` sets it to the routing key).
+      tracer: a :class:`repro.obs.Tracer` recording the request lifecycle
+        (submit → queue → execute → done), swaps, breaker transitions, and
+        watchdog restarts.  Default is the shared disabled ``NULL_TRACER``
+        — one ``enabled`` check per site, nothing recorded.
+      measure_dynamic_every: sample measured dynamic I/O
+        (``ExecutionPlan.measure_dynamic``) every N successful batches and
+        fold it into ``self.io`` (requires a gated fused plan; silently
+        inactive otherwise).  0 disables sampling — the measurement runs a
+        second instrumented forward, so it is opt-in.
 
     All public methods are thread-safe; plan execution itself runs outside
     the lock, so submits are never blocked behind a running batch.
+    ``snapshot()`` unifies metrics, I/O gauges, and resilience state — the
+    dict the Prometheus endpoint renders (see ``repro.obs.prom``).
     """
 
     def __init__(
@@ -167,6 +182,9 @@ class SparseServer:
         enforce_deadlines: bool = False,
         watchdog_s: Optional[float] = None,
         fault_injector: Optional[FaultInjector] = None,
+        name: str = "default",
+        tracer: Optional[Tracer] = None,
+        measure_dynamic_every: int = 0,
     ):
         self.plans = plans
         self.max_batch = max_batch or plans.max_batch
@@ -220,6 +238,22 @@ class SparseServer:
         self._degraded = False
         self._heartbeat = Heartbeat()
         self._watchdog: Optional[Watchdog] = None
+        # observability (see repro.obs and docs/observability.md)
+        self.name = name
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.io = IOTelemetry(model=name)
+        self.measure_dynamic_every = measure_dynamic_every
+        self._measure_countdown = measure_dynamic_every
+        self._io_seen: set = set()   # (plan-set id, bucket) already gauged
+        if breaker is not None and breaker.on_transition is None:
+            # breaker state changes (incl. half-open probe admission, which
+            # no metric counter sees) become trace events
+            breaker.on_transition = self._breaker_transition
+
+    def _breaker_transition(self, event: str, state: str) -> None:
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(f"breaker.{event}", model=self.name, state=state)
 
     def _fire(self, site: str, value=None):
         """Fire a fault-injection site (no-op without an injector)."""
@@ -257,6 +291,10 @@ class SparseServer:
             depth = len(self._queue)
             if self._closed or depth >= self.max_queue:
                 self.metrics.record_submit(now, depth, admitted=False)
+                if self.tracer.enabled:
+                    self.tracer.event("request.submit", model=self.name,
+                                      depth=depth, admitted=False,
+                                      closed=self._closed)
                 return None, False
             rid = next(self._rid)
             deadline = now + (deadline_ms / 1e3 if deadline_ms is not None
@@ -267,6 +305,9 @@ class SparseServer:
             # on it before the request is ever picked into a batch
             self._results[rid] = _Slot()
             self.metrics.record_submit(now, depth, admitted=True)
+            if self.tracer.enabled:
+                self.tracer.event("request.submit", model=self.name,
+                                  rid=rid, depth=depth, admitted=True)
             # wake on any transition that can change the scheduler's
             # decision or its sleep bound: queue newly non-empty, reached a
             # full batch, or crossed a bucket boundary (the deadline clause
@@ -584,6 +625,9 @@ class SparseServer:
             if self._stop.is_set():
                 return
             self.metrics.record_watchdog_restart()
+            if self.tracer.enabled:
+                self.tracer.event("watchdog.restart", model=self.name,
+                                  dead=dead)
             self._spawn_scheduler_locked()
             self._cv.notify_all()
 
@@ -692,6 +736,8 @@ class SparseServer:
         """
         if (net is None) == (plans is None):
             raise ValueError("swap needs exactly one of net= or plans=")
+        tr = self.tracer
+        t_sw0 = tr.clock() if tr.enabled else 0.0
         # prebuilt plans= paid their compile long ago (possibly never, in a
         # ping-pong swap) — only a net= swap charges compile time/hit state
         # to the swap metrics
@@ -742,6 +788,11 @@ class SparseServer:
                 self._lat_ewma = dict(plans.warmup_s)
             self.metrics.record_swap(self.clock(), compile_s, cache_hit)
             self._cv.notify_all()
+        # the swapped-in plans' static I/O gauges replace the old ones on
+        # first batch per bucket (fresh plan-set id in _io_seen)
+        if tr.enabled:
+            tr.span_at("plan.swap", t_sw0, tr.clock(), model=self.name,
+                       compile_s=round(compile_s, 6), cache_hit=cache_hit)
         return old
 
     # ------------------------------------------------------------------ #
@@ -759,12 +810,33 @@ class SparseServer:
             check_finite(y)
         return y
 
+    def _trace_batch(self, reqs: List[Request], plans, bucket: int,
+                     t0: float, t1: float, attempt: int,
+                     error: Optional[BaseException] = None) -> None:
+        """Record the batch's execute span, each request's retroactive queue
+        span, and per-request done events (tracer enabled — caller checked)."""
+        tr = self.tracer
+        attrs = {"model": self.name, "bucket": bucket, "n": len(reqs),
+                 "attempt": attempt + 1,
+                 "degraded": bool(getattr(plans, "safe_mode", False))}
+        attrs.update(plan_io_attrs(plans.plans.get(bucket, plans.base)))
+        if error is not None:
+            attrs["error"] = type(error).__name__
+        tr.span_at("batch.execute", t0, t1, **attrs)
+        for r in reqs:
+            tr.span_at("request.queue", r.t_submit, t0, model=self.name,
+                       rid=r.rid, bucket=bucket)
+            tr.event("request.done", model=self.name, rid=r.rid,
+                     ok=error is None,
+                     miss=bool(r.deadline is not None and t1 > r.deadline))
+
     def _run_batch(self, reqs: List[Request],
                    plans: BucketedPlanSet) -> int:
         n = len(reqs)
         bucket = plans.bucket_for(n)
         x = np.stack([r.x for r in reqs])
         policy = self.retry
+        tr = self.tracer
         attempt = 0
         while True:
             t0 = self.clock()
@@ -782,12 +854,19 @@ class SparseServer:
                     with self._lock:
                         self.metrics.record_retry(timed_out=timed_out,
                                                   nan_guard=nan_guard)
+                    if tr.enabled:
+                        tr.event("batch.retry", model=self.name,
+                                 bucket=bucket, attempt=attempt,
+                                 error=type(e).__name__)
                     if policy.backoff_s > 0:
                         time.sleep(policy.backoff(attempt))
                     continue
                 # retries exhausted: complete the batch's slots with None
                 # so waiters unblock, count the failure, feed the breaker,
                 # move on
+                if tr.enabled:
+                    self._trace_batch(reqs, plans, bucket, t0, t1,
+                                      attempt, error=e)
                 with self._cv:
                     self.metrics.record_attempt_failure(timed_out=timed_out,
                                                         nan_guard=nan_guard)
@@ -800,6 +879,9 @@ class SparseServer:
         waits = [t0 - r.t_submit for r in reqs]
         misses = sum(1 for r in reqs
                      if r.deadline is not None and t1 > r.deadline)
+        if tr.enabled:
+            self._trace_batch(reqs, plans, bucket, t0, t1, attempt)
+        do_measure = False
         with self._cv:
             if self.plans is plans:
                 # don't let a batch that was in flight across a swap() write
@@ -817,7 +899,45 @@ class SparseServer:
                 # half-open probe served: back on the fast plan for good
                 self.metrics.record_breaker_reset()
                 self._fast_plans = None
+            if self.measure_dynamic_every > 0:
+                self._measure_countdown -= 1
+                if self._measure_countdown <= 0:
+                    self._measure_countdown = self.measure_dynamic_every
+                    do_measure = True
+        # I/O telemetry runs OUTSIDE the lock: static gauges once per
+        # (plan set, bucket), measured dynamic I/O on the sampling cadence
+        key = (id(plans), bucket)
+        if key not in self._io_seen:
+            self._io_seen.add(key)
+            self.io.observe_plan(bucket, plans.plans.get(bucket, plans.base))
+        if do_measure:
+            self._measure_dynamic(plans, bucket, x)
         return n
+
+    def _measure_dynamic(self, plans: BucketedPlanSet, bucket: int,
+                         x: np.ndarray) -> None:
+        """Sample measured dynamic I/O for one served batch (gated fused
+        plans only — quietly inactive otherwise).  Telemetry must never
+        fail serving, so measurement errors are swallowed into a trace
+        event rather than raised."""
+        base = getattr(plans, "base", None)
+        if base is None or not getattr(base, "gate", False) \
+                or getattr(base, "_measure", None) is None:
+            return
+        try:
+            report = base.measure_dynamic(x)
+        except Exception as e:
+            if self.tracer.enabled:
+                self.tracer.event("io.measure_failed", model=self.name,
+                                  bucket=bucket, error=type(e).__name__)
+            return
+        self.io.observe_dynamic(bucket, report)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "io.measure", model=self.name, bucket=bucket,
+                dynamic_blocks=int(report.dynamic_total),
+                static_blocks=int(report.static_total),
+                read_fraction=round(float(report.read_fraction), 4))
 
     def _finish_slots(self, reqs: List[Request], y, t1: float) -> None:
         """Complete (and wake) each request's slot — with its output row, or
@@ -833,6 +953,26 @@ class SparseServer:
                 slot.event.set()
             self._done[r.rid] = t1
         self._evict_over_capacity()
+
+    # ------------------------------------------------------------------ #
+    # observability
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        """One JSON-safe cut of everything observable about this server:
+        serving metrics (atomic — see ``ServingMetrics.snapshot``),
+        per-bucket I/O gauges, resilience state, tracer accounting.  This
+        is the dict ``repro.obs.prom.render_prometheus`` renders."""
+        snap = self.metrics.snapshot()
+        snap["model"] = self.name
+        snap["queue_depth_now"] = self.queue_depth
+        snap["degraded"] = self._degraded
+        if self.breaker is not None:
+            snap["breaker_state"] = self.breaker.state
+            snap["breaker_open"] = self.breaker.state == "open"
+        snap["io"] = self.io.snapshot()
+        if self.tracer.enabled:
+            snap["tracer"] = self.tracer.snapshot()
+        return snap
 
 
 # ---------------------------------------------------------------------- #
@@ -857,19 +997,25 @@ class ModelRouter:
                  server_settings: Optional[Dict[str, dict]] = None,
                  watchdog_s: Optional[float] = None,
                  fault_injector: Optional[FaultInjector] = None,
+                 tracer: Optional[Tracer] = None,
                  **server_kwargs):
         """``server_kwargs`` apply to every model's server;
         ``server_settings[name]`` overlays per-model keyword arguments
         (e.g. the ``engine=``/``plan_store=``/``mesh=`` swap settings, or a
         per-model ``breaker=``).  ``watchdog_s`` arms a watchdog over the
         SHARED scheduler thread; ``fault_injector`` fires the
-        ``router.scheduler`` chaos site."""
+        ``router.scheduler`` chaos site; ``tracer`` is shared by every
+        model's server (spans carry the model name), so one export holds
+        the whole process's request lifecycle."""
         if not models:
             raise ValueError("ModelRouter needs at least one model")
         settings = server_settings or {}
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.servers: Dict[str, SparseServer] = {
             name: SparseServer(plans, clock=clock,
-                               **{**server_kwargs, **settings.get(name, {})})
+                               **{"name": name, "tracer": self.tracer,
+                                  **server_kwargs,
+                                  **settings.get(name, {})})
             for name, plans in models.items()
         }
         self.clock = clock
@@ -1012,6 +1158,9 @@ class ModelRouter:
             if self._stop.is_set():
                 return
             self.watchdog_restarts += 1
+            if self.tracer.enabled:
+                self.tracer.event("watchdog.restart", scope="router",
+                                  dead=dead)
             self._spawn_scheduler_locked()
             self._cv.notify_all()
 
@@ -1121,6 +1270,20 @@ class ModelRouter:
         totals["watchdog_restarts"] += self.watchdog_restarts
         return {"models": per_model, "total": totals,
                 "router": {"watchdog_restarts": self.watchdog_restarts}}
+
+    def snapshot(self) -> dict:
+        """Full observability snapshot: every model's ``SparseServer
+        .snapshot()`` (metrics + I/O gauges + resilience state) under
+        ``models``, plus the process totals.  This is what a router-level
+        Prometheus endpoint renders — the ``models`` map becomes a
+        ``model=`` label."""
+        base = self.metrics_snapshot()
+        return {
+            "models": {name: s.snapshot()
+                       for name, s in self.servers.items()},
+            "total": base["total"],
+            "router": base["router"],
+        }
 
     def summary(self) -> str:
         lines = [f"{name}: {s.metrics.summary()}"

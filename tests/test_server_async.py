@@ -419,3 +419,50 @@ def test_router_swap_one_model_keeps_other(make_stack):
     assert router.servers["b"].plans is plans_b_before
     assert router.servers["a"].metrics.swaps == 1
     assert router.servers["b"].metrics.swaps == 0
+
+
+# --------------------------------------------------------------------------- #
+# metrics snapshot atomicity (PR 8): a scrape under concurrent traffic is a
+# consistent cut, never a torn read
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.stress
+def test_metrics_snapshot_atomic_under_concurrent_records():
+    """Writer threads hammer ``record_batch``/``record_submit`` while a
+    reader snapshots in a loop.  Every snapshot must satisfy the cross-field
+    invariants the lock guarantees: ``served`` always equals the latency
+    series count (``record_batch`` bumps both under one lock), and batch
+    bookkeeping is internally consistent.  Without the shared lock a
+    snapshot could land between the two updates and tear."""
+    from repro.serving import ServingMetrics
+
+    m = ServingMetrics()
+    stop = threading.Event()
+    ROWS = 2                       # rows per batch -> served == 2 * batches
+
+    def hammer():
+        i = 0
+        while not stop.is_set():
+            m.record_submit(i * 1e-4, depth=i % 5, admitted=True)
+            m.record_batch(i * 1e-4, n=ROWS, bucket=ROWS, exec_s=1e-4,
+                           waits_s=[1e-4] * ROWS, misses=0)
+            i += 1
+
+    writers = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in writers:
+        t.start()
+    try:
+        for _ in range(300):
+            snap = m.snapshot()
+            assert snap["served"] == snap["latency_ms"]["count"]
+            assert snap["served"] == snap["queue_wait_ms"]["count"]
+            assert snap["served"] == ROWS * snap["batches"]
+            assert snap["batches"] == snap["exec_ms"]["count"]
+            assert snap["admitted"] >= snap["batches"]
+    finally:
+        stop.set()
+        for t in writers:
+            t.join(timeout=10.0)
+    # quantiles still answer after the series collapse past exact_cap
+    assert m.latency_s.count > 0
+    assert m.snapshot()["latency_ms"]["p99"] > 0.0

@@ -288,7 +288,7 @@ def test_queue_depth_convention_is_arrival_depth(plans):
     server.submit(np.zeros(plans.n_in, np.float32))   # sees depth 0
     server.submit(np.zeros(plans.n_in, np.float32))   # sees depth 1
     server.submit(np.zeros(plans.n_in, np.float32))   # rejected at depth 2
-    assert server.metrics.queue_depth == [0, 1, 2]
+    assert server.metrics.queue_depth.values() == [0.0, 1.0, 2.0]
     assert server.metrics.snapshot()["max_queue_depth"] == 2
 
 
