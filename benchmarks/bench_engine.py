@@ -158,6 +158,57 @@ def bench_dynamic_sparsity(backend: str, batch: int, iters: int) -> dict:
     }
 
 
+def bench_weight_stream(layers, backend: str, x, iters: int,
+                        reorder_iters: int) -> dict:
+    """Quantized weight-stream sweep: bytes moved, latency, and error.
+
+    The SAME schedule runs at f32/bf16/fp8 weight storage — tile counts and
+    Theorem-1 bounds are dtype-invariant, only the bytes per streamed block
+    shrink.  Asserts the acceptance floor: bf16 <= 0.55x the f32 weight
+    bytes (>= 1.8x reduction), fp8 >= 3.5x, with bounded output error.
+    """
+    from repro.kernels.ops import FP8_DTYPE
+
+    dtypes = ["f32", "bf16"] + (["fp8"] if FP8_DTYPE is not None else [])
+    max_rel_err = {"f32": 0.0, "bf16": 1e-2, "fp8": 1e-1}
+    min_reduction = {"bf16": 1.8, "fp8": 3.5}
+    sweep = []
+    y_ref = None
+    f32_bytes = 0
+    for wdt in dtypes:
+        plan = Engine(backend=backend, activation="relu", reorder=True,
+                      reorder_iters=reorder_iters,
+                      weight_dtype=wdt).compile(layers)
+        y = np.asarray(plan(x), np.float32)
+        if wdt == "f32":
+            y_ref = y
+            f32_bytes = plan.io.weight_stream_bytes
+        rel = float(np.max(np.abs(y - y_ref))
+                    / max(1e-9, np.max(np.abs(y_ref))))
+        assert rel <= max_rel_err[wdt], (
+            f"{wdt} output error {rel:.4f} exceeds {max_rel_err[wdt]}")
+        reduction = f32_bytes / plan.io.weight_stream_bytes
+        if wdt in min_reduction:
+            assert reduction >= min_reduction[wdt], (
+                f"{wdt} weight-stream bytes shrank only {reduction:.2f}x "
+                f"(need >= {min_reduction[wdt]}x)")
+        t = timeit(plan, x, iters)
+        print(f"  weight stream {wdt:>4}: "
+              f"{plan.io.weight_stream_bytes:>9} B/forward "
+              f"({reduction:.2f}x vs f32), {1e3*t:.2f} ms/batch, "
+              f"max rel err {rel:.2e}")
+        sweep.append({
+            "weight_dtype": wdt,
+            "weight_bytes_streamed": plan.io.weight_bytes_streamed,
+            "scale_bytes_streamed": plan.io.scale_bytes_streamed,
+            "weight_stream_bytes": plan.io.weight_stream_bytes,
+            "bytes_reduction_vs_f32": reduction,
+            "latency_ms": 1e3 * t,
+            "max_rel_err_vs_f32": rel,
+        })
+    return {"sweep": sweep, "dtypes": dtypes}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+",
@@ -243,6 +294,10 @@ def main():
     print("dynamic-sparsity gating sweep (ReLU, forced-dead hidden tiles):")
     dyn_stats = bench_dynamic_sparsity(plan.backend, args.batch, args.iters)
 
+    print("quantized weight-stream sweep (same schedule, narrower storage):")
+    quant_stats = bench_weight_stream(layers, plan.backend, x, args.iters,
+                                      reorder_iters=args.reorder_iters)
+
     io = plan.io
     result = {
         "net": {
@@ -275,6 +330,7 @@ def main():
         },
         "reorder": reorder_stats,
         "dynamic_sparsity": dyn_stats,
+        "weight_stream": quant_stats,
         "env": {
             "jax": jax.__version__,
             "jax_backend": jax.default_backend(),

@@ -143,6 +143,7 @@ def _jnp_layer(
         x, schedule.rows, schedule.cols, schedule.blocks,
         jnp.asarray(layer.bias), layer.block_m, layer.block_n,
         layer.grid_in, layer.grid_out, activation, occ=occ,
+        scales=schedule.scales,
     )
 
 
@@ -159,6 +160,7 @@ def _jnp_segment(
     activation: Optional[Callable],
     pad_segments: int = 0,
     occ: Optional[jnp.ndarray] = None,
+    scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """One schedule segment as gather → block matmul → segment-sum.
 
@@ -174,6 +176,11 @@ def _jnp_segment(
     and ``(±0) * 0 = ±0`` preserves each bit pattern, so the masked segment
     is bit-identical to the unmasked one — the mask is how the jnp lowering
     *expresses* the skip an I/O-aware kernel would take.
+
+    ``scales`` ([nnz] f32) marks a quantized weight stream: ``blocks`` is
+    stored narrow (bf16/fp8) and dequantized here per block right before
+    the einsum — the exact f32 values the megakernel's fused dequant
+    produces, so quantized backends agree the same way f32 ones do.
     """
     B = x.shape[0]
     xt = x.reshape(B, grid_in, bm).transpose(1, 0, 2)          # [gi, B, bm]
@@ -181,10 +188,13 @@ def _jnp_segment(
     if occ is not None:
         gathered = gathered * (occ[rows] > 0).astype(
             gathered.dtype)[:, None, None]
+    w = blocks.astype(jnp.float32)
+    if scales is not None:
+        w = w * scales[:, None, None]
     contrib = jnp.einsum(
         "gbm,gmn->gbn",
         gathered.astype(jnp.float32),
-        blocks.astype(jnp.float32),
+        w,
     )                                                          # [nnz, B, bn]
     y = jax.ops.segment_sum(contrib, cols,
                             num_segments=grid_out + pad_segments)
@@ -215,6 +225,7 @@ def _pallas_layer(
         grid_out=schedule.grid_out,
         activation=activation,
         interpret=interpret,
+        scales=schedule.scales,
     )
 
 
@@ -287,8 +298,10 @@ def _flat_segments(layers, flat: FlatSchedule, activations):
     for k, (s, e) in enumerate(flat.segments):
         lay = layers[k]
         bias = flat.bias_tiles[bias_row:bias_row + lay.grid_out].reshape(-1)
+        scales = None if flat.scales is None else flat.scales[s:e]
         segs.append((flat.rows[s:e], flat.cols[s:e], flat.blocks[s:e],
-                     bias, lay.grid_in, lay.grid_out, activations[k]))
+                     scales, bias, lay.grid_in, lay.grid_out,
+                     activations[k]))
         bias_row += lay.grid_out
     return segs
 
@@ -324,10 +337,10 @@ def make_fused_forward(
 
         def forward_jnp(x):
             h = x
-            for rows, cols, blocks, bias, gi, go, a in segs:
+            for rows, cols, blocks, scales, bias, gi, go, a in segs:
                 occ = tile_occupancy(h, bs, gi) if gate else None
                 h = _jnp_segment(h, rows, cols, blocks, bias,
-                                 bs, bs, gi, go, a, occ=occ)
+                                 bs, bs, gi, go, a, occ=occ, scales=scales)
             return h
 
         return jax.jit(forward_jnp) if jit else forward_jnp
@@ -346,6 +359,7 @@ def make_fused_forward(
             final_activation=fact,
             interpret=(backend == "interpret"),
         )
+        kw["scales"] = flat.scales
         args = (xp, flat.blocks, flat.rows, flat.cols, flat.first,
                 flat.last, flat.layer_id, flat.hbm_row, flat.out_tile,
                 flat.bias_idx, flat.bias_tiles)
@@ -393,11 +407,11 @@ def make_fused_measure(
         def measure_jnp(x):
             h = x
             occs = []
-            for rows, cols, blocks, bias, gi, go, a in segs:
+            for rows, cols, blocks, scales, bias, gi, go, a in segs:
                 occ = tile_occupancy(h, bs, gi)
                 occs.append(occ)
                 h = _jnp_segment(h, rows, cols, blocks, bias,
-                                 bs, bs, gi, go, a, occ=occ)
+                                 bs, bs, gi, go, a, occ=occ, scales=scales)
             return h, tuple(occs)
 
         return jax.jit(measure_jnp) if jit else measure_jnp
@@ -411,7 +425,7 @@ def make_fused_measure(
         y, occ = bsr_megakernel(
             xp, flat.blocks, flat.rows, flat.cols, flat.first, flat.last,
             flat.layer_id, flat.hbm_row, flat.out_tile, flat.bias_idx,
-            flat.bias_tiles, occ0=occ0,
+            flat.bias_tiles, occ0=occ0, scales=flat.scales,
             n_layers=flat.n_layers,
             block=flat.block,
             grid_out_final=flat.grid_out_final,
@@ -446,7 +460,7 @@ class ShardedSegment:
 
     rows: np.ndarray          # int32 [model, n_max] input tile (full grid)
     cols: np.ndarray          # int32 [model, n_max] local output tile or sink
-    blocks: np.ndarray        # float32 [model, n_max, bm, bn]
+    blocks: np.ndarray        # [model, n_max, bm, bn] in the storage dtype
     bias: np.ndarray          # float32 [model, tps * bn]
     perm: np.ndarray          # int32 [grid_out_full]
     grid_in: int              # full input grid of this layer
@@ -454,13 +468,17 @@ class ShardedSegment:
     block_m: int              # input-tile size
     block_n: int              # output-tile size
     activation: Optional[Callable]
+    # quantized weight stream: per-block f32 dequant scales (None for f32;
+    # padded sink steps carry scale 1.0 so they dequantize to exact zero)
+    scales: Optional[np.ndarray] = None   # float32 [model, n_max]
 
 
-def _shard_layer(h, seg: ShardedSegment, rows, cols, blocks, bias, occ=None):
+def _shard_layer(h, seg: ShardedSegment, rows, cols, blocks, bias,
+                 occ=None, scales=None):
     """One shard's slice of one layer over the full gathered activation."""
     return _jnp_segment(h, rows, cols, blocks, bias, seg.block_m, seg.block_n,
                         seg.grid_in, seg.tps, seg.activation, pad_segments=1,
-                        occ=occ)
+                        occ=occ, scales=scales)
 
 
 def _reassemble(gathered, seg: ShardedSegment):
@@ -519,10 +537,14 @@ def make_sharded_forward(
         return jax.jit(fn) if jit else fn
 
     segments = list(segments)
+    quant = any(seg.scales is not None for seg in segments)
+    stride = 5 if quant else 4
     arrs = []
     for seg in segments:
         arrs.extend([jnp.asarray(seg.rows), jnp.asarray(seg.cols),
                      jnp.asarray(seg.blocks), jnp.asarray(seg.bias)])
+        if quant:
+            arrs.append(jnp.asarray(seg.scales))
 
     if jax_mesh is not None:
         from jax.sharding import PartitionSpec as P
@@ -530,11 +552,13 @@ def make_sharded_forward(
         def device_fn(x, valid, *flat):
             h = x
             for k, seg in enumerate(segments):
-                rows, cols, blocks, bias = flat[4 * k:4 * k + 4]
+                vals = flat[stride * k:stride * k + stride]
+                rows, cols, blocks, bias = vals[:4]
+                scales = vals[4][0] if quant else None
                 occ = tile_occupancy(h, seg.block_m, seg.grid_in,
                                      valid=valid) if gate else None
                 y = _shard_layer(h, seg, rows[0], cols[0], blocks[0],
-                                 bias[0], occ=occ)
+                                 bias[0], occ=occ, scales=scales)
                 g = jax.lax.all_gather(y, "model")
                 h = _reassemble(g, seg)
             return h
@@ -567,13 +591,16 @@ def make_sharded_forward(
     def forward_loop(x, valid=None):
         h = x
         for k, seg in enumerate(segments):
-            rows, cols, blocks, bias = arrs[4 * k:4 * k + 4]
+            vals = arrs[stride * k:stride * k + stride]
+            rows, cols, blocks, bias = vals[:4]
+            scales = vals[4] if quant else None
             # one occupancy per layer: every shard reads the same gathered
             # activation, so the mask is shared across the shard loop
             occ = tile_occupancy(h, seg.block_m, seg.grid_in,
                                  valid=valid) if gate else None
             ys = [_shard_layer(h, seg, rows[s], cols[s], blocks[s], bias[s],
-                               occ=occ)
+                               occ=occ,
+                               scales=None if scales is None else scales[s])
                   for s in range(model)]
             h = _reassemble(jnp.stack(ys), seg)
         return h

@@ -39,7 +39,11 @@ from repro.core.bounds import theorem1_bounds
 from repro.core.graph import drop_isolated
 from repro.core.iosim import simulate
 from repro.core.reorder import connection_reordering
-from repro.kernels.ops import compile_flat_schedule, compile_schedule
+from repro.kernels.ops import (
+    compile_flat_schedule,
+    compile_schedule,
+    resolve_weight_dtype,
+)
 from repro.models.common import ACTIVATIONS as _MODEL_ACTIVATIONS
 from repro.obs.trace import NULL_TRACER
 
@@ -116,6 +120,18 @@ class Engine:
         matching grid steps (no-op steps still advance the double-buffered
         weight stream).  Bit-exact with the ungated forward; gated plans
         additionally expose :meth:`ExecutionPlan.measure_dynamic`.
+      weight_dtype: storage dtype of the streamed weight blocks —
+        ``"f32"`` (default, bit-exact), ``"bf16"`` or ``"fp8"``.  Narrow
+        modes quantize each scheduled block once at compile time with one
+        f32 dequant scale per block and fuse dequant (``block * scale``)
+        into every backend right before the dot, cutting the dominant
+        weight-stream I/O 2x/4x at the identical schedule.  Quantized
+        plans are not bit-exact vs f32 (bf16 agrees within ~1e-2 relative,
+        fp8 within ~1e-1 — see ``docs/engine.md``), but all backends of
+        one quantized plan dequantize to identical f32 values, so
+        cross-backend agreement and ``safe_twin`` degradation behave
+        exactly as in f32.  ``"fp8"`` raises a clear ``ValueError`` at
+        compile time when ``ml_dtypes`` lacks ``float8_e4m3fn``.
     """
 
     backend: str = "auto"
@@ -129,6 +145,7 @@ class Engine:
     policy: str = "min"
     fuse: bool = True
     gate: bool = False
+    weight_dtype: str = "f32"
     jit: bool = True
     # a repro.obs.Tracer recording compile-phase spans (Theorem-1 schedule,
     # CR/annealing, packing, backend lowering, I/O simulation).  Not part
@@ -240,7 +257,8 @@ class Engine:
             self._act_key(self.activation),
             self._act_key(self.final_activation),
             self.reorder, self.M_tiles, self.reorder_iters, self.seed,
-            self.max_move_span, self.policy, self.fuse, self.gate, self.jit,
+            self.max_move_span, self.policy, self.fuse, self.gate,
+            resolve_weight_dtype(self.weight_dtype), self.jit,
         )
 
     # ------------------------------------------------------------------ #
@@ -250,6 +268,9 @@ class Engine:
         t0 = time.perf_counter()
         tr = self._tr
         layers = bffnn.layers
+        # resolve up front: an unavailable fp8 fails here with a clear
+        # ValueError, never a deep kernel TypeError
+        wdt = resolve_weight_dtype(self.weight_dtype)
         annealer_iters = 0
         if order is None:
             order = self.schedule_order(bffnn)
@@ -258,7 +279,8 @@ class Engine:
             schedules = []
             for k in range(len(layers)):
                 perm, _, _, _, _ = schedule_arrays(bffnn, order, k)
-                schedules.append(compile_schedule(layers[k], perm))
+                schedules.append(compile_schedule(layers[k], perm,
+                                                  weight_dtype=wdt))
 
         if isinstance(self.activation, (list, tuple)):
             if len(self.activation) != len(layers) - 1:
@@ -310,8 +332,8 @@ class Engine:
         if io is None:
             with tr.span("compile.io_report", policy=self.policy,
                          M_tiles=self.M_tiles):
-                io = self.io_report(bffnn, order,
-                                    schedules if flat is not None else None)
+                io = self.io_report(bffnn, order, schedules,
+                                    fused=flat is not None)
         return ExecutionPlan(
             layers=list(layers),
             schedules=schedules,
@@ -349,20 +371,36 @@ class Engine:
         return order
 
     def io_report(self, bffnn: BlockFFNN, order: np.ndarray,
-                  schedules: Optional[List] = None) -> IOReport:
+                  schedules: Optional[List] = None,
+                  fused: bool = False) -> IOReport:
         """Exact simulated tile traffic of ``order`` next to Theorem 1.
 
         Theorem 1 assumes a connected FFNN, so isolated tiles (dead blocks
         left by pruning) are dropped from the analysis — connection indices
-        are unaffected.  With per-layer ``schedules`` the report also carries
-        the layered-dispatch traffic (each boundary round-trips the hidden
-        state through HBM) so the fused plan's cross-layer savings are
-        visible next to the Theorem-1 bounds."""
+        are unaffected.  With per-layer ``schedules`` the report carries the
+        per-dtype byte traffic of the weight stream (blocks + dequant
+        scales, at the storage dtype); with ``fused=True`` it additionally
+        carries the layered-dispatch traffic (each boundary round-trips the
+        hidden state through HBM) so the fused plan's cross-layer savings
+        are visible next to the Theorem-1 bounds."""
         net = drop_isolated(bffnn.net)
         sim = simulate(net, order, self.M_tiles, self.policy)
         layered_reads = layered_writes = 0
         hidden_tiles = hidden_bytes = 0
+        weight_dtype = "f32"
+        weight_bytes = scale_bytes = act_bytes = 0
         if schedules is not None:
+            weight_dtype = schedules[0].weight_dtype
+            weight_bytes = sum(s.weight_bytes for s in schedules)
+            scale_bytes = sum(s.scale_bytes for s in schedules)
+            # f32 activations crossing HBM per batch row: input + output
+            # always; each layer boundary round-trips the hidden state only
+            # on the layered path (the fused plan keeps it VMEM-resident)
+            act_bytes = 4 * (bffnn.layers[0].n_in + bffnn.layers[-1].n_out)
+            if not fused:
+                act_bytes += sum(2 * lay.n_out * 4
+                                 for lay in bffnn.layers[:-1])
+        if schedules is not None and fused:
             layered_reads = sum(s.sim_reads for s in schedules)
             layered_writes = sum(s.sim_writes for s in schedules)
             for lay in bffnn.layers[:-1]:
@@ -378,4 +416,8 @@ class Engine:
             layered_writes=layered_writes,
             hidden_tiles_kept=hidden_tiles,
             hidden_bytes_kept_per_row=hidden_bytes,
+            weight_dtype=weight_dtype,
+            weight_bytes_streamed=weight_bytes,
+            scale_bytes_streamed=scale_bytes,
+            activation_bytes_per_row=act_bytes,
         )

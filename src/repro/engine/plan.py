@@ -55,6 +55,12 @@ class DynamicIOReport:
     per_layer_live_tiles: Tuple[int, ...]
     per_layer_row_occupancy: Tuple[float, ...]
     per_layer_hist: Tuple[Tuple[int, int, int, int, int], ...]
+    # byte accounting: bytes one weight block (plus its dequant scale when
+    # quantized) costs in the storage dtype — turns the block counts above
+    # into the byte traffic a demand-driven stream actually pays.  0 in
+    # reports persisted before byte accounting existed.
+    bytes_per_block: int = 0
+    weight_dtype: str = "f32"
 
     @property
     def static_total(self) -> int:
@@ -67,6 +73,16 @@ class DynamicIOReport:
     @property
     def blocks_skipped(self) -> int:
         return self.static_total - self.dynamic_total
+
+    @property
+    def dynamic_weight_bytes(self) -> int:
+        """Weight-stream bytes the gated forward actually consumed."""
+        return self.dynamic_total * self.bytes_per_block
+
+    @property
+    def static_weight_bytes(self) -> int:
+        """Weight-stream bytes of the full static schedule."""
+        return self.static_total * self.bytes_per_block
 
     @property
     def read_fraction(self) -> float:
@@ -93,6 +109,8 @@ class DynamicIOReport:
                                         self.per_layer_row_occupancy],
             "per_layer_hist": [[int(v) for v in h]
                                for h in self.per_layer_hist],
+            "bytes_per_block": int(self.bytes_per_block),
+            "weight_dtype": self.weight_dtype,
         }
 
     @classmethod
@@ -105,6 +123,9 @@ class DynamicIOReport:
             per_layer_live_tiles=tuple(d["per_layer_live_tiles"]),
             per_layer_row_occupancy=tuple(d["per_layer_row_occupancy"]),
             per_layer_hist=tuple(tuple(h) for h in d["per_layer_hist"]),
+            # byte fields are absent from pre-quantization manifests
+            bytes_per_block=int(d.get("bytes_per_block", 0)),
+            weight_dtype=d.get("weight_dtype", "f32"),
         )
 
 
@@ -125,6 +146,18 @@ class IOReport:
     fused plan, and ``hidden_bytes_kept_per_row`` the HBM bytes that saves
     per batch row (one write plus one read-back per intermediate feature, at
     the kernel's float32 accumulator/hidden-buffer precision — 4 B/feature).
+
+    The per-dtype byte fields restate the dominant I/O term in the unit the
+    hardware pays: ``weight_bytes_streamed`` is the bytes of weight blocks
+    one forward streams in the storage dtype (``weight_dtype``; halved for
+    bf16, quartered for fp8 at the identical schedule),
+    ``scale_bytes_streamed`` the f32 dequant-scale bytes riding along (0
+    when unquantized), and ``activation_bytes_per_row`` the f32 activation
+    bytes crossing HBM per batch row.  Tile counts and byte counts disagree
+    exactly when dtypes differ: quantization changes bytes while the
+    schedule — and so every tile count and Theorem-1 bound — is unchanged.
+    All byte fields default to 0 so reports persisted before byte
+    accounting existed still load.
     """
 
     simulated: IOStats
@@ -135,6 +168,10 @@ class IOReport:
     layered_writes: int = 0
     hidden_tiles_kept: int = 0
     hidden_bytes_kept_per_row: int = 0
+    weight_dtype: str = "f32"
+    weight_bytes_streamed: int = 0
+    scale_bytes_streamed: int = 0
+    activation_bytes_per_row: int = 0
     # measured dynamic I/O of the latest gated measurement run (None until
     # ExecutionPlan.measure_dynamic records one) — the static fields above
     # are schedule properties; this one is a property of actual data
@@ -166,6 +203,11 @@ class IOReport:
         return self.simulated.total / max(1, self.bounds.total_lo)
 
     @property
+    def weight_stream_bytes(self) -> int:
+        """Total weight-stream bytes per forward: narrow blocks + scales."""
+        return self.weight_bytes_streamed + self.scale_bytes_streamed
+
+    @property
     def layered_total(self) -> int:
         return self.layered_reads + self.layered_writes
 
@@ -181,6 +223,9 @@ class IOReport:
                f"[{b.total_lo}, {b.total_hi}] "
                f"(x{self.optimality_ratio:.2f} of lower bound, "
                f"M={self.M_tiles} tiles, {self.policy.upper()})")
+        if self.weight_bytes_streamed:
+            msg += (f"; weight stream {self.weight_stream_bytes} B "
+                    f"as {self.weight_dtype}")
         if self.layered_total:
             msg += (f"; fused saves {self.cross_layer_savings} tile I/Os vs "
                     f"layered ({self.hidden_tiles_kept} hidden tiles / "
@@ -207,6 +252,10 @@ class IOReport:
             "layered_writes": int(self.layered_writes),
             "hidden_tiles_kept": int(self.hidden_tiles_kept),
             "hidden_bytes_kept_per_row": int(self.hidden_bytes_kept_per_row),
+            "weight_dtype": self.weight_dtype,
+            "weight_bytes_streamed": int(self.weight_bytes_streamed),
+            "scale_bytes_streamed": int(self.scale_bytes_streamed),
+            "activation_bytes_per_row": int(self.activation_bytes_per_row),
             "dynamic": None if self.dynamic is None
             else self.dynamic.to_dict(),
         }
@@ -223,6 +272,11 @@ class IOReport:
             layered_writes=d.get("layered_writes", 0),
             hidden_tiles_kept=d.get("hidden_tiles_kept", 0),
             hidden_bytes_kept_per_row=d.get("hidden_bytes_kept_per_row", 0),
+            # byte fields are absent from pre-quantization manifests
+            weight_dtype=d.get("weight_dtype", "f32"),
+            weight_bytes_streamed=d.get("weight_bytes_streamed", 0),
+            scale_bytes_streamed=d.get("scale_bytes_streamed", 0),
+            activation_bytes_per_row=d.get("activation_bytes_per_row", 0),
             dynamic=None if dyn is None else DynamicIOReport.from_dict(dyn),
         )
 
@@ -269,8 +323,14 @@ class ExecutionPlan:
     def dtype(self) -> np.dtype:
         """The plan's input dtype: what its forward was traced (and should
         always be called) with.  Feeding any other dtype retraces a second
-        program per batch shape — serving callers cast to this first."""
+        program per batch shape — serving callers cast to this first.
+        Independent of ``weight_dtype`` — activations stay f32."""
         return np.dtype(self.layers[0].blocks.dtype)
+
+    @property
+    def weight_dtype(self) -> str:
+        """Storage dtype of the streamed weight blocks (f32/bf16/fp8)."""
+        return self.schedules[0].weight_dtype if self.schedules else "f32"
 
     def __call__(self, x) -> jnp.ndarray:
         """Run inference.  ``x`` is ``[n_in]`` or batched ``[B, n_in]``."""
@@ -354,6 +414,10 @@ class ExecutionPlan:
             )
         _, occs = self._measure(x)
         B = int(x.shape[0])
+        bs = self.flat.block
+        bpb = bs * bs * np.dtype(np.asarray(self.flat.blocks).dtype).itemsize
+        if self.flat.scales is not None:
+            bpb += 4                     # the per-block f32 dequant scale
         rows = np.asarray(self.flat.rows)
         stat, dyn, in_tiles, live, row_occ, hists = [], [], [], [], [], []
         for k, (s, e) in enumerate(self.flat.segments):
@@ -377,6 +441,8 @@ class ExecutionPlan:
             per_layer_live_tiles=tuple(live),
             per_layer_row_occupancy=tuple(row_occ),
             per_layer_hist=tuple(hists),
+            bytes_per_block=int(bpb),
+            weight_dtype=self.flat.weight_dtype,
         )
         self.io = dataclasses.replace(self.io, dynamic=report)
         return report
@@ -397,6 +463,8 @@ class ExecutionPlan:
         mode = "fused" if self.fused else "layered"
         if self.gate:
             mode += "+gated"
+        if self.weight_dtype != "f32":
+            mode += f"+{self.weight_dtype}"
         fallback = "" if self.fallback_reason is None \
             else f" [fallback: {self.fallback_reason}]"
         return (f"ExecutionPlan[{self.backend}/{mode}]{fallback} {shapes} "
@@ -421,4 +489,10 @@ class ExecutionPlan:
                          "hbm_row", "out_tile", "bias_idx"):
                 out[f"flat_{name}"] = np.asarray(getattr(f, name),
                                                  dtype=np.int32)
+            if f.scales is not None:
+                # quantized stream: persist the narrow blocks + scales so a
+                # warm start verifies the stored quantization byte-for-byte
+                # (narrow dtypes ride the checkpoint void-view path)
+                out["flat_qblocks"] = np.asarray(f.blocks)
+                out["flat_scales"] = np.asarray(f.scales, dtype=np.float32)
         return out

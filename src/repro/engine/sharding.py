@@ -252,6 +252,23 @@ class ShardedIOReport:
     def max_shard_total(self) -> int:
         return max(r.simulated.total for r in self.per_shard)
 
+    @property
+    def weight_dtype(self) -> str:
+        return self.per_shard[0].weight_dtype if self.per_shard else "f32"
+
+    @property
+    def weight_bytes_streamed(self) -> int:
+        return sum(r.weight_bytes_streamed for r in self.per_shard)
+
+    @property
+    def scale_bytes_streamed(self) -> int:
+        return sum(r.scale_bytes_streamed for r in self.per_shard)
+
+    @property
+    def weight_stream_bytes(self) -> int:
+        """Aggregate weight-stream bytes (blocks + scales) per data replica."""
+        return sum(r.weight_stream_bytes for r in self.per_shard)
+
     def summary(self) -> str:
         return (f"sharded tile I/O {self.total} over {self.model} model "
                 f"shard(s) x {self.data} data (max shard "
@@ -322,6 +339,11 @@ class ShardedExecutionPlan:
         """Input dtype the collective forward was traced with (the sharded
         analogue of :attr:`ExecutionPlan.dtype`)."""
         return self.shards[0].dtype
+
+    @property
+    def weight_dtype(self) -> str:
+        """Storage dtype of the streamed weight blocks (all shards agree)."""
+        return self.shards[0].weight_dtype
 
     @property
     def annealer_iters(self) -> int:
@@ -444,7 +466,13 @@ def _sharded_segments(
         n_max = max(len(r) for r in scheds)
         rows = np.zeros((model, n_max), dtype=np.int32)
         cols = np.full((model, n_max), tps, dtype=np.int32)   # sink segment
-        blocks = np.zeros((model, n_max, bm, bn), dtype=np.float32)
+        # keep the storage dtype: a quantized plan's shards stream the same
+        # narrow blocks the unsharded plan does (pad steps are zero blocks
+        # with scale 1.0, so they dequantize to exact zero)
+        store_dtype = np.asarray(shard_plans[0].schedules[k].blocks).dtype
+        quant = shard_plans[0].schedules[k].scales is not None
+        blocks = np.zeros((model, n_max, bm, bn), dtype=store_dtype)
+        scales = np.ones((model, n_max), dtype=np.float32) if quant else None
         bias = np.zeros((model, tps * bn), dtype=np.float32)
         grid_out_full = sum(len(sp.owned[k]) for sp in specs)
         perm = np.zeros(grid_out_full, dtype=np.int32)
@@ -453,13 +481,16 @@ def _sharded_segments(
             n = len(np.asarray(sch.rows))
             rows[s, :n] = np.asarray(sch.rows)
             cols[s, :n] = np.asarray(sch.cols)
-            blocks[s, :n] = np.asarray(sch.blocks, dtype=np.float32)
+            blocks[s, :n] = np.asarray(sch.blocks)
+            if quant:
+                scales[s, :n] = np.asarray(sch.scales, dtype=np.float32)
             bias[s] = np.asarray(sp.bffnn.layers[k].bias, dtype=np.float32)
             perm[sp.owned[k]] = s * tps + np.arange(tps)
         segments.append(ShardedSegment(
             rows=rows, cols=cols, blocks=blocks, bias=bias, perm=perm,
             grid_in=full_lay.grid_in, tps=tps, block_m=bm, block_n=bn,
             activation=shard_plans[0].activations[k],
+            scales=scales,
         ))
     return segments
 

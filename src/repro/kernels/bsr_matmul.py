@@ -41,23 +41,29 @@ from repro.compat import tpu_compiler_params
 def _kernel(
     # scalar prefetch
     rows_ref, cols_ref, first_ref, last_ref,
-    # inputs
+    # inputs: x, w, bias [, scale when quant] / outputs / scratch
     x_ref, w_ref, b_ref,
-    # outputs
-    o_ref,
-    # scratch
-    acc_ref,
-    *,
+    *rest,
     activation: Optional[Callable],
+    quant: bool,
 ):
+    if quant:
+        s_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
     g = pl.program_id(0)
 
     @pl.when(first_ref[g] == 1)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # dequant fused right before the dot: the block streamed HBM->VMEM in
+    # the narrow dtype; only the VMEM-resident copy is widened
+    w = w_ref[0]
+    if quant:
+        w = w.astype(jnp.float32) * s_ref[0, 0]
     acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+        x_ref[...], w, preferred_element_type=jnp.float32
     )
 
     @pl.when(last_ref[g] == 1)
@@ -83,6 +89,7 @@ def bsr_matmul(
     grid_out: int,
     activation: Optional[Callable] = None,
     interpret: bool = False,
+    scales: Optional[jnp.ndarray] = None,  # f32 [nnz] dequant (quantized)
 ) -> jnp.ndarray:
     """Run the scheduled BSR matmul.  See module docstring for the schedule contract."""
     B, n_in = x.shape
@@ -90,25 +97,33 @@ def bsr_matmul(
     n_out = grid_out * bn
     if n_in % bm:
         raise ValueError("n_in must be a multiple of the block size")
+    quant = scales is not None
 
+    in_specs = [
+        # input tile: revisits keep it in VMEM while rows[g] is unchanged
+        pl.BlockSpec((B, bm), lambda g, rows, cols, first, last: (0, rows[g])),
+        # weight block: streamed, one per step
+        pl.BlockSpec((1, bm, bn), lambda g, rows, cols, first, last: (g, 0, 0)),
+        # bias tile of the current output tile
+        pl.BlockSpec((1, bn), lambda g, rows, cols, first, last: (0, cols[g])),
+    ]
+    if quant:
+        # per-block dequant scale of step g: a (1, 1) SMEM scalar
+        in_specs.append(pl.BlockSpec(
+            (1, 1), lambda g, rows, cols, first, last: (g, 0),
+            memory_space=pltpu.SMEM,
+        ))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(nnz,),
-        in_specs=[
-            # input tile: revisits keep it in VMEM while rows[g] is unchanged
-            pl.BlockSpec((B, bm), lambda g, rows, cols, first, last: (0, rows[g])),
-            # weight block: streamed, one per step
-            pl.BlockSpec((1, bm, bn), lambda g, rows, cols, first, last: (g, 0, 0)),
-            # bias tile of the current output tile
-            pl.BlockSpec((1, bn), lambda g, rows, cols, first, last: (0, cols[g])),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (B, bn), lambda g, rows, cols, first, last: (0, cols[g])
         ),
         scratch_shapes=[pltpu.VMEM((B, bn), jnp.float32)],
     )
     fn = pl.pallas_call(
-        functools.partial(_kernel, activation=activation),
+        functools.partial(_kernel, activation=activation, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, n_out), x.dtype),
         compiler_params=tpu_compiler_params(
@@ -116,7 +131,10 @@ def bsr_matmul(
         ),
         interpret=interpret,
     )
-    return fn(rows, cols, first, last, x, blocks, bias.reshape(1, -1))
+    args = (rows, cols, first, last, x, blocks, bias.reshape(1, -1))
+    if quant:
+        args += (scales.reshape(-1, 1),)
+    return fn(*args)
 
 
 # --------------------------------------------------------------------------- #
@@ -133,6 +151,7 @@ def _megakernel(
     activation: Optional[Callable],
     final_activation: Optional[Callable],
     gate: bool,
+    quant: bool,
     valid_b: int,
 ):
     """One grid step per nonzero block of ANY layer, in whole-net Theorem-1
@@ -158,15 +177,29 @@ def _megakernel(
     ``valid_b`` are engine batch padding and are excluded from the counts:
     non-odd activation epilogues (sigmoid-style) turn padded zero rows
     nonzero, which must not make a dead tile look live in the measured
-    occupancy."""
-    if gate:
+    occupancy.
+
+    With ``quant=True`` the streamed ``w_ref`` block is stored in a narrow
+    dtype (bf16/fp8) and an extra ``s_ref`` input carries its per-block f32
+    scale as a (1, 1) SMEM scalar; dequant (``astype(f32) * scale``) is
+    fused right before the dot, so only the VMEM-resident copy is ever
+    widened — HBM traffic stays at the narrow width."""
+    if gate and quant:
+        (occ0_ref, x_ref, w_ref, b_ref, s_ref, o_ref, occ_ref,
+         acc_ref, h0_ref, h1_ref) = rest
+    elif gate:
         (occ0_ref, x_ref, w_ref, b_ref, o_ref, occ_ref,
          acc_ref, h0_ref, h1_ref) = rest
+    elif quant:
+        x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, h0_ref, h1_ref = rest
     else:
         x_ref, w_ref, b_ref, o_ref, acc_ref, h0_ref, h1_ref = rest
     g = pl.program_id(0)
     lid = layer_ref[g]
     r = rows_ref[g]
+    w = w_ref[0]
+    if quant:
+        w = w.astype(jnp.float32) * s_ref[0, 0]
 
     @pl.when(first_ref[g] == 1)
     def _init():
@@ -188,20 +221,20 @@ def _megakernel(
     @pl.when((lid == 0) & alive)
     def _from_hbm():
         acc_ref[...] += jnp.dot(
-            x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+            x_ref[...], w, preferred_element_type=jnp.float32
         )
 
     if n_layers > 1:
         @pl.when((lid > 0) & (lid % 2 == 1) & alive)
         def _from_h0():
             acc_ref[...] += jnp.dot(
-                h0_ref[r], w_ref[0], preferred_element_type=jnp.float32
+                h0_ref[r], w, preferred_element_type=jnp.float32
             )
 
         @pl.when((lid > 0) & (lid % 2 == 0) & alive)
         def _from_h1():
             acc_ref[...] += jnp.dot(
-                h1_ref[r], w_ref[0], preferred_element_type=jnp.float32
+                h1_ref[r], w, preferred_element_type=jnp.float32
             )
 
     # epilogue on the last visit of the current output tile
@@ -256,6 +289,7 @@ def bsr_megakernel(
     bias_idx: jnp.ndarray,    # int32 [nnz_total] bias-tile index
     bias_tiles: jnp.ndarray,  # [total_out_tiles, bs]
     occ0: Optional[jnp.ndarray] = None,  # int32 [grid_in_0] (gate only)
+    scales: Optional[jnp.ndarray] = None,  # f32 [nnz_total] dequant (quant)
     n_layers: int = 1,
     block: int = 0,
     grid_out_final: int = 0,
@@ -286,22 +320,30 @@ def bsr_megakernel(
     n_out = grid_out_final * bs
     if n_in % bs:
         raise ValueError("n_in must be a multiple of the block size")
+    quant = scales is not None
+
+    in_specs = [
+        # input tile: only layer-0 steps move this index; afterwards it
+        # is frozen, so the block stays in VMEM untouched
+        pl.BlockSpec((B, bs), lambda g, *s: (0, s[5][g])),
+        # weight block of step g: streamed, double-buffered by the
+        # Pallas pipeline (gated no-op steps still advance it)
+        pl.BlockSpec((1, bs, bs), lambda g, *s: (g, 0, 0)),
+        # bias tile of the current output tile (any layer)
+        pl.BlockSpec((1, bs), lambda g, *s: (s[7][g], 0)),
+    ]
+    if quant:
+        # per-block dequant scale of step g: a (1, 1) SMEM scalar riding
+        # the same pipeline as the narrow weight block it rescales
+        in_specs.append(pl.BlockSpec((1, 1), lambda g, *s: (g, 0),
+                                     memory_space=pltpu.SMEM))
 
     # index maps take (g, *scalar_prefetch); variadic so the same lambdas
     # serve both the 8-array and the gated 9-array prefetch layout
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=9 if gate else 8,
         grid=(nnz,),
-        in_specs=[
-            # input tile: only layer-0 steps move this index; afterwards it
-            # is frozen, so the block stays in VMEM untouched
-            pl.BlockSpec((B, bs), lambda g, *s: (0, s[5][g])),
-            # weight block of step g: streamed, double-buffered by the
-            # Pallas pipeline (gated no-op steps still advance it)
-            pl.BlockSpec((1, bs, bs), lambda g, *s: (g, 0, 0)),
-            # bias tile of the current output tile (any layer)
-            pl.BlockSpec((1, bs), lambda g, *s: (s[7][g], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((B, bs), lambda g, *s: (0, s[6][g])),
             # measured hidden occupancy: whole array SMEM-resident across
@@ -326,6 +368,7 @@ def bsr_megakernel(
             activation=activation,
             final_activation=final_activation,
             gate=gate,
+            quant=quant,
             valid_b=valid_b,
         ),
         grid_spec=grid_spec,
@@ -339,4 +382,7 @@ def bsr_megakernel(
                 bias_idx)
     if gate:
         prefetch += (occ0,)
-    return fn(*prefetch, x, blocks, bias_tiles)
+    args = (x, blocks, bias_tiles)
+    if quant:
+        args += (scales.reshape(-1, 1),)
+    return fn(*prefetch, *args)

@@ -25,6 +25,87 @@ from repro.core.blocksparse import BSRLayer, is_contiguous_by_output
 from . import ref
 from .bsr_matmul import bsr_matmul
 
+try:  # narrow weight-stream dtypes (already a jax dependency)
+    import ml_dtypes as _ml_dtypes
+except ImportError:  # pragma: no cover - jax always ships it
+    _ml_dtypes = None
+
+#: fp8 storage dtype of the quantized weight stream; None when the installed
+#: ml_dtypes predates float8 support (tests monkeypatch this to exercise the
+#: graceful compile-time guard).
+FP8_DTYPE = getattr(_ml_dtypes, "float8_e4m3fn", None)
+BF16_DTYPE = getattr(_ml_dtypes, "bfloat16", None)
+
+#: largest finite magnitude representable in float8_e4m3fn — the per-block
+#: scale maps each block's absmax onto it (the DeepSeek-V3 block-128 scheme
+#: at our tile granularity).
+FP8_MAX = 448.0
+
+WEIGHT_DTYPES = ("f32", "bf16", "fp8")
+
+_WEIGHT_DTYPE_ALIASES = {
+    None: "f32", "f32": "f32", "float32": "f32", "fp32": "f32",
+    "bf16": "bf16", "bfloat16": "bf16",
+    "fp8": "fp8", "f8": "fp8", "float8": "fp8", "float8_e4m3fn": "fp8",
+}
+
+
+def resolve_weight_dtype(name) -> str:
+    """Normalize a weight-stream dtype spec to ``f32`` | ``bf16`` | ``fp8``.
+
+    Raises a clear ``ValueError`` at compile time when fp8 is requested but
+    the installed ``ml_dtypes`` lacks ``float8_e4m3fn`` — never a deep
+    kernel ``TypeError`` later.
+    """
+    key = name.lower() if isinstance(name, str) else name
+    try:
+        wdt = _WEIGHT_DTYPE_ALIASES[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown weight_dtype {name!r}; pick from {WEIGHT_DTYPES}"
+        ) from None
+    if wdt == "fp8" and FP8_DTYPE is None:
+        raise ValueError(
+            "weight_dtype='fp8' needs ml_dtypes with float8_e4m3fn; this "
+            "installation lacks it — use 'bf16' or 'f32'"
+        )
+    if wdt == "bf16" and BF16_DTYPE is None:
+        raise ValueError(
+            "weight_dtype='bf16' needs ml_dtypes with bfloat16; this "
+            "installation lacks it — use 'f32'"
+        )
+    return wdt
+
+
+def weight_itemsize(weight_dtype: str) -> int:
+    """Bytes per weight element in the streamed (storage) dtype."""
+    return {"f32": 4, "bf16": 2, "fp8": 1}[resolve_weight_dtype(weight_dtype)]
+
+
+def quantize_blocks(
+    blocks: np.ndarray, weight_dtype: str
+) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Quantize ``[nnz, bm, bn]`` f32 blocks to the narrow storage dtype.
+
+    Returns ``(qblocks, scales)`` where ``scales`` is one f32 factor per
+    block (``None`` for f32: identity).  Dequant is ``q.astype(f32) *
+    scale``.  bf16 keeps unit scales (its exponent range matches f32);
+    fp8 maps each block's absmax onto ``FP8_MAX`` so the 4-bit mantissa is
+    spent on the block's actual dynamic range.  All-zero blocks (including
+    the bias-patch blocks) get scale 1.0, so they dequantize to exact zero.
+    """
+    wdt = resolve_weight_dtype(weight_dtype)
+    blocks = np.asarray(blocks, dtype=np.float32)
+    if wdt == "f32":
+        return blocks, None
+    nnz = blocks.shape[0]
+    if wdt == "bf16":
+        return blocks.astype(BF16_DTYPE), np.ones(nnz, dtype=np.float32)
+    amax = np.max(np.abs(blocks), axis=(1, 2))
+    scales = np.where(amax > 0, amax / FP8_MAX, 1.0).astype(np.float32)
+    q = (blocks / scales[:, None, None]).astype(FP8_DTYPE)
+    return q, scales
+
 
 @dataclasses.dataclass
 class CompiledSchedule:
@@ -40,11 +121,25 @@ class CompiledSchedule:
     # single-resident-tile VMEM model — the paper's I/O count for M=3.
     sim_reads: int
     sim_writes: int
+    # quantized weight stream: ``blocks`` is stored in the narrow dtype and
+    # ``scales`` holds one f32 dequant factor per block (None for f32)
+    scales: Optional[jnp.ndarray] = None
+    weight_dtype: str = "f32"
+
+    @property
+    def weight_bytes(self) -> int:
+        """Bytes the kernel streams for this layer's weight blocks."""
+        return int(np.asarray(self.blocks).nbytes)
+
+    @property
+    def scale_bytes(self) -> int:
+        return 0 if self.scales is None else int(np.asarray(self.scales).nbytes)
 
 
 def compile_schedule(
     layer: BSRLayer,
     perm: Optional[np.ndarray] = None,
+    weight_dtype: str = "f32",
 ) -> CompiledSchedule:
     """Validate + pack a schedule.  ``perm`` permutes the layer's block storage
     (default: as stored).  Raises if the schedule is not contiguous-by-output —
@@ -81,8 +176,9 @@ def compile_schedule(
     row_changes = 1 + int((rows[1:] != rows[:-1]).sum()) if nnz else 0
     sim_reads = nnz + row_changes + layer.grid_out  # + bias tiles
     sim_writes = layer.grid_out
+    qblocks, scales = quantize_blocks(blocks, weight_dtype)
     return CompiledSchedule(
-        blocks=jnp.asarray(blocks),
+        blocks=jnp.asarray(qblocks),
         rows=jnp.asarray(rows),
         cols=jnp.asarray(cols),
         first=jnp.asarray(first),
@@ -90,6 +186,8 @@ def compile_schedule(
         grid_out=layer.grid_out,
         sim_reads=sim_reads,
         sim_writes=sim_writes,
+        scales=None if scales is None else jnp.asarray(scales),
+        weight_dtype=resolve_weight_dtype(weight_dtype),
     )
 
 
@@ -136,10 +234,23 @@ class FlatSchedule:
     # simulated per-layer tile traffic (reads, writes) — flat totals are the
     # sums, which tests check against the per-layer reports
     per_layer_io: Tuple[Tuple[int, int], ...]
+    # quantized weight stream: ``blocks`` is stored narrow, ``scales`` is one
+    # f32 dequant factor per flat step (None for f32)
+    scales: Optional[jnp.ndarray] = None
+    weight_dtype: str = "f32"
 
     @property
     def nnz(self) -> int:
         return int(self.rows.shape[0])
+
+    @property
+    def weight_bytes(self) -> int:
+        """Bytes of weight blocks the megakernel streams per forward."""
+        return int(np.asarray(self.blocks).nbytes)
+
+    @property
+    def scale_bytes(self) -> int:
+        return 0 if self.scales is None else int(np.asarray(self.scales).nbytes)
 
     @property
     def sim_reads(self) -> int:
@@ -216,6 +327,16 @@ def compile_flat_schedule(
         [np.asarray(lay.bias, dtype=np.float32).reshape(lay.grid_out, -1)
          for lay in layers])
 
+    wdt = schedules[0].weight_dtype
+    for sch in schedules:
+        if sch.weight_dtype != wdt:
+            raise ValueError(
+                "flat schedule requires one weight_dtype across layers; got "
+                f"{sch.weight_dtype!r} vs {wdt!r}"
+            )
+    scales = None if wdt == "f32" else \
+        jnp.concatenate([sch.scales for sch in schedules])
+
     hidden_tiles = max([lay.grid_out for lay in layers[:-1]] or [1])
     return FlatSchedule(
         blocks=jnp.concatenate([sch.blocks for sch in schedules]),
@@ -235,6 +356,8 @@ def compile_flat_schedule(
         n_out=layers[-1].n_out,
         hidden_tiles=int(hidden_tiles),
         per_layer_io=tuple(per_layer_io),
+        scales=scales,
+        weight_dtype=wdt,
     )
 
 
@@ -265,6 +388,7 @@ def scheduled_bsr_layer(
         grid_out=schedule.grid_out,
         activation=activation,
         interpret=interpret,
+        scales=schedule.scales,
     )
 
 

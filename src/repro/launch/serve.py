@@ -97,7 +97,8 @@ def serve_sparse_ffnn(args) -> None:
     tracer = Tracer() if args.trace_out else None
     engine = Engine(backend=args.backend, activation="gelu", reorder=True,
                     reorder_iters=args.reorder_iters,
-                    fuse=not args.no_fuse, gate=args.gate, tracer=tracer)
+                    fuse=not args.no_fuse, gate=args.gate,
+                    weight_dtype=args.weight_dtype, tracer=tracer)
     mesh = Mesh.parse(args.mesh) if args.mesh else None
     store = (PlanStore(args.plan_store, tracer=tracer)
              if args.plan_store else None)
@@ -299,6 +300,14 @@ def main():
                          "has fewer devices than mesh slots)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "interpret", "jnp"))
+    ap.add_argument("--weight-dtype", default="f32",
+                    choices=("f32", "bf16", "fp8"),
+                    help="storage dtype of the streamed weight blocks: "
+                         "bf16/fp8 quantize each block with one f32 scale "
+                         "at compile time and fuse the dequant into the "
+                         "kernel, halving/quartering weight-stream bytes "
+                         "(outputs approximate within the documented "
+                         "tolerance; f32 stays bit-exact)")
     ap.add_argument("--plan-store", default=None,
                     help="directory of the persistent plan cache; a warm "
                          "start skips the annealing cost entirely")

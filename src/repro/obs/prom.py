@@ -105,6 +105,13 @@ def _walk(out: _Samples, prefix: str, node: dict,
             for bin_name, n in v.items():
                 out.add(name, {**labels, "bin": str(bin_name)}, n)
             continue
+        if str(key).endswith("_by_dtype") and isinstance(v, dict):
+            # {"bf16": bytes, "f32": bytes} → base metric with dtype= label
+            base = f"{prefix}_{_sanitize(str(key)[:-len('_by_dtype')])}"
+            for dt, n in v.items():
+                if isinstance(n, (bool, int, float)):
+                    out.add(base, {**labels, "dtype": str(dt)}, n)
+            continue
         if _is_quantile_dict(v):
             for qk, qv in v.items():
                 if qk == "count":

@@ -24,10 +24,36 @@ OCC_BINS = ("dead", "lt25", "lt50", "lt75", "le100")
 
 
 def _weight_bytes(plan) -> int:
+    # prefer the plan's own byte accounting: for a quantized weight stream
+    # the schedule blocks are narrower than the f32 layer blocks, and the
+    # IOReport counts exactly what the forward streams (blocks + scales)
+    io = getattr(plan, "io", None)
+    streamed = getattr(io, "weight_stream_bytes", 0)
+    if streamed:
+        return int(streamed)
     layers = getattr(plan, "layers", None)
     if not layers:
         return 0
     return int(sum(getattr(l.blocks, "nbytes", 0) for l in layers))
+
+
+def _weight_bytes_by_dtype(plan) -> Dict[str, int]:
+    """Streamed weight bytes split by storage dtype.
+
+    Quantized plans stream narrow blocks plus one f32 scale per block, so
+    the map has two entries (``{"bf16": ..., "f32": ...}``); an unquantized
+    plan puts everything under ``"f32"``.  Empty when the plan predates
+    byte accounting."""
+    io = getattr(plan, "io", None)
+    wdt = getattr(io, "weight_dtype", "f32")
+    wbytes = int(getattr(io, "weight_bytes_streamed", 0) or 0)
+    sbytes = int(getattr(io, "scale_bytes_streamed", 0) or 0)
+    if not wbytes:
+        return {}
+    out = {wdt: wbytes}
+    if sbytes:
+        out["f32"] = out.get("f32", 0) + sbytes
+    return out
 
 
 def _nnz_blocks(plan) -> int:
@@ -65,6 +91,10 @@ def plan_io_attrs(plan) -> Dict[str, object]:
         attrs["io_tile_total"] = int(sim.total)
         attrs["io_optimality_ratio"] = round(float(io.optimality_ratio), 4)
         attrs["io_within_bounds"] = bool(io.within_bounds)
+    streamed = getattr(io, "weight_stream_bytes", 0)
+    if streamed:
+        attrs["io_weight_bytes"] = int(streamed)
+        attrs["weight_dtype"] = getattr(io, "weight_dtype", "f32")
     dyn = getattr(io, "dynamic", None)
     if dyn is not None:
         attrs["io_dynamic_blocks"] = int(dyn.dynamic_total)
@@ -84,13 +114,15 @@ class _BucketIO:
                  "tile_writes", "optimality_ratio", "within_bounds",
                  "bytes_per_block", "batches_measured", "dynamic_blocks",
                  "static_scheduled", "dynamic_bytes", "last_read_fraction",
-                 "occupancy_hist")
+                 "occupancy_hist", "weight_dtype", "weight_bytes_by_dtype")
 
     def __init__(self, bucket: int):
         self.bucket = bucket
         # static (schedule) gauges — properties of the compiled plan
         self.static_blocks = 0          # nonzero weight blocks in the net
         self.weight_bytes = 0           # bytes of weight blocks on disk/HBM
+        self.weight_dtype = "f32"       # storage dtype of streamed blocks
+        self.weight_bytes_by_dtype: Dict[str, int] = {}
         self.tile_reads = 0             # simulated tile reads (paper model)
         self.tile_writes = 0
         self.optimality_ratio = 0.0     # simulated / Theorem-1 lower bound
@@ -114,6 +146,9 @@ class _BucketIO:
             "optimality_ratio": round(self.optimality_ratio, 4),
             "within_bounds": self.within_bounds,
         }
+        if self.weight_bytes_by_dtype:
+            d["weight_dtype"] = self.weight_dtype
+            d["weight_bytes_by_dtype"] = dict(self.weight_bytes_by_dtype)
         if self.batches_measured:
             d.update({
                 "batches_measured": self.batches_measured,
@@ -152,12 +187,16 @@ class IOTelemetry:
         """Record the static I/O gauges of the plan serving ``bucket``."""
         nnz = _nnz_blocks(plan)
         wbytes = _weight_bytes(plan)
+        by_dtype = _weight_bytes_by_dtype(plan)
         io = getattr(plan, "io", None)
+        wdt = getattr(io, "weight_dtype", "f32")
         sim = getattr(io, "simulated", None)
         with self._mu:
             b = self._get(bucket)
             b.static_blocks = nnz
             b.weight_bytes = wbytes
+            b.weight_dtype = wdt
+            b.weight_bytes_by_dtype = by_dtype
             b.bytes_per_block = wbytes / nnz if nnz else 0.0
             if sim is not None:
                 b.tile_reads = int(sim.reads)

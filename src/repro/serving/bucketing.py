@@ -157,6 +157,12 @@ class BucketedPlanSet:
         second jit program per bucket."""
         return self.base.dtype
 
+    @property
+    def weight_dtype(self) -> str:
+        """Storage dtype of the base plan's streamed weight blocks; every
+        bucket shares the same (possibly quantized) schedule arrays."""
+        return getattr(self.base, "weight_dtype", "f32")
+
     def bucket_for(self, n: int) -> int:
         """Smallest bucket that fits ``n`` rows (the largest one if none)."""
         if n < 1:

@@ -45,6 +45,7 @@ from repro.checkpoint.store import (
     write_manifest_dir,
 )
 from repro.core.blocksparse import BlockFFNN, BSRLayer
+from repro.kernels.ops import resolve_weight_dtype
 from repro.engine import (
     Engine,
     ExecutionPlan,
@@ -87,8 +88,10 @@ def plan_cache_key(engine: Engine,
     The mesh topology is part of the key — a sharded plan's per-shard
     orders are meaningless under any other partition, so changing the mesh
     shape (including sharded vs unsharded) must be a miss.  ``mesh`` /
-    ``max_move_span`` / ``gate`` enter the dict only when set, so entries
-    written by earlier store versions stay warm.
+    ``max_move_span`` / ``gate`` / ``weight_dtype`` enter the dict only
+    when set (non-default), so entries written by earlier store versions
+    stay warm.  A quantized plan's entry stores narrow blocks + scales, so
+    f32 and quantized plans of the same net must never alias.
     """
     settings = {
         "format": FORMAT_VERSION,
@@ -106,6 +109,9 @@ def plan_cache_key(engine: Engine,
         # gated and ungated plans must never alias (their lowered forwards
         # differ even though the schedule arrays are identical)
         settings["gate"] = True
+    wdt = resolve_weight_dtype(getattr(engine, "weight_dtype", "f32"))
+    if wdt != "f32":
+        settings["weight_dtype"] = wdt
     if mesh is not None:
         settings["mesh"] = [int(mesh.model), int(mesh.data)]
     return hashlib.sha256(
@@ -326,6 +332,19 @@ class PlanStore:
             if not np.array_equal(np.asarray(getattr(plan.flat, name)),
                                   arrays[f"flat_{name}"]):
                 return False
+        if plan.flat.scales is not None:
+            # quantized entries also verify the stored narrow blocks +
+            # scales byte-for-byte against the deterministic requantization
+            # (bytes, not values: narrow floats have NaN patterns
+            # np.array_equal would mis-judge)
+            for name, rebuilt in (("flat_qblocks", plan.flat.blocks),
+                                  ("flat_scales", plan.flat.scales)):
+                stored = arrays.get(name)
+                rebuilt = np.asarray(rebuilt)
+                if (stored is None or stored.dtype != rebuilt.dtype
+                        or stored.shape != rebuilt.shape
+                        or stored.tobytes() != rebuilt.tobytes()):
+                    return False
         return True
 
     @classmethod

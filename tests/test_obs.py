@@ -503,6 +503,8 @@ def test_prometheus_exposes_dynamic_vs_static_io(gated_server):
     assert 'repro_io_static_scheduled{bucket="4"}' in text
     assert 'repro_io_read_fraction{bucket="4"}' in text
     assert 'repro_io_occupancy_hist{bin="dead",bucket="4"}' in text
+    # weight-stream byte accounting, dtype-labelled (f32 plan → one entry)
+    assert 'repro_io_weight_bytes{bucket="4",dtype="f32"}' in text
     # booleans flatten to 0/1, strings are skipped
     assert 'repro_io_within_bounds{bucket="4"} 1' in text
     assert "gated" not in text.replace('model="gated"', "")

@@ -132,6 +132,7 @@ def test_cache_key_sensitive_to_every_schedule_setting(make_stack):
         "max_move_span": 32,
         "policy": "lru",
         "fuse": False,
+        "weight_dtype": "bf16",
     }
     keys = [key0]
     for field, value in changed.items():

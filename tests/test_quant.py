@@ -1,0 +1,312 @@
+"""Quantized weight-stream tests: bf16/fp8 block-scale weights.
+
+Families:
+
+  * quantization unit contract — per-block scales, all-zero blocks dequant
+    to exact zero, storage dtypes and byte sizes;
+  * parity — quantized forwards approximate the f32 plan within the
+    documented tolerance on every CPU backend, quantized jnp == interpret
+    bit-exactly (both dequantize the SAME stored narrow blocks), gated ==
+    ungated bit-exactly, and the safe twin reuses the quantized stream so
+    breaker degradation stays output-identical;
+  * byte accounting — ``IOReport``/``DynamicIOReport`` count the streamed
+    bytes in the storage dtype (bf16 >= 1.8x, fp8 >= 3.5x smaller than
+    f32), while tile counts and Theorem-1 bounds are unchanged;
+  * persistence — plan-store warm starts restore byte-identical quantized
+    blocks + scales, the cache key separates weight dtypes, and pre-change
+    report dicts still load (backward compat);
+  * guard — requesting fp8 when ml_dtypes lacks float8_e4m3fn fails at
+    compile time with a clear ValueError.
+"""
+
+import dataclasses as dc
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.ops as ops
+from repro.engine import Engine, Mesh
+from repro.engine.plan import DynamicIOReport, IOReport
+from repro.kernels.ops import (
+    FP8_DTYPE,
+    FP8_MAX,
+    quantize_blocks,
+    resolve_weight_dtype,
+    weight_itemsize,
+)
+from repro.serving import PlanStore, plan_cache_key
+
+CPU_BACKENDS = ("jnp", "interpret")
+
+#: max |quantized - f32| / max|f32 output| tolerated per storage dtype
+REL_TOL = {"bf16": 1e-2, "fp8": 1e-1}
+
+needs_fp8 = pytest.mark.skipif(
+    FP8_DTYPE is None, reason="ml_dtypes lacks float8_e4m3fn")
+
+QUANT_DTYPES = ("bf16", pytest.param("fp8", marks=needs_fp8))
+
+
+def _rel_err(y, y_ref):
+    y, y_ref = np.asarray(y, np.float32), np.asarray(y_ref, np.float32)
+    return float(np.max(np.abs(y - y_ref)) / max(1e-9,
+                                                 np.max(np.abs(y_ref))))
+
+
+def _x(n_in, batch=8, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((batch, n_in)), jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# quantization unit contract
+# --------------------------------------------------------------------------- #
+
+def test_resolve_weight_dtype_aliases():
+    assert resolve_weight_dtype(None) == "f32"
+    assert resolve_weight_dtype("float32") == "f32"
+    assert resolve_weight_dtype("bfloat16") == "bf16"
+    assert resolve_weight_dtype("BF16") == "bf16"
+    with pytest.raises(ValueError, match="unknown weight_dtype"):
+        resolve_weight_dtype("int4")
+
+
+def test_quantize_blocks_f32_is_identity():
+    blocks = np.random.default_rng(0).standard_normal((3, 8, 8)).astype(
+        np.float32)
+    q, scales = quantize_blocks(blocks, "f32")
+    assert scales is None and q.dtype == np.float32
+    np.testing.assert_array_equal(q, blocks)
+
+
+def test_quantize_blocks_bf16_unit_scales():
+    blocks = np.random.default_rng(0).standard_normal((4, 8, 8)).astype(
+        np.float32)
+    q, scales = quantize_blocks(blocks, "bf16")
+    assert q.itemsize == 2 and scales.shape == (4,)
+    np.testing.assert_array_equal(scales, np.ones(4, np.float32))
+    assert _rel_err(np.asarray(q, np.float32), blocks) < 8e-3
+
+
+@needs_fp8
+def test_quantize_blocks_fp8_per_block_scale():
+    rng = np.random.default_rng(0)
+    blocks = rng.standard_normal((4, 8, 8)).astype(np.float32)
+    blocks[1] *= 1e3          # wildly different block ranges
+    blocks[2] *= 1e-3
+    blocks[3] = 0.0           # all-zero (patch) block
+    q, scales = quantize_blocks(blocks, "fp8")
+    assert q.itemsize == 1 and scales.dtype == np.float32
+    np.testing.assert_allclose(
+        scales[:3], np.max(np.abs(blocks[:3]), axis=(1, 2)) / FP8_MAX)
+    assert scales[3] == 1.0   # zero block -> scale 1, dequants to exact 0
+    deq = np.asarray(q, np.float32) * scales[:, None, None]
+    np.testing.assert_array_equal(deq[3], 0.0)
+    # the per-block scale makes the error relative per block, not global
+    for k in range(3):
+        assert _rel_err(deq[k], blocks[k]) < 7e-2
+
+
+def test_weight_itemsize():
+    assert [weight_itemsize(d) for d in ("f32", "bf16")] == [4, 2]
+    if FP8_DTYPE is not None:
+        assert weight_itemsize("fp8") == 1
+
+
+# --------------------------------------------------------------------------- #
+# parity: quantized plans vs the f32 plan
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("backend", CPU_BACKENDS)
+@pytest.mark.parametrize("wdt", QUANT_DTYPES)
+def test_quantized_close_to_f32(make_stack, backend, wdt):
+    layers = make_stack()
+    kw = dict(backend=backend, activation="relu", reorder_iters=20)
+    y32 = Engine(**kw).compile(layers)(_x(128))
+    plan = Engine(weight_dtype=wdt, **kw).compile(layers)
+    assert plan.weight_dtype == wdt
+    assert _rel_err(plan(_x(128)), y32) < REL_TOL[wdt]
+
+
+@pytest.mark.parametrize("wdt", QUANT_DTYPES)
+def test_quantized_jnp_interpret_bit_exact(make_stack, wdt):
+    """Both backends dequantize the same stored narrow blocks, so they
+    agree exactly — quantization error is a property of the stored
+    weights, not the backend."""
+    layers = make_stack()
+    x = _x(128)
+    ys = [Engine(backend=b, weight_dtype=wdt, reorder_iters=20)
+          .compile(layers)(x) for b in CPU_BACKENDS]
+    assert float(jnp.max(jnp.abs(ys[0] - ys[1]))) == 0.0
+
+
+@pytest.mark.parametrize("wdt", QUANT_DTYPES)
+def test_gated_quantized_bit_exact(make_stack, wdt):
+    layers = make_stack()
+    x = _x(128)
+    kw = dict(backend="jnp", weight_dtype=wdt, reorder_iters=20)
+    y = Engine(gate=False, **kw).compile(layers)(x)
+    yg = Engine(gate=True, **kw).compile(layers)(x)
+    assert float(jnp.max(jnp.abs(y - yg))) == 0.0
+
+
+@pytest.mark.parametrize("wdt", QUANT_DTYPES)
+def test_safe_twin_reuses_quantized_stream(make_stack, wdt):
+    """Breaker degradation must be output-identical: the twin shares the
+    same quantized schedule arrays, not a re-quantization."""
+    plan = Engine(backend="jnp", gate=True, weight_dtype=wdt,
+                  reorder_iters=20).compile(make_stack())
+    twin = plan.safe_twin()
+    assert twin.weight_dtype == wdt
+    x = _x(128)
+    assert float(jnp.max(jnp.abs(plan(x) - twin(x)))) == 0.0
+
+
+@pytest.mark.parametrize("wdt", QUANT_DTYPES)
+def test_sharded_quantized_matches_unsharded(make_stack, wdt):
+    layers = make_stack()
+    x = _x(128)
+    kw = dict(backend="jnp", weight_dtype=wdt, reorder_iters=20)
+    y = Engine(**kw).compile(layers)(x)
+    splan = Engine(**kw).compile(layers, mesh=Mesh(2, 1))
+    assert splan.weight_dtype == wdt
+    assert float(jnp.max(jnp.abs(splan(x) - y))) == 0.0
+    # shard byte accounting aggregates to the unsharded total
+    uplan = Engine(**kw).compile(layers)
+    assert splan.io.weight_stream_bytes == uplan.io.weight_stream_bytes
+
+
+# --------------------------------------------------------------------------- #
+# byte accounting
+# --------------------------------------------------------------------------- #
+
+def test_io_report_bytes_shrink_with_dtype(make_stack):
+    layers = make_stack()
+    plans = {w: Engine(backend="jnp", weight_dtype=w, reorder_iters=20)
+             .compile(layers)
+             for w in (("f32", "bf16", "fp8") if FP8_DTYPE is not None
+                       else ("f32", "bf16"))}
+    f32 = plans["f32"].io
+    assert f32.weight_dtype == "f32" and f32.scale_bytes_streamed == 0
+    assert f32.weight_bytes_streamed > 0
+    for w, plan in plans.items():
+        io = plan.io
+        # the schedule (and so tile counts + bounds) is dtype-invariant
+        assert io.simulated == f32.simulated
+        assert io.bounds == f32.bounds
+        if w == "f32":
+            continue
+        ratio = f32.weight_stream_bytes / io.weight_stream_bytes
+        assert io.scale_bytes_streamed > 0
+        assert ratio >= {"bf16": 1.8, "fp8": 3.5}[w], (w, ratio)
+
+
+def test_dynamic_report_bytes_per_block(make_stack):
+    block = 32
+    plan = Engine(backend="jnp", gate=True, weight_dtype="bf16",
+                  reorder_iters=20).compile(make_stack(block=block))
+    rep = plan.measure_dynamic(np.asarray(_x(128)))
+    assert rep.weight_dtype == "bf16"
+    assert rep.bytes_per_block == block * block * 2 + 4   # blocks + scale
+    assert rep.dynamic_weight_bytes == rep.dynamic_total * rep.bytes_per_block
+    assert rep.static_weight_bytes >= rep.dynamic_weight_bytes
+
+
+def test_io_report_dict_backward_compat():
+    """A manifest dict persisted BEFORE byte accounting existed (no
+    weight_dtype / byte keys) must still load, with zero-byte defaults."""
+    old = {
+        "simulated": {"reads": 10, "writes": 4},
+        "bounds": {"reads_lo": 8, "reads_hi": 12,
+                   "writes_lo": 4, "writes_hi": 6},
+        "M_tiles": 3,
+        "policy": "belady",
+        "layered_reads": 11,
+        "layered_writes": 5,
+        "hidden_tiles_kept": 2,
+        "hidden_bytes_kept_per_row": 1024,
+        "dynamic": {
+            "batch": 4,
+            "per_layer_static": [6, 4],
+            "per_layer_dynamic": [5, 3],
+            "per_layer_in_tiles": [4, 4],
+            "per_layer_live_tiles": [3, 3],
+            "per_layer_row_occupancy": [0.5, 0.75],
+            "per_layer_hist": [[1, 0, 1, 1, 1], [1, 0, 0, 1, 2]],
+        },
+    }
+    io = IOReport.from_dict(old)
+    assert io.weight_dtype == "f32"
+    assert io.weight_stream_bytes == 0
+    assert io.dynamic.bytes_per_block == 0
+    assert io.dynamic.weight_dtype == "f32"
+    # and the upgraded dict round-trips exactly
+    assert IOReport.from_dict(io.to_dict()) == io
+
+
+def test_quantized_io_report_roundtrip(make_stack):
+    plan = Engine(backend="jnp", gate=True, weight_dtype="bf16",
+                  reorder_iters=20).compile(make_stack())
+    plan.measure_dynamic(np.asarray(_x(128)))
+    assert plan.io.dynamic is not None
+    restored = IOReport.from_dict(plan.io.to_dict())
+    assert restored == plan.io
+    assert restored.weight_dtype == "bf16"
+
+
+# --------------------------------------------------------------------------- #
+# persistence: plan store + cache key
+# --------------------------------------------------------------------------- #
+
+def test_plan_cache_key_separates_weight_dtypes(make_stack):
+    layers = make_stack()
+    dtypes = ("f32", "bf16", "fp8") if FP8_DTYPE is not None \
+        else ("f32", "bf16")
+    keys = {w: plan_cache_key(Engine(backend="jnp", weight_dtype=w), layers)
+            for w in dtypes}
+    assert len(set(keys.values())) == len(dtypes)
+    # aliases normalize before keying: 'bfloat16' hits the 'bf16' entry
+    assert plan_cache_key(
+        Engine(backend="jnp", weight_dtype="bfloat16"), layers) \
+        == keys["bf16"]
+    # default f32 does not enter the dict: old store entries stay warm
+    assert keys["f32"] == plan_cache_key(Engine(backend="jnp"), layers)
+
+
+@pytest.mark.parametrize("wdt", QUANT_DTYPES)
+def test_plan_store_warm_start_quantized(tmp_path, make_stack, wdt):
+    layers = make_stack()
+    eng = Engine(backend="jnp", weight_dtype=wdt, reorder_iters=20)
+    store = PlanStore(tmp_path)
+    cold, hit0 = store.get_or_compile(eng, layers)
+    assert not hit0
+    warm, hit1 = store.get_or_compile(eng, layers)
+    assert hit1
+    # byte-identical quantized stream: same narrow blocks, same scales
+    assert np.asarray(warm.flat.blocks).dtype == \
+        np.asarray(cold.flat.blocks).dtype
+    assert np.asarray(warm.flat.blocks).tobytes() == \
+        np.asarray(cold.flat.blocks).tobytes()
+    assert np.asarray(warm.flat.scales).tobytes() == \
+        np.asarray(cold.flat.scales).tobytes()
+    x = _x(128)
+    assert float(jnp.max(jnp.abs(warm(x) - cold(x)))) == 0.0
+    # an f32 engine over the same net must miss (never alias dtypes)
+    _, hit_f32 = store.get_or_compile(
+        dc.replace(eng, weight_dtype="f32"), layers)
+    assert not hit_f32
+
+
+# --------------------------------------------------------------------------- #
+# guard: fp8 unavailable
+# --------------------------------------------------------------------------- #
+
+def test_fp8_guard_when_ml_dtypes_lacks_float8(make_stack, monkeypatch):
+    monkeypatch.setattr(ops, "FP8_DTYPE", None)
+    with pytest.raises(ValueError, match="float8_e4m3fn"):
+        resolve_weight_dtype("fp8")
+    with pytest.raises(ValueError, match="float8_e4m3fn"):
+        Engine(backend="jnp", weight_dtype="fp8").compile(make_stack())
+    # bf16 and f32 stay unaffected by the missing fp8 dtype
+    assert resolve_weight_dtype("bf16") == "bf16"
