@@ -20,6 +20,17 @@ engine:
     thread) and through the background scheduler thread with 4 concurrent
     submitters.  Async must not lose throughput, and typically wins by
     overlapping submission with batch execution;
+  * **pipelined execution** — an open-loop (fixed-RPS) request sweep
+    through the staged pipeline (formation -> per-bucket dispatch lanes ->
+    executor pool) with 1 vs N workers.  Device time is SIMULATED: every
+    batch call runs the real plan (outputs stay bit-identical and are
+    checked against single-row references) and then sleeps out a fixed
+    ``--sim-device-ms`` budget — modelling the paper's regime, where batch
+    latency is dominated by I/O-bound accelerator streaming while the host
+    sits idle.  The sleep releases the GIL, so worker overlap is real even
+    on a single-core CI host; with N workers, different-bucket batches
+    overlap and the saturated throughput must reach >= 1.3x the 1-worker
+    pipeline (p99 latency recorded for both);
   * **tracer overhead** — the same step-driven stream with request tracing
     disabled and enabled.  A disabled tracer is asserted within noise of
     serving with no tracer at all (the hot path pays one attribute read per
@@ -74,6 +85,36 @@ def mixed_trace(rng, n_batches, max_batch):
     return [int(rng.choice(sizes, p=probs)) for _ in range(n_batches)]
 
 
+class SimDevicePlans:
+    """A ``BucketedPlanSet`` whose batch calls take a fixed simulated
+    device time.
+
+    Every call runs the REAL underlying plan first (outputs stay
+    bit-identical to the unwrapped plan set), then sleeps out the
+    remainder of ``sim_s``.  ``time.sleep`` releases the GIL, so this
+    models the paper's target regime — batch latency dominated by
+    I/O-bound accelerator streaming while the host is idle — and lets
+    executor-pool overlap show up even on a single-core host, where real
+    host-side compute could never overlap with itself.  Everything else
+    (bucket routing, dtype, warmup, ...) delegates to the wrapped set.
+    """
+
+    def __init__(self, base, sim_s: float):
+        self._base = base
+        self._sim_s = sim_s
+
+    def __call__(self, x):
+        t0 = time.perf_counter()
+        y = self._base(x)
+        pad = self._sim_s - (time.perf_counter() - t0)
+        if pad > 0:
+            time.sleep(pad)
+        return y
+
+    def __getattr__(self, name):
+        return getattr(self._base, name)
+
+
 def time_trace(run, trace, xs, iters_warm=2):
     """Per-batch wall latencies of ``run(x_n)`` over the trace sizes."""
     for n in sorted(set(trace)):
@@ -106,6 +147,20 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="MODELxDATA",
                     help="benchmark through a sharded execution plan "
                          "(e.g. 4x2); default unsharded")
+    ap.add_argument("--sim-device-ms", type=float, default=25.0,
+                    help="simulated per-batch device time for the pipeline "
+                         "sweep (the real plan still runs; the call sleeps "
+                         "out the remainder)")
+    ap.add_argument("--pipeline-requests", type=int, default=240,
+                    help="requests per pipeline sweep point")
+    ap.add_argument("--pipeline-rates", type=float, nargs="+",
+                    default=[150.0, 300.0, 600.0],
+                    help="open-loop offered rates (req/s) for the pipeline "
+                         "sweep; the >=1.3x assertion applies at the "
+                         "highest (saturating) rate")
+    ap.add_argument("--pipeline-workers", type=int, default=4,
+                    help="executor-pool size compared against 1 worker in "
+                         "the pipeline sweep")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -244,6 +299,105 @@ def main():
     assert async_rps >= 0.9 * step_rps, \
         "async serving should not lose throughput to the step-driven loop"
 
+    # ---- pipelined execution: open-loop RPS sweep, 1 vs N workers ------ #
+    # device time is simulated (see SimDevicePlans): the real plan runs,
+    # the call then sleeps out --sim-device-ms.  That is the paper's
+    # regime — batch latency dominated by I/O-bound weight streaming on
+    # the accelerator while the host idles — and it makes the sweep
+    # deterministic and host-independent.  1-worker capacity is one
+    # max-bucket batch per sim tick; N workers overlap different-bucket
+    # batches (the spill policy forms smaller-bucket batches while the
+    # preferred lane is busy), so saturated throughput must scale.
+    sim_s = args.sim_device_ms / 1e3
+    n_pipe = args.pipeline_requests
+    # a dedicated small-max-batch plan set: worker overlap comes from the
+    # SPILL lanes (buckets below the preferred one), whose combined rows
+    # are 1+2+4 = 7/8 of the max bucket at max_batch=8 — so N workers can
+    # approach ~1.9x one worker.  At max_batch=32 the smaller buckets sum
+    # to less than one full lane (31/32) and the ceiling collapses to
+    # ~1.25x: the sweep would measure lane arithmetic, not the pipeline
+    pipe_max = min(8, args.max_batch)
+    pipe_plans = BucketedPlanSet.compile(layers, engine=make_engine(args),
+                                         max_batch=pipe_max,
+                                         plan_store=store, mesh=mesh)
+    pipe_plans.warmup()
+    pool_x = [rng.standard_normal(args.sizes[0]).astype(np.float32)
+              for _ in range(16)]
+    # single-row references through the UNwrapped plans: the pipeline's
+    # outputs must match bit-for-bit regardless of worker count, bucket
+    # routing, or batch composition
+    expected = [np.asarray(pipe_plans(x[None, :]))[0] for x in pool_x]
+
+    def run_pipeline(workers: int, rate) -> dict:
+        """One sweep point: open-loop arrivals at ``rate`` req/s, or a
+        single up-front burst (``rate=None``) that keeps the queue
+        saturated — the capacity-bound regime the scaling assertion
+        uses, free of arrival-pacing jitter."""
+        server = SparseServer(SimDevicePlans(pipe_plans, sim_s),
+                              slo_ms=args.slo_ms, max_queue=n_pipe,
+                              executor_workers=workers)
+        server.start()
+        rids = []
+        t0 = time.perf_counter()
+        for i in range(n_pipe):
+            if rate is not None:                # open-loop arrivals
+                target = t0 + i / rate
+                now = time.perf_counter()
+                if target > now:
+                    time.sleep(target - now)
+            rid = server.submit(pool_x[i % len(pool_x)])
+            assert rid is not None, "pipeline sweep must not reject"
+            rids.append(rid)
+        outs = [server.wait(rid, timeout=120.0) for rid in rids]
+        dt = time.perf_counter() - t0
+        snap = server.snapshot()                # pool stats live until
+        server.shutdown(drain=True)             # shutdown releases them
+        assert server.metrics.served == n_pipe, "zero lost requests"
+        for i, o in enumerate(outs):
+            assert o is not None and np.array_equal(
+                np.asarray(o), expected[i % len(pool_x)]), \
+                f"request {i}: pipeline output != single-row reference"
+        per_worker = {w: s["batches"] for w, s in
+                      snap.get("pool", {}).get("per_worker", {}).items()}
+        return {
+            "workers": workers,
+            "offered_rps": rate,
+            "effective_rps": n_pipe / dt,
+            "latency_p99_ms": snap["latency_ms"]["p99"],
+            "dispatch_wait_p99_ms": snap["dispatch_wait_ms"]["p99"],
+            "batches": snap["batches"],
+            "per_worker_batches": per_worker,
+            "bit_identical": True,
+        }
+
+    sweep = []
+    for rate in sorted(args.pipeline_rates) + [None]:
+        for workers in (1, args.pipeline_workers):
+            r = run_pipeline(workers, rate)
+            sweep.append(r)
+            offered = (f"{rate:5.0f} req/s" if rate is not None
+                       else "saturated")
+            print(f"  pipeline offered={offered} workers={workers}: "
+                  f"{r['effective_rps']:6.0f} req/s effective, "
+                  f"p99 {r['latency_p99_ms']:8.1f} ms, "
+                  f"batches={r['per_worker_batches']}")
+    # the scaling assertion runs on the SATURATED (burst) points: both
+    # configs are capacity-bound there, so the ratio measures lane
+    # overlap, not arrival-pacing jitter
+    pipe1 = next(r for r in sweep
+                 if r["offered_rps"] is None and r["workers"] == 1)
+    pipeN = next(r for r in sweep
+                 if r["offered_rps"] is None
+                 and r["workers"] == args.pipeline_workers)
+    pipe_speedup = pipeN["effective_rps"] / pipe1["effective_rps"]
+    print(f"  pipeline speedup at saturation: "
+          f"{pipe_speedup:.2f}x ({args.pipeline_workers} vs 1 workers, "
+          f"sim device {args.sim_device_ms:.0f} ms/batch, "
+          f"outputs bit-identical)")
+    assert pipe_speedup >= 1.3, \
+        (f"{args.pipeline_workers} executor workers must reach >= 1.3x the "
+         f"1-worker pipeline at saturation (got {pipe_speedup:.2f}x)")
+
     # ---- tracer overhead: disabled vs enabled on the hot path ---------- #
     # a DISABLED tracer must cost one attribute read per instrumentation
     # site — indistinguishable from no tracer at all (within measurement
@@ -295,6 +449,15 @@ def main():
             "async_rps": async_rps,
             "async_vs_step": async_rps / step_rps,
             "submit_threads": 4,
+        },
+        "serve_pipeline": {
+            "sim_device_ms": args.sim_device_ms,
+            "max_batch": pipe_max,
+            "requests_per_point": n_pipe,
+            "workers_compared": [1, args.pipeline_workers],
+            "sweep": sweep,
+            "saturated_speedup": pipe_speedup,
+            "bit_identical_outputs": True,
         },
         "tracer": {
             "off_rps": tracer_off_rps,

@@ -13,16 +13,32 @@ arrive in bursts; the SLO scheduler forms batches wait-or-fire and routes
 each through the smallest bucket that fits, so tail batches don't pay
 full-batch latency.  The plan's exact simulated I/O is reported next to the
 Theorem-1 bounds alongside the serving metrics.
+
+``--http`` serves the same traffic over the wire: the process opens the
+stdlib JSON front door (``HttpFrontDoor``) and the client threads become
+real HTTP clients (``urllib`` — no new dependencies) POSTing to
+``/v1/infer``; a 429 (queue full) backs off and retries.  Combine with
+``--workers N`` to run the staged pipeline behind the front door:
+
+    PYTHONPATH=src python examples/serve_sparse.py --http --workers 2
 """
 
 import argparse
+import json
 import threading
 import time
+import urllib.error
+import urllib.request
 
 import numpy as np
 
 from repro.engine import Engine
-from repro.serving import BucketedPlanSet, PlanStore, SparseServer
+from repro.serving import (
+    BucketedPlanSet,
+    HttpFrontDoor,
+    PlanStore,
+    SparseServer,
+)
 from repro.sparse import prune_dense_stack
 
 
@@ -38,6 +54,15 @@ def main():
                          "with this many concurrent client threads "
                          "(Future-style wait per request); 0 = the "
                          "deterministic step-driven loop")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP: open the JSON front door on an "
+                         "ephemeral port and drive the clients through "
+                         "urllib POSTs to /v1/infer (implies async mode; "
+                         "uses --threads connections, default 4)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="> 0: staged pipeline — the scheduler only forms "
+                         "batches onto per-bucket dispatch lanes and this "
+                         "many executor workers drain them concurrently")
     ap.add_argument("--plan-store", default=None,
                     help="persistent plan cache directory; rerun with the "
                          "same dir for a warm start with zero annealing")
@@ -69,9 +94,65 @@ def main():
     # bursty request traffic — the wait-or-fire scheduler forms batches and
     # the bucket router serves each through the smallest bucket that fits
     server = SparseServer(plans, slo_ms=args.slo_ms, engine=engine,
-                          plan_store=store)
+                          plan_store=store, executor_workers=args.workers)
     rids = []
-    if args.threads > 0:
+    if args.http:
+        # over-the-wire mode: same traffic, but each client thread is a
+        # real HTTP connection into the front door; admission control
+        # arrives as status codes (429 = queue full -> back off + retry)
+        server.start()
+        front = HttpFrontDoor(server, port=0).start()
+        nclients = args.threads or 4
+        print(f"http front door: {front.url} ({nclients} client threads"
+              + (f", {args.workers} executor workers" if args.workers
+                 else "") + ")")
+        codes = {}
+        samples = []
+        lock = threading.Lock()
+
+        def http_client(n, seed):
+            crng = np.random.default_rng(seed)
+            done = 0
+            while done < n:
+                x = crng.standard_normal(1024).astype(np.float32)
+                req = urllib.request.Request(
+                    front.url + "/v1/infer",
+                    data=json.dumps({"x": x.tolist()}).encode("utf-8"),
+                    headers={"Content-Type": "application/json"},
+                    method="POST")
+                retry_after = None
+                try:
+                    with urllib.request.urlopen(req, timeout=60) as resp:
+                        code, payload = resp.status, json.load(resp)
+                except urllib.error.HTTPError as e:
+                    code = e.code
+                    retry_after = e.headers.get("Retry-After")
+                    payload = {}
+                    e.read()
+                with lock:
+                    codes[code] = codes.get(code, 0) + 1
+                if code == 429:          # queue full: back off, same request
+                    time.sleep(float(retry_after or 0.05))
+                    continue
+                if code == 200:
+                    with lock:
+                        samples.append(payload["y"])
+                done += 1
+
+        per = args.requests // nclients
+        ts = [threading.Thread(
+                  target=http_client,
+                  args=(per + (i < args.requests % nclients), 100 + i))
+              for i in range(nclients)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        front.stop()
+        server.shutdown()
+        print(f"http status codes: {dict(sorted(codes.items()))}")
+        y = np.asarray(samples[-1], np.float32) if samples else None
+    elif args.threads > 0:
         # async mode: the scheduler thread forms batches while concurrent
         # clients submit and block on their own results (Future-style)
         server.start()

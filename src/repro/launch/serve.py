@@ -23,6 +23,15 @@ variants from one process via a shared-scheduler ``ModelRouter``:
     PYTHONPATH=src python -m repro.launch.serve --sparse-ffnn --async \
         --models 2 --requests 64
 
+``--workers N`` runs the async scheduler as a staged pipeline (admission ->
+batch formation -> per-bucket dispatch lanes -> an N-worker execution pool)
+so different-bucket batches overlap; ``--http-port P`` (implies ``--async``)
+opens the stdlib JSON front door (``POST /v1/infer``) and drives the request
+loop through real HTTP clients, with queue-full admission surfacing as 429:
+
+    PYTHONPATH=src python -m repro.launch.serve --sparse-ffnn \
+        --http-port 0 --workers 2 --requests 64
+
 Observability: ``--metrics-port P`` exposes a Prometheus text endpoint
 (``/metrics``, port 0 = ephemeral) with the full serving snapshot — SLO
 metrics, resilience state, and the per-bucket static-vs-dynamic I/O gauges
@@ -64,6 +73,65 @@ def _make_ffnn_layers(sizes, density, block, seed=0):
                              block_m=block, block_n=block)
 
 
+def _drive_http(front, args, sizes, names, rng, stop) -> dict:
+    """Drive the request load through the HTTP front door with a small
+    pool of real client connections (stdlib urllib).  Returns a status
+    -> count map; a 429 (queue full) backs off per ``Retry-After`` and
+    retries the same request, so admission control is load-shaping, not
+    request loss."""
+    import json
+    import threading
+    import urllib.error
+    import urllib.request
+    from collections import Counter
+
+    work = deque((names[k % len(names)] if names else None,
+                  rng.standard_normal(sizes[0]).astype(np.float32))
+                 for k in range(args.requests))
+    counts: Counter = Counter()
+    lock = threading.Lock()
+
+    def client() -> None:
+        while not stop["flag"]:
+            with lock:
+                if not work:
+                    return
+                name, x = work.popleft()
+            body = {"x": x.tolist()}
+            if name is not None:
+                body["model"] = name
+            req = urllib.request.Request(
+                front.url + "/v1/infer",
+                data=json.dumps(body).encode("utf-8"),
+                headers={"Content-Type": "application/json"},
+                method="POST")
+            retry_after = None
+            try:
+                with urllib.request.urlopen(req, timeout=60) as resp:
+                    code = resp.status
+                    resp.read()
+            except urllib.error.HTTPError as e:
+                code = e.code
+                retry_after = e.headers.get("Retry-After")
+                e.read()
+            except OSError:
+                code = -1
+            with lock:
+                counts[code] += 1
+            if code == 429 and not stop["flag"]:
+                time.sleep(float(retry_after or 0.05))
+                with lock:
+                    work.appendleft((name, x))
+
+    threads = [threading.Thread(target=client, name=f"http-client-{i}")
+               for i in range(args.http_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return dict(counts)
+
+
 def serve_sparse_ffnn(args) -> None:
     """Serve the paper's sparse-FFNN workload through the serving runtime.
 
@@ -84,11 +152,16 @@ def serve_sparse_ffnn(args) -> None:
     from repro.serving import (
         BucketedPlanSet,
         CircuitBreaker,
+        HttpFrontDoor,
         ModelRouter,
         PlanStore,
         RetryPolicy,
         SparseServer,
     )
+
+    if args.http_port is not None:
+        # the front door needs a live scheduler behind it
+        args.async_mode = True
 
     rng = np.random.default_rng(0)
     sizes = args.ffnn_sizes
@@ -135,7 +208,8 @@ def serve_sparse_ffnn(args) -> None:
             breaker=(lambda: CircuitBreaker(
                 threshold=args.breaker,
                 cooldown_s=args.breaker_cooldown_ms / 1e3))
-            if want_breaker else None)
+            if want_breaker else None,
+            executor_workers=args.workers)
         names = list(router.servers)
         for name, srv in router.servers.items():
             print(f"[{name}] {srv.plans.describe()}")
@@ -160,7 +234,8 @@ def serve_sparse_ffnn(args) -> None:
             tracer=tracer, measure_dynamic_every=measure_every,
             breaker=CircuitBreaker(threshold=args.breaker,
                                    cooldown_s=args.breaker_cooldown_ms / 1e3)
-            if want_breaker else None)
+            if want_breaker else None,
+            executor_workers=args.workers)
 
     # graceful drain on SIGTERM/SIGINT: stop submitting, serve everything
     # queued, report, exit — no request accepted before the signal is lost
@@ -180,47 +255,84 @@ def serve_sparse_ffnn(args) -> None:
         print(f"metrics endpoint: {metrics_srv.url}")
     if args.async_mode:
         runtime.start()
-        print("async scheduler thread started")
+        print("async scheduler thread started"
+              + (f" (pipeline: {args.workers} executor workers)"
+                 if args.workers else ""))
+    front = None
+    if args.http_port is not None:
+        front = HttpFrontDoor(runtime, port=args.http_port).start()
+        print(f"http front door: {front.url}  "
+              f"(POST /v1/infer, GET /v1/result/<rid>)")
 
     rids = []   # (model or None, rid)
-    pending = args.requests
-    # bursty arrivals: submit a random clump, let the wait-or-fire policy
-    # form batches, repeat — so the bucket router sees mixed batch sizes
-    while pending and not stop["flag"]:
-        burst = int(rng.integers(1, args.batch + 1))
-        for _ in range(min(burst, pending)):
-            x = rng.standard_normal(sizes[0]).astype(np.float32)
-            if multi:
-                name = names[len(rids) % len(names)]
-                rid = router.submit(name, x)
-            else:
-                name, rid = None, server.submit(x)
-            if rid is not None:
-                rids.append((name, rid))
-            pending -= 1
-            if not pending:
-                break
-        if not args.async_mode:
-            runtime.poll()
+    http_codes = {}
+    if front is not None:
+        http_codes = _drive_http(front, args, sizes,
+                                 names if multi else None, rng, stop)
+        print(f"http clients done: {dict(sorted(http_codes.items()))} "
+              f"over {args.http_clients} connections")
+    else:
+        pending = args.requests
+        # bursty arrivals: submit a random clump, let the wait-or-fire
+        # policy form batches, repeat — so the bucket router sees mixed
+        # batch sizes
+        while pending and not stop["flag"]:
+            burst = int(rng.integers(1, args.batch + 1))
+            for _ in range(min(burst, pending)):
+                x = rng.standard_normal(sizes[0]).astype(np.float32)
+                if multi:
+                    name = names[len(rids) % len(names)]
+                    rid = router.submit(name, x)
+                else:
+                    name, rid = None, server.submit(x)
+                if rid is not None:
+                    rids.append((name, rid))
+                pending -= 1
+                if not pending:
+                    break
+            if not args.async_mode:
+                runtime.poll()
     if stop["flag"]:
         print("signal received: draining queued requests ...")
+    # the pool snapshot lives until shutdown() releases the pipeline refs,
+    # so sample it here — but only after the in-flight work finishes, or
+    # the per-worker batch counts would reflect a near-empty pipeline
+    if args.workers and args.async_mode and front is None:
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline and any(
+                (router.servers[name] if multi else server).status(rid)
+                == "pending" for name, rid in rids):
+            time.sleep(0.005)
+    pool_snap = (runtime.snapshot().get("pool")
+                 if args.workers and args.async_mode else None)
+    if front is not None:
+        front.stop()
     if args.async_mode:
         runtime.shutdown(drain=True)
     else:
         runtime.drain()
+    if pool_snap is not None:
+        per = pool_snap.get("per_worker", {})
+        util = {w: round(s.get("utilization", 0.0), 3)
+                for w, s in sorted(per.items())}
+        print(f"executor pool: {pool_snap.get('workers')} workers, "
+              f"batches={ {w: s.get('batches') for w, s in sorted(per.items())} } "
+              f"utilization={util}")
 
     # "served" comes from the metrics: collecting at the very end can see
     # fewer results than were served once capacity eviction kicks in (the
     # oldest uncollected results are dropped by design under heavy traffic)
     if multi:
-        collected = sum(router.result(name, rid) is not None
-                        for name, rid in rids)
+        collected = (http_codes.get(200, 0) if front is not None else
+                     sum(router.result(name, rid) is not None
+                         for name, rid in rids))
         served = router.metrics_snapshot()["total"]["served"]
         print(f"served {served} requests across {args.models} models "
               f"({collected} collected)")
         print(router.summary())
     else:
-        collected = sum(server.result(rid) is not None for _, rid in rids)
+        collected = (http_codes.get(200, 0) if front is not None else
+                     sum(server.result(rid) is not None for _, rid in rids))
         print(f"served {server.metrics.served} sparse-FFNN requests "
               f"({collected} collected) — {server.metrics.summary()}")
         if want_breaker or retry is not None:
@@ -331,6 +443,21 @@ def main():
     ap.add_argument("--retries", type=int, default=0,
                     help="bounded per-batch retry attempts (with "
                          "exponential backoff) before a batch fails")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="execution-stage worker pool size: the async "
+                         "scheduler becomes a staged pipeline (formation "
+                         "-> per-bucket dispatch lanes -> N workers) so "
+                         "different-bucket batches overlap; 0 keeps the "
+                         "single-threaded scheduler (sparse-ffnn only)")
+    ap.add_argument("--http-port", type=int, default=None, metavar="P",
+                    help="open the JSON front door on this port (0 = "
+                         "ephemeral) and drive the request load through "
+                         "real HTTP clients; queue-full admission becomes "
+                         "429 + Retry-After (implies --async; sparse-ffnn "
+                         "only)")
+    ap.add_argument("--http-clients", type=int, default=4,
+                    help="concurrent HTTP client connections used by "
+                         "--http-port to drive the load")
     ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
                     help="expose a Prometheus text endpoint (/metrics) on "
                          "this port with the live serving snapshot: SLO "

@@ -105,6 +105,16 @@ def _walk(out: _Samples, prefix: str, node: dict,
             for bin_name, n in v.items():
                 out.add(name, {**labels, "bin": str(bin_name)}, n)
             continue
+        if key == "per_worker" and isinstance(v, dict):
+            # executor-pool gauges: {"0": {"utilization": ...}, ...} →
+            # worker= labelled samples under the parent prefix
+            for worker, wv in v.items():
+                wlabels = {**labels, "worker": str(worker)}
+                if isinstance(wv, dict):
+                    _walk(out, f"{prefix}_worker", wv, wlabels)
+                elif isinstance(wv, (int, float)):
+                    out.add(f"{prefix}_worker", wlabels, wv)
+            continue
         if str(key).endswith("_by_dtype") and isinstance(v, dict):
             # {"bf16": bytes, "f32": bytes} → base metric with dtype= label
             base = f"{prefix}_{_sanitize(str(key)[:-len('_by_dtype')])}"

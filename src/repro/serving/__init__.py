@@ -18,12 +18,23 @@ The production-shaped half of the paper's compile-once/run-many split:
 
 Step-driven mode (no ``start()``: drive ``poll()``/``drain()`` yourself,
 collect with ``result(rid)``) is the deterministic test path; ``ModelRouter``
-serves several named plan sets through one shared scheduler.  See
+serves several named plan sets through one shared scheduler.  With
+``executor_workers=N`` the async mode runs as a staged pipeline — HTTP
+ingress (:class:`HttpFrontDoor`) -> batch formation -> per-bucket dispatch
+lanes (:class:`DispatchQueues`) -> a bounded :class:`ExecutorPool` — so
+different-bucket batches overlap while each lane stays FIFO.  See
 ``docs/serving.md`` for the bucketing policy, the SLO scheduler, the
-threading model, swap semantics, and the plan-store layout.
+threading model, the pipeline architecture, swap semantics, and the
+plan-store layout.
 """
 
-from .bucketing import BucketedPlanSet, bucket_sizes
+from .bucketing import (
+    BucketedPlanSet,
+    DispatchQueues,
+    FormedBatch,
+    bucket_sizes,
+)
+from .http import HttpFrontDoor
 from .metrics import ServingMetrics, percentile
 from .plancache import PlanStore, layers_fingerprint, plan_cache_key
 from .resilience import (
@@ -34,13 +45,23 @@ from .resilience import (
     RetryPolicy,
     Watchdog,
 )
-from .server import ModelRouter, Request, SparseServer
+from .server import (
+    ExecutorPool,
+    ModelRouter,
+    Request,
+    SparseServer,
+    SwapHandle,
+)
 
 __all__ = [
     "BatchTimeoutError",
     "BucketedPlanSet",
     "CircuitBreaker",
+    "DispatchQueues",
+    "ExecutorPool",
     "FaultInjector",
+    "FormedBatch",
+    "HttpFrontDoor",
     "ModelRouter",
     "OutputGuardError",
     "PlanStore",
@@ -48,6 +69,7 @@ __all__ = [
     "RetryPolicy",
     "ServingMetrics",
     "SparseServer",
+    "SwapHandle",
     "Watchdog",
     "bucket_sizes",
     "layers_fingerprint",

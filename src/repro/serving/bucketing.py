@@ -20,9 +20,11 @@ reference — the only thing compiled per bucket is the jitted dispatch.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -231,3 +233,209 @@ class BucketedPlanSet:
             extra = " [+safe twin]"
         return (f"BucketedPlanSet buckets={list(self.buckets)}{extra} "
                 f"({src}); " + self.base.describe())
+
+
+# --------------------------------------------------------------------------- #
+# Pipeline plumbing: formed batches and per-bucket dispatch lanes (PR 10).
+#
+# The serving pipeline separates batch FORMATION (the scheduler thread's
+# wait-or-fire policy) from batch EXECUTION (a bounded worker pool).  The
+# hand-off unit is a ``FormedBatch``: the popped requests plus a snapshot of
+# the ``BucketedPlanSet`` they were formed against — executing against the
+# snapshot (not ``server.plans``) is what keeps ``swap()`` atomic when
+# batches overlap: a swap installed mid-flight never splits one batch across
+# two weight sets.
+#
+# ``DispatchQueues`` holds one bounded FIFO *lane* per (server, bucket).  The
+# invariant that buys determinism is **at most one in-flight batch per
+# lane**: a lane with an executing batch hands out nothing, so same-bucket
+# batches complete in formation order no matter how many workers drain the
+# queues, while different buckets (distinct lanes) overlap freely.
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class FormedBatch:
+    """A batch the formation stage has committed: requests popped from the
+    server queue, bound to the plan-set snapshot they will execute on."""
+
+    reqs: List[object]
+    plans: BucketedPlanSet
+    bucket: int
+    t_formed: float
+    server: Optional[object] = None   # owning SparseServer (lane key + stats)
+    gen: int = 0                      # server plan generation at formation
+                                      # (fences breaker feedback from stale
+                                      # in-flight batches — see server.py)
+
+    @property
+    def lane(self) -> Tuple[int, int]:
+        return (id(self.server), self.bucket)
+
+
+class DispatchQueues:
+    """Per-(server, bucket) dispatch lanes between formation and execution.
+
+    * ``put`` appends a formed batch to its lane (bounded by ``per_lane``;
+      the formation stage checks ``can_accept`` first, so a full lane is
+      backpressure, not an error).
+    * ``take`` blocks for a *ready* lane — non-empty and with no batch in
+      flight — and returns the globally oldest ready batch, marking the
+      lane busy.  One-in-flight-per-lane is what keeps same-bucket batches
+      FIFO under a multi-worker pool.
+    * ``complete`` retires the in-flight batch, freeing the lane and waking
+      both workers (a queued successor became ready) and any drain waiter.
+
+    One instance may be shared by several servers (``ModelRouter``): lanes
+    are keyed by ``(id(server), bucket)``, so models never share a lane but
+    do share the worker pool draining them.
+    """
+
+    def __init__(self, per_lane: int = 2):
+        if per_lane < 1:
+            raise ValueError(f"per_lane must be >= 1, got {per_lane}")
+        self.per_lane = per_lane
+        self._cv = threading.Condition(threading.Lock())
+        self._lanes: Dict[Tuple[int, int], Deque[FormedBatch]] = {}
+        self._busy: Dict[Tuple[int, int], FormedBatch] = {}
+        self._closed = False
+
+    # ---- formation side ------------------------------------------------- #
+    def can_accept(self, lane: Tuple[int, int]) -> bool:
+        with self._cv:
+            q = self._lanes.get(lane)
+            return not self._closed and (q is None or len(q) < self.per_lane)
+
+    def lane_free(self, lane: Tuple[int, int]) -> bool:
+        """True when the lane has nothing queued and nothing in flight — a
+        batch put there now is picked up immediately by an idle worker."""
+        with self._cv:
+            q = self._lanes.get(lane)
+            return not q and lane not in self._busy
+
+    def put(self, batch: FormedBatch) -> bool:
+        """Enqueue on the batch's lane; False when closed or the lane is
+        full (the caller keeps the requests queued and retries later)."""
+        with self._cv:
+            if self._closed:
+                return False
+            q = self._lanes.get(batch.lane)
+            if q is None:
+                q = self._lanes[batch.lane] = collections.deque()
+            if len(q) >= self.per_lane:
+                return False
+            q.append(batch)
+            self._cv.notify_all()
+            return True
+
+    # ---- execution side ------------------------------------------------- #
+    def _ready_locked(self) -> Optional[FormedBatch]:
+        best = None
+        for lane, q in self._lanes.items():
+            if q and lane not in self._busy:
+                if best is None or q[0].t_formed < best[0].t_formed:
+                    best = (q[0], lane)
+        if best is None:
+            return None
+        batch, lane = best
+        self._lanes[lane].popleft()
+        self._busy[lane] = batch
+        return batch
+
+    def take(self, timeout: Optional[float] = None) -> Optional[FormedBatch]:
+        """Oldest ready batch, or None on timeout / close-and-empty."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                batch = self._ready_locked()
+                if batch is not None:
+                    return batch
+                if self._closed and not any(self._lanes.values()):
+                    return None
+                if deadline is None:
+                    self._cv.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._cv.wait(remaining)
+
+    def complete(self, batch: FormedBatch) -> None:
+        with self._cv:
+            if self._busy.get(batch.lane) is batch:
+                del self._busy[batch.lane]
+            self._cv.notify_all()
+
+    # ---- introspection / drain ------------------------------------------ #
+    def ready_count(self) -> int:
+        with self._cv:
+            return sum(1 for lane, q in self._lanes.items()
+                       if q and lane not in self._busy)
+
+    def depth(self) -> int:
+        with self._cv:
+            return sum(len(q) for q in self._lanes.values())
+
+    def in_flight(self) -> int:
+        with self._cv:
+            return len(self._busy)
+
+    def pending(self, server: Optional[object] = None) -> int:
+        """Queued + in-flight batches, optionally for one server only."""
+        with self._cv:
+            if server is None:
+                return (sum(len(q) for q in self._lanes.values())
+                        + len(self._busy))
+            sid = id(server)
+            n = sum(len(q) for lane, q in self._lanes.items()
+                    if lane[0] == sid)
+            n += sum(1 for lane in self._busy if lane[0] == sid)
+            return n
+
+    def wait_idle(self, server: Optional[object] = None,
+                  timeout: Optional[float] = None) -> bool:
+        """Block until ``pending(server) == 0``; False on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while True:
+                if server is None:
+                    if (not any(self._lanes.values())
+                            and not self._busy):
+                        return True
+                else:
+                    sid = id(server)
+                    if (not any(q for lane, q in self._lanes.items()
+                                if lane[0] == sid)
+                            and not any(lane[0] == sid
+                                        for lane in self._busy)):
+                        return True
+                if deadline is None:
+                    self._cv.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                    self._cv.wait(remaining)
+
+    def drain_batches(self, server: Optional[object] = None
+                      ) -> List[FormedBatch]:
+        """Pop every queued (not in-flight) batch — the shutdown path uses
+        this to run leftovers inline after the pool stops."""
+        out: List[FormedBatch] = []
+        with self._cv:
+            for lane in list(self._lanes):
+                if server is not None and lane[0] != id(server):
+                    continue
+                q = self._lanes[lane]
+                while q:
+                    out.append(q.popleft())
+            self._cv.notify_all()
+        out.sort(key=lambda b: b.t_formed)
+        return out
+
+    def close(self) -> None:
+        """Stop accepting new batches; blocked ``take`` calls return None
+        once the queues empty out."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()

@@ -8,7 +8,8 @@ returns a plain JSON-serializable dict — the same shape
 Two properties matter for long-lived servers (PR 8):
 
   * **bounded memory** — the observation series (``latency_s``,
-    ``queue_wait_s``, ``exec_s``, ``queue_depth``, ``swap_compile_s``,
+    ``queue_wait_s``, ``form_wait_s``, ``dispatch_wait_s``, ``exec_s``,
+    ``queue_depth``, ``form_depth``, ``swap_compile_s``,
     ``batch_sizes``) are :class:`repro.obs.BoundedSeries`, not lists:
     exact percentiles up to 4096 samples, then fixed log-bucket
     estimates within ~12% relative error, O(1) memory forever after;
@@ -76,9 +77,21 @@ class ServingMetrics:
     cancelled: int = 0              # requests cancelled before execution
     latency_s: BoundedSeries = dataclasses.field(default_factory=_series)
     queue_wait_s: BoundedSeries = dataclasses.field(default_factory=_series)
+    # the pipeline split of queue_wait_s (PR 10): form-wait is submit ->
+    # batch formation, dispatch-wait is formation -> execution start (time
+    # a formed batch sat in its bucket's dispatch lane waiting for a
+    # worker).  queue_wait_s stays their sum, so its series is comparable
+    # across pre- and post-pipeline runs.
+    form_wait_s: BoundedSeries = dataclasses.field(default_factory=_series)
+    dispatch_wait_s: BoundedSeries = dataclasses.field(default_factory=_series)
     exec_s: BoundedSeries = dataclasses.field(default_factory=_series)
     swap_compile_s: BoundedSeries = dataclasses.field(default_factory=_series)
     queue_depth: BoundedSeries = dataclasses.field(default_factory=_series)
+    # queue depth observed when a batch FORMS (after its rows are popped):
+    # arrival-time depth alone cannot show pool-induced buildup — a slow
+    # executor pool leaves rows behind at formation, and this series is
+    # where that becomes visible
+    form_depth: BoundedSeries = dataclasses.field(default_factory=_series)
     batch_sizes: BoundedSeries = dataclasses.field(default_factory=_series)
     bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
     max_queue_depth: int = 0
@@ -108,8 +121,22 @@ class ServingMetrics:
                 self.max_queue_depth = max(self.max_queue_depth, depth)
             self.queue_depth.add(depth)
 
+    def record_formation(self, depth: int) -> None:
+        """Queue depth left behind at batch-formation time (rows the formed
+        batch did NOT take).  Under a healthy pool this hugs zero; a
+        saturated executor pool shows up here before it shows up in
+        latency."""
+        with self._mu:
+            self.form_depth.add(depth)
+
     def record_batch(self, now: float, n: int, bucket: int, exec_s: float,
-                     waits_s: List[float], misses: int) -> None:
+                     waits_s: List[float], misses: int,
+                     dispatch_wait_s: float = 0.0) -> None:
+        """One executed batch.  ``waits_s`` are per-request form-waits
+        (submit -> batch formation); ``dispatch_wait_s`` is the batch's time
+        on its dispatch lane (formation -> execution start), zero for the
+        inline/step-driven path.  Total queue wait and latency include
+        both, so pre-pipeline series remain comparable."""
         with self._mu:
             self.batches += 1
             self.served += n
@@ -118,10 +145,12 @@ class ServingMetrics:
             self.padded_rows += bucket - n
             self.batched_rows += bucket
             self.exec_s.add(exec_s)
+            self.dispatch_wait_s.add(dispatch_wait_s)
             self.deadline_misses += misses
             for w in waits_s:
-                self.queue_wait_s.add(w)
-                self.latency_s.add(w + exec_s)
+                self.form_wait_s.add(w)
+                self.queue_wait_s.add(w + dispatch_wait_s)
+                self.latency_s.add(w + dispatch_wait_s + exec_s)
             self.t_last = now
 
     def record_batch_failure(self, now: float, n: int) -> None:
@@ -243,6 +272,13 @@ class ServingMetrics:
                 "throughput_rps": self.served / span if span > 0 else 0.0,
                 "latency_ms": self._quantiles_ms(self.latency_s),
                 "queue_wait_ms": self._quantiles_ms(self.queue_wait_s),
+                "form_wait_ms": self._quantiles_ms(self.form_wait_s),
+                "dispatch_wait_ms": self._quantiles_ms(self.dispatch_wait_s),
+                "form_depth": {
+                    "p50": self.form_depth.percentile(50),
+                    "p99": self.form_depth.percentile(99),
+                    "count": len(self.form_depth),
+                },
                 "exec_ms": self._quantiles_ms(self.exec_s),
                 "mean_batch_size": (self.batch_sizes.total / self.batches
                                     if self.batches else 0.0),

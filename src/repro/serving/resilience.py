@@ -292,7 +292,8 @@ class Watchdog:
                  has_work: Callable[[], bool],
                  restart: Callable[[bool], None],
                  stop_event: threading.Event,
-                 poll_s: Optional[float] = None):
+                 poll_s: Optional[float] = None,
+                 on_poll: Optional[Callable[[], None]] = None):
         self.timeout_s = timeout_s
         self.heartbeat = heartbeat
         self.get_thread = get_thread
@@ -301,6 +302,11 @@ class Watchdog:
         self._stop = stop_event
         self.poll_s = poll_s if poll_s is not None \
             else max(0.01, timeout_s / 4.0)
+        # extra liveness hook fired every poll, watched-thread state aside:
+        # the pipeline server uses it to respawn dead executor-pool workers
+        # (the formation thread is `get_thread`; workers are a separate
+        # population the dead/wedged checks don't see)
+        self.on_poll = on_poll
         self._thread: Optional[threading.Thread] = None
 
     def start(self) -> "Watchdog":
@@ -316,6 +322,11 @@ class Watchdog:
 
     def _loop(self) -> None:
         while not self._stop.wait(self.poll_s):
+            if self.on_poll is not None:
+                try:
+                    self.on_poll()
+                except Exception:
+                    pass  # a liveness hook must never kill the watchdog
             t = self.get_thread()
             dead = t is None or not t.is_alive()
             wedged = (not dead and self.has_work()

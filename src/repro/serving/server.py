@@ -27,6 +27,19 @@ The server runs in one of two modes over the SAME scheduling code:
     blocks on a per-request event; ``shutdown()`` drains the queue and
     joins the thread.
 
+Async mode optionally runs as a staged **pipeline** (``executor_workers >
+0``): the scheduler thread is reduced to admission + batch FORMATION only,
+emitting :class:`repro.serving.bucketing.FormedBatch` snapshots onto
+per-bucket dispatch lanes (:class:`~repro.serving.bucketing.
+DispatchQueues`), and a bounded :class:`ExecutorPool` drains the lanes.
+At most one batch per lane is ever in flight, so same-bucket batches
+complete in formation order (determinism), while different buckets overlap
+across workers — an in-flight batch no longer blocks formation, and the
+annealed plans stop idling behind the scheduler.  The step-driven path is
+untouched: no pool runs unless ``start()`` is called with workers
+configured, so every deterministic test drives the exact pre-pipeline
+code.
+
 ``swap(net)`` hot-swaps the served plan set: the new plans compile (or
 plan-store-hit) OFF the serving path, then install atomically between
 batches — an in-flight batch keeps the old plan set by reference, so no
@@ -58,7 +71,7 @@ import numpy as np
 
 from ..obs.telemetry import IOTelemetry, plan_io_attrs
 from ..obs.trace import NULL_TRACER, Tracer
-from .bucketing import BucketedPlanSet
+from .bucketing import BucketedPlanSet, DispatchQueues, FormedBatch
 from .metrics import ServingMetrics
 from .resilience import (
     BatchTimeoutError,
@@ -103,6 +116,203 @@ class _Slot:
         self.t_done: Optional[float] = None
         self.done = False
         self.waiters = 0
+
+
+class ExecutorPool:
+    """Bounded execution-stage worker pool draining :class:`DispatchQueues`.
+
+    Each worker blocks in ``dispatch.take()`` for the oldest *ready* lane
+    (non-empty, nothing in flight) and runs the batch through its owning
+    server's ``_run_batch`` — against the plan-set snapshot the batch was
+    formed with, so a concurrent ``swap()`` never mixes weights inside a
+    batch.  A worker that catches a non-batch error (``_run_batch`` already
+    contains plan failures) completes the batch's slots as None, so the
+    PR-5 invariant — a failed batch never takes the server down, and its
+    waiters always unblock — holds with any number of workers.
+
+    One pool may be shared by several servers (``ModelRouter``): batches
+    carry their server, so the worker loop is server-agnostic.  Per-worker
+    busy time and batch counts feed the ``pool.per_worker`` utilization
+    gauges in snapshots.
+    """
+
+    def __init__(self, dispatch: DispatchQueues, workers: int = 2,
+                 wake: Optional[Callable[[], None]] = None,
+                 name: str = "sparse-exec"):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.dispatch = dispatch
+        self.workers = workers
+        self.wake = wake              # fired after every completion (the
+                                      # formation loop may be lane-blocked)
+        self.name = name
+        self._mu = threading.Lock()
+        self._threads: Dict[int, threading.Thread] = {}
+        self._busy: Dict[int, FormedBatch] = {}
+        self._stats = {i: {"batches": 0, "busy_s": 0.0}
+                       for i in range(workers)}
+        self._stop = threading.Event()
+        self._started_at: Optional[float] = None
+
+    # ------------------------------------------------------------------ #
+    def start(self) -> "ExecutorPool":
+        with self._mu:
+            self._stop.clear()
+            if self._started_at is None:
+                self._started_at = time.monotonic()
+            for i in range(self.workers):
+                t = self._threads.get(i)
+                if t is None or not t.is_alive():
+                    self._spawn_locked(i)
+        return self
+
+    def _spawn_locked(self, i: int) -> None:
+        t = threading.Thread(target=self._work, args=(i,),
+                             name=f"{self.name}-{i}", daemon=True)
+        self._threads[i] = t
+        t.start()
+
+    def ensure(self) -> None:
+        """Respawn dead worker threads (watchdog ``on_poll`` hook).  A
+        worker can only die on a non-``Exception`` raise — the loop
+        swallows everything else — but the lanes it was draining must not
+        go silent when it does."""
+        if self._stop.is_set():
+            return
+        with self._mu:
+            if self._stop.is_set() or self._started_at is None:
+                return
+            for i in range(self.workers):
+                t = self._threads.get(i)
+                if t is None or not t.is_alive():
+                    self._spawn_locked(i)
+
+    @property
+    def running(self) -> bool:
+        with self._mu:
+            return any(t.is_alive() for t in self._threads.values())
+
+    @property
+    def accepting(self) -> bool:
+        """True while the pool is live and not stopping — the formation
+        stage dispatches only while this holds (otherwise it executes
+        inline, the pre-pipeline path)."""
+        return (not self._stop.is_set() and self._started_at is not None
+                and self.running)
+
+    def idle_workers(self) -> int:
+        with self._mu:
+            alive = sum(1 for t in self._threads.values() if t.is_alive())
+            return max(0, alive - len(self._busy))
+
+    # ------------------------------------------------------------------ #
+    def _work(self, i: int) -> None:
+        while not self._stop.is_set():
+            batch = self.dispatch.take(timeout=_IDLE_WAIT_S)
+            if batch is None:
+                continue
+            server = batch.server
+            t0 = time.monotonic()
+            with self._mu:
+                self._busy[i] = batch
+            try:
+                server._run_batch(batch, worker=i)
+            except Exception:
+                # _run_batch contains plan failures itself; anything that
+                # still escapes (a bug in the completion path, say) must
+                # not leave the batch's waiters blocked forever
+                try:
+                    now = server.clock()
+                    with server._cv:
+                        server._finish_slots(batch.reqs, None, now)
+                        server.metrics.record_batch_failure(
+                            now, len(batch.reqs))
+                except Exception:
+                    pass
+            finally:
+                with self._mu:
+                    self._busy.pop(i, None)
+                    st = self._stats[i]
+                    st["batches"] += 1
+                    st["busy_s"] += time.monotonic() - t0
+                self.dispatch.complete(batch)
+                server._notify()
+                if self.wake is not None:
+                    self.wake()
+
+    # ------------------------------------------------------------------ #
+    def stop(self, drain: bool = True,
+             timeout: Optional[float] = None) -> bool:
+        """Stop the workers.  With ``drain`` (default) every queued and
+        in-flight batch executes first (bounded by ``timeout``); without
+        it, queued batches are left on the lanes for the caller to run
+        inline (in-flight ones still finish).  Returns True when the pool
+        fully stopped in time."""
+        drained = True
+        if drain and self._started_at is not None:
+            drained = self.dispatch.wait_idle(timeout=timeout)
+        self._stop.set()
+        self.dispatch.close()
+        joined = True
+        with self._mu:
+            threads = list(self._threads.values())
+        for t in threads:
+            if t is not threading.current_thread():
+                t.join(timeout)
+                joined = joined and not t.is_alive()
+        return drained and joined
+
+    def snapshot(self) -> dict:
+        """Per-worker utilization (busy-time fraction since pool start)
+        plus dispatch-queue state — rendered with a ``worker=`` label by
+        ``repro.obs.prom``."""
+        with self._mu:
+            up = (time.monotonic() - self._started_at
+                  if self._started_at is not None else 0.0)
+            per_worker = {
+                str(i): {
+                    "batches": st["batches"],
+                    "busy_s": round(st["busy_s"], 6),
+                    "utilization": (st["busy_s"] / up if up > 0 else 0.0),
+                    "in_flight": 1 if i in self._busy else 0,
+                }
+                for i, st in self._stats.items()
+            }
+            busy = len(self._busy)
+        return {
+            "workers": self.workers,
+            "busy_workers": busy,
+            "dispatch_depth": self.dispatch.depth(),
+            "dispatch_in_flight": self.dispatch.in_flight(),
+            "per_worker": per_worker,
+        }
+
+
+class SwapHandle:
+    """Future-style handle for an asynchronous plan swap
+    (``swap(..., swap_async=True)``).
+
+    The replacement plan set compiles (or plan-store-hits) and warms on a
+    background thread; the reference install happens between batches when
+    it is ready.  ``wait()`` blocks for the install and returns the
+    replaced plan set (re-raising a build failure); ``done`` polls."""
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._old: Optional[BucketedPlanSet] = None
+        self._err: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: Optional[float] = None
+             ) -> Optional[BucketedPlanSet]:
+        if not self._ev.wait(timeout):
+            raise TimeoutError("swap still building/installing")
+        if self._err is not None:
+            raise self._err
+        return self._old
 
 
 class SparseServer:
@@ -155,6 +365,17 @@ class SparseServer:
         fold it into ``self.io`` (requires a gated fused plan; silently
         inactive otherwise).  0 disables sampling — the measurement runs a
         second instrumented forward, so it is opt-in.
+      executor_workers: size of the execution-stage worker pool.  0 (the
+        default) keeps the pre-pipeline behavior: the scheduler thread
+        forms AND executes each batch itself.  With N >= 1, ``start()``
+        also spawns an :class:`ExecutorPool` — the scheduler only forms
+        batches onto per-bucket dispatch lanes and the pool drains them,
+        so different-bucket batches overlap while same-bucket batches
+        stay FIFO.  Step-driven mode ignores this (no pool runs until
+        ``start()``).
+      dispatch_per_lane: formed batches a dispatch lane buffers beyond
+        the in-flight one (lane-full is backpressure on formation, not an
+        error).
 
     All public methods are thread-safe; plan execution itself runs outside
     the lock, so submits are never blocked behind a running batch.
@@ -185,6 +406,8 @@ class SparseServer:
         name: str = "default",
         tracer: Optional[Tracer] = None,
         measure_dynamic_every: int = 0,
+        executor_workers: int = 0,
+        dispatch_per_lane: int = 2,
     ):
         self.plans = plans
         self.max_batch = max_batch or plans.max_batch
@@ -245,6 +468,24 @@ class SparseServer:
         self.measure_dynamic_every = measure_dynamic_every
         self._measure_countdown = measure_dynamic_every
         self._io_seen: set = set()   # (plan-set id, bucket) already gauged
+        # pipeline (PR 10): formation -> dispatch lanes -> executor pool.
+        # Nothing is created until start(); step-driven mode never sees it.
+        if executor_workers < 0:
+            raise ValueError(
+                f"executor_workers must be >= 0, got {executor_workers}")
+        self.executor_workers = executor_workers
+        self.dispatch_per_lane = dispatch_per_lane
+        self._dispatch: Optional[DispatchQueues] = None
+        self._pool: Optional[ExecutorPool] = None
+        self._pool_owned = False     # router-attached pools are stopped by
+                                     # the router, not this server
+        # plan generation counter: bumped by EVERY plan install (swap,
+        # breaker degrade, fast-plan reinstall).  Batches carry the gen
+        # they were formed at; breaker feedback from a batch whose gen is
+        # stale (formed before the last install) is dropped — an in-flight
+        # fast batch failing after degradation must not re-trip the
+        # breaker, and a stale safe success must not resolve a probe.
+        self._plan_gen = 0
         if breaker is not None and breaker.on_transition is None:
             # breaker state changes (incl. half-open probe admission, which
             # no metric counter sees) become trace events
@@ -269,12 +510,21 @@ class SparseServer:
         unboundedly past the SLO) or the server has shut down.  A wrong-shape
         input raises HERE, in the submitting thread — it must never reach
         batch formation, where it would poison every request in its batch."""
-        rid, _ = self._submit(x, deadline_ms)
+        rid, _, _ = self._submit(x, deadline_ms)
         return rid
 
+    def submit_ex(self, x, deadline_ms: Optional[float] = None
+                  ) -> "tuple[Optional[int], Optional[str]]":
+        """``submit`` with the rejection reason: ``(rid, None)`` on
+        admission, ``(None, "queue_full")`` on backpressure, ``(None,
+        "closed")`` after shutdown.  The HTTP front door maps these onto
+        429 vs 503 (see ``repro.serving.http``)."""
+        rid, _, reason = self._submit(x, deadline_ms)
+        return rid, reason
+
     def _submit(self, x, deadline_ms: Optional[float] = None
-                ) -> "tuple[Optional[int], bool]":
-        """``(rid, wake)`` — ``wake`` is True when this submit changed the
+                ) -> "tuple[Optional[int], bool, Optional[str]]":
+        """``(rid, wake, reason)`` — ``wake`` is True when this submit changed the
         scheduler's decision state: the queue just became non-empty (a
         sleeping scheduler may be on its idle tick) or just reached a full
         batch (fire now).  Any other submit leaves the head request — and so
@@ -295,7 +545,8 @@ class SparseServer:
                     self.tracer.event("request.submit", model=self.name,
                                       depth=depth, admitted=False,
                                       closed=self._closed)
-                return None, False
+                return None, False, \
+                    ("closed" if self._closed else "queue_full")
             rid = next(self._rid)
             deadline = now + (deadline_ms / 1e3 if deadline_ms is not None
                               else self.slo_s)
@@ -321,7 +572,7 @@ class SparseServer:
                         != self.plans.bucket_for(max(1, qlen - 1))))
             if wake:
                 self._cv.notify_all()
-            return rid, wake
+            return rid, wake, None
 
     @property
     def queue_depth(self) -> int:
@@ -338,6 +589,16 @@ class SparseServer:
             del self._results[rid]
             self._done.pop(rid, None)
             return slot.value
+
+    def status(self, rid: int) -> str:
+        """``"pending"`` (queued or in flight), ``"done"`` (result ready to
+        collect), or ``"unknown"`` (never admitted, already collected, or
+        evicted).  The HTTP front door's poll path."""
+        with self._lock:
+            slot = self._results.get(rid)
+            if slot is None:
+                return "unknown"
+            return "done" if slot.done else "pending"
 
     def cancel(self, rid: int) -> bool:
         """Cancel request ``rid`` if it is still queued: it leaves the
@@ -518,6 +779,8 @@ class SparseServer:
             fast = self._fast_plans
             if fast is not None:
                 self.plans = fast
+                self._plan_gen += 1   # fence: stale safe batches still in
+                                      # flight must not resolve the probe
                 if fast.warmup_s:
                     self._lat_ewma = dict(fast.warmup_s)
             self._degraded = False
@@ -536,29 +799,115 @@ class SparseServer:
         if safe is not None:
             self._fast_plans = fast
             self.plans = safe
+            self._plan_gen += 1   # fence: in-flight fast batches that fail
+                                  # AFTER this install are stale — their
+                                  # breaker feedback is dropped, so one bad
+                                  # overlap window can't double-trip
             self._degraded = True
             if safe.warmup_s:
                 self._lat_ewma = dict(safe.warmup_s)
         self.metrics.record_breaker_trip()
         self._cv.notify_all()
 
-    def step(self, flush: bool = False) -> int:
-        """Fire at most one batch if the policy (or ``flush``) says so.
-        Returns the number of requests served."""
+    def _pipeline_active(self) -> bool:
+        """True while formed batches should go to the dispatch lanes (a
+        live, accepting executor pool is attached)."""
+        pool = self._pool
+        return (self._dispatch is not None and pool is not None
+                and pool.accepting)
+
+    def _notify(self) -> None:
+        """Wake the formation loop (executor-pool completion callback — a
+        freed lane may unblock formation or a drain waiter)."""
+        with self._cv:
+            self._cv.notify_all()
+
+    def _choose_take_locked(self, dispatching: bool) -> int:
+        """How many rows the next formed batch takes (lock held; queue
+        known non-empty and policy-fired).  Inline execution always takes
+        the preferred count (pre-pipeline behavior).  When dispatching,
+        lane state decides:
+
+          * preferred lane free -> preferred count (a worker picks it up
+            immediately);
+          * preferred lane occupied but a worker sits idle -> **spill**: a
+            full batch for the largest FREE smaller bucket, so an idle
+            worker gets different-bucket work to overlap instead of the
+            one hot lane serializing everything (at saturation every
+            preferred batch is the top bucket — without spill, workers > 1
+            would add nothing);
+          * otherwise queue onto the preferred lane while it has room, or
+            form nothing (lane-full backpressure; a completion notifies).
+        """
+        qlen = len(self._queue)
+        n_pref = min(qlen, self.max_batch)
+        if not dispatching:
+            return n_pref
+        pref_bucket = self.plans.bucket_for(
+            min(n_pref, self.plans.max_batch))
+        lane_pref = (id(self), pref_bucket)
+        d = self._dispatch
+        if d.lane_free(lane_pref):
+            return n_pref
+        if self._pool is not None and self._pool.idle_workers() > 0:
+            for b in reversed(self.plans.buckets):
+                if b >= pref_bucket or b > qlen:
+                    continue
+                if d.lane_free((id(self), b)):
+                    return b
+        return n_pref if d.can_accept(lane_pref) else 0
+
+    def _form_batch(self, flush: bool = False,
+                    dispatching: bool = False) -> Optional[FormedBatch]:
+        """The formation stage: apply the wait-or-fire policy and pop one
+        batch worth of requests, bound to a snapshot of the current plan
+        set (and its generation).  Returns None when the policy says wait
+        — or, when dispatching, when every eligible lane is full."""
         with self._lock:
             now = self.clock()
             self._evict_expired_requests(now)
             if not self._queue:
-                return 0
+                return None
             if not flush and not self._should_fire_locked(now):
-                return 0
+                return None
             self._breaker_admit_locked(now)
-            reqs: List[Request] = [
-                self._queue.popleft()
-                for _ in range(min(self.max_batch, len(self._queue)))
-            ]
+            take = self._choose_take_locked(dispatching)
+            if take <= 0:
+                return None
+            reqs: List[Request] = [self._queue.popleft()
+                                   for _ in range(take)]
+            # formation-time depth: what the batch LEFT behind (satellite
+            # fix — arrival-time depth alone can't show pool-induced
+            # buildup)
+            self.metrics.record_formation(len(self._queue))
             plans = self.plans        # snapshot: a swap() between batches
-        return self._run_batch(reqs, plans)
+            return FormedBatch(reqs=reqs, plans=plans,
+                               bucket=plans.bucket_for(len(reqs)),
+                               t_formed=now, server=self,
+                               gen=self._plan_gen)
+
+    def _pump(self, flush: bool = False) -> int:
+        """Formation loop body in pipeline mode: form batches onto their
+        dispatch lanes until the policy or lane backpressure says stop.
+        Returns rows dispatched (NOT served — execution is async)."""
+        dispatched = 0
+        while True:
+            batch = self._form_batch(flush, dispatching=True)
+            if batch is None:
+                return dispatched
+            if not self._dispatch.put(batch):
+                # closed (shutdown race) — run inline so nothing is lost
+                self._run_batch(batch)
+                return dispatched + len(batch.reqs)
+            dispatched += len(batch.reqs)
+
+    def step(self, flush: bool = False) -> int:
+        """Fire at most one batch if the policy (or ``flush``) says so.
+        Returns the number of requests served."""
+        batch = self._form_batch(flush)
+        if batch is None:
+            return 0
+        return self._run_batch(batch)
 
     def poll(self) -> int:
         """Fire as many batches as the policy allows right now."""
@@ -571,7 +920,36 @@ class SparseServer:
 
     def drain(self) -> int:
         """Serve everything queued, ignoring the wait policy (shutdown /
-        end-of-trace flush)."""
+        end-of-trace flush).  In pipeline mode this pumps the backlog
+        through the dispatch lanes and waits for the pool to go idle —
+        the bounded-drain invariant holds with any number of workers."""
+        if self._pipeline_active():
+            dispatched = 0
+            while True:
+                dispatched += self._pump(flush=True)
+                with self._cv:
+                    if not self._queue:
+                        break
+                    if not self._pipeline_active():
+                        break   # pool stopped mid-drain: finish inline
+                    # lanes full: a completion notifies; bounded wait so a
+                    # dying pool cannot wedge the drain
+                    self._cv.wait(timeout=_IDLE_WAIT_S)
+            if self._dispatch is not None:
+                # bounded waits so a pool that stops mid-drain can't wedge
+                # us; whatever it leaves on the lanes runs inline below
+                while self._pipeline_active() and \
+                        not self._dispatch.wait_idle(server=self,
+                                                     timeout=_IDLE_WAIT_S):
+                    pass
+                for b in self._dispatch.drain_batches(server=self):
+                    self._run_batch(b)
+            # inline sweep for anything left (pool stopped mid-drain)
+            while True:
+                n = self.step(flush=True)
+                if n == 0:
+                    return dispatched
+                dispatched += n
         served = 0
         while True:
             n = self.step(flush=True)
@@ -593,9 +971,23 @@ class SparseServer:
             self._stop.clear()
             self._closed = False
             self._drain_on_stop = True
+            if self.executor_workers > 0 and self._dispatch is None:
+                # own pipeline (a router-attached one arrives via
+                # _attach_pool instead): lanes + pool live for the
+                # server's lifetime; start() after shutdown() rebuilds
+                # them because close() is sticky on DispatchQueues
+                self._dispatch = DispatchQueues(
+                    per_lane=self.dispatch_per_lane)
+                self._pool = ExecutorPool(self._dispatch,
+                                          workers=self.executor_workers,
+                                          name=f"{self.name}-exec")
+                self._pool_owned = True
+            if self._pool is not None and self._pool_owned:
+                self._pool.start()
             self._spawn_scheduler_locked()
             if self.watchdog_s is not None and \
                     (self._watchdog is None or not self._watchdog.running):
+                pool = self._pool if self._pool_owned else None
                 self._watchdog = Watchdog(
                     timeout_s=self.watchdog_s,
                     heartbeat=self._heartbeat,
@@ -603,8 +995,20 @@ class SparseServer:
                     has_work=lambda: len(self._queue) > 0,
                     restart=self._respawn,
                     stop_event=self._stop,
+                    on_poll=(pool.ensure if pool is not None else None),
                 ).start()
         return self
+
+    def _attach_pool(self, dispatch: DispatchQueues,
+                     pool: ExecutorPool) -> None:
+        """Hook this server up to a SHARED dispatch/pool (``ModelRouter``):
+        lanes are keyed by (server, bucket) so models never share a lane,
+        but the workers draining them are common.  The router owns the
+        pool's lifecycle."""
+        with self._lock:
+            self._dispatch = dispatch
+            self._pool = pool
+            self._pool_owned = False
 
     def _spawn_scheduler_locked(self) -> None:
         # beat first: a fresh scheduler must never look stale to the
@@ -656,17 +1060,27 @@ class SparseServer:
                         (not self._drain_on_stop or not self._queue):
                     return
                 timeout = self._seconds_to_fire_locked(self.clock())
-            # execution happens OUTSIDE the lock: submits stay unblocked
-            served = self.step(flush=self._stop.is_set())
+            # execution happens OUTSIDE the lock: submits stay unblocked.
+            # Pipeline mode only FORMS here — execution is the pool's job
+            pipelined = self._pipeline_active()
+            if pipelined:
+                served = self._pump(flush=self._stop.is_set())
+            else:
+                served = self.step(flush=self._stop.is_set())
             if served == 0:
                 with self._cv:
                     # re-check under the cv before sleeping: a notify that
                     # landed between step() and here (e.g. the queue filling
                     # to a full batch) would otherwise be lost and the ready
-                    # batch would sleep out the stale timeout
-                    if not self._stop.is_set() and \
-                            not self._should_fire_locked():
-                        self._cv.wait(timeout=timeout)
+                    # batch would sleep out the stale timeout.  In pipeline
+                    # mode a zero pump may also mean lane-full backpressure
+                    # — then the wait is correct regardless of the policy
+                    # (a batch completion notifies this cv), and it stays
+                    # bounded by `timeout` <= the idle tick
+                    if pipelined or (not self._stop.is_set()
+                                     and not self._should_fire_locked()):
+                        if not (self._stop.is_set() and not self._queue):
+                            self._cv.wait(timeout=timeout)
 
     def shutdown(self, drain: bool = True,
                  timeout: Optional[float] = None,
@@ -698,6 +1112,19 @@ class SparseServer:
             joined = not t.is_alive()
         if self._watchdog is not None:
             self._watchdog.join(1.0)
+        if self._pool is not None and self._pool_owned:
+            # execution stage: with drain, every queued + in-flight lane
+            # batch runs before the workers stop; leftovers (a worker died
+            # mid-stop) run inline so no dispatched request is lost
+            joined = self._pool.stop(drain=drain,
+                                     timeout=drain_timeout_s) and joined
+            if drain and self._dispatch is not None:
+                for b in self._dispatch.drain_batches(server=self):
+                    self._run_batch(b)
+            # sticky close() on the lanes: rebuild on the next start()
+            self._dispatch = None
+            self._pool = None
+            self._pool_owned = False
         if not drain:
             return joined
         if drain_timeout_s is None:
@@ -720,7 +1147,7 @@ class SparseServer:
     # plan hot-swap
     # ------------------------------------------------------------------ #
     def swap(self, net=None, plans: Optional[BucketedPlanSet] = None,
-             warmup: bool = True) -> BucketedPlanSet:
+             warmup: bool = True, swap_async: bool = False):
         """Hot-swap the served plan set; returns the replaced one.
 
         Pass ``net`` (a pruned layer stack / ``BlockFFNN`` — the weight
@@ -733,11 +1160,44 @@ class SparseServer:
         plan set it started with: no request is ever dropped or served by
         mixed weights, and the swapped-in weights take effect on the next
         batch.
+
+        ``swap_async=True`` moves even the *caller's* wait off the serving
+        path: the build runs on a background thread and the install lands
+        between batches when it is ready — a weight update never stalls
+        the pipeline or the thread requesting it.  Returns a
+        :class:`SwapHandle` immediately (``handle.wait()`` -> the replaced
+        plan set).
         """
         if (net is None) == (plans is None):
             raise ValueError("swap needs exactly one of net= or plans=")
         tr = self.tracer
         t_sw0 = tr.clock() if tr.enabled else 0.0
+        if not swap_async:
+            built, compile_s, cache_hit = self._swap_build(net, plans,
+                                                           warmup)
+            return self._swap_install(built, compile_s, cache_hit, t_sw0)
+        handle = SwapHandle()
+
+        def _bg():
+            try:
+                built, compile_s, cache_hit = self._swap_build(net, plans,
+                                                               warmup)
+                handle._old = self._swap_install(built, compile_s,
+                                                 cache_hit, t_sw0)
+            except BaseException as e:  # surfaced via handle.wait()
+                handle._err = e
+            finally:
+                handle._ev.set()
+
+        threading.Thread(target=_bg, daemon=True,
+                         name=f"{self.name}-swap").start()
+        return handle
+
+    def _swap_build(self, net, plans: Optional[BucketedPlanSet],
+                    warmup: bool):
+        """The off-path half of a swap: compile/plan-store-hit (for a
+        ``net=`` swap), safe-twin completion, warmup, shape validation.
+        No server lock is ever held here."""
         # prebuilt plans= paid their compile long ago (possibly never, in a
         # ping-pong swap) — only a net= swap charges compile time/hit state
         # to the swap metrics
@@ -773,6 +1233,14 @@ class SparseServer:
             raise ValueError(
                 f"swapped plans' top bucket {plans.max_batch} is below the "
                 f"server's max_batch {self.max_batch}")
+        return plans, compile_s, cache_hit
+
+    def _swap_install(self, plans: BucketedPlanSet, compile_s: float,
+                      cache_hit: bool, t_sw0: float) -> BucketedPlanSet:
+        """The locked half of a swap: the reference install, between
+        batches by construction (every formed batch carries its own plan
+        snapshot and generation)."""
+        tr = self.tracer
         with self._cv:
             # the logically-installed set is the fast one even while the
             # breaker has the safe twin serving — return that, and start
@@ -780,6 +1248,9 @@ class SparseServer:
             old = self._fast_plans if self._degraded and \
                 self._fast_plans is not None else self.plans
             self.plans = plans
+            self._plan_gen += 1   # fence: batches formed before this
+                                  # install must not feed the (reset)
+                                  # breaker or the reseeded EWMA
             self._fast_plans = None
             self._degraded = False
             if self.breaker is not None:
@@ -812,13 +1283,16 @@ class SparseServer:
 
     def _trace_batch(self, reqs: List[Request], plans, bucket: int,
                      t0: float, t1: float, attempt: int,
-                     error: Optional[BaseException] = None) -> None:
+                     error: Optional[BaseException] = None,
+                     worker: Optional[int] = None) -> None:
         """Record the batch's execute span, each request's retroactive queue
         span, and per-request done events (tracer enabled — caller checked)."""
         tr = self.tracer
         attrs = {"model": self.name, "bucket": bucket, "n": len(reqs),
                  "attempt": attempt + 1,
                  "degraded": bool(getattr(plans, "safe_mode", False))}
+        if worker is not None:
+            attrs["worker"] = worker
         attrs.update(plan_io_attrs(plans.plans.get(bucket, plans.base)))
         if error is not None:
             attrs["error"] = type(error).__name__
@@ -830,8 +1304,14 @@ class SparseServer:
                      ok=error is None,
                      miss=bool(r.deadline is not None and t1 > r.deadline))
 
-    def _run_batch(self, reqs: List[Request],
-                   plans: BucketedPlanSet) -> int:
+    def _run_batch(self, batch: FormedBatch,
+                   worker: Optional[int] = None) -> int:
+        """Execute one formed batch — inline (scheduler thread, ``worker``
+        None) or on an executor-pool worker.  Runs against the batch's own
+        plan snapshot; breaker feedback is fenced by the batch's plan
+        generation, so a batch that overlapped a swap/degrade/reinstall
+        can neither trip nor reset state that belongs to newer plans."""
+        reqs, plans = batch.reqs, batch.plans
         n = len(reqs)
         bucket = plans.bucket_for(n)
         x = np.stack([r.x for r in reqs])
@@ -866,21 +1346,28 @@ class SparseServer:
                 # move on
                 if tr.enabled:
                     self._trace_batch(reqs, plans, bucket, t0, t1,
-                                      attempt, error=e)
+                                      attempt, error=e, worker=worker)
                 with self._cv:
                     self.metrics.record_attempt_failure(timed_out=timed_out,
                                                         nan_guard=nan_guard)
                     self._finish_slots(reqs, None, t1)
                     self.metrics.record_batch_failure(t1, n)
-                    self._breaker_failure_locked(t1)
+                    if batch.gen == self._plan_gen:
+                        self._breaker_failure_locked(t1)
                 return n
         t1 = self.clock()
         exec_s = t1 - t0
-        waits = [t0 - r.t_submit for r in reqs]
+        # the pipeline wait split: form-wait (submit -> formation) per
+        # request, dispatch-wait (formation -> execution start) per batch.
+        # Inline execution starts at formation time, so its dispatch wait
+        # is ~0 and the totals match the pre-pipeline series
+        dispatch_wait = max(0.0, t0 - batch.t_formed)
+        waits = [batch.t_formed - r.t_submit for r in reqs]
         misses = sum(1 for r in reqs
                      if r.deadline is not None and t1 > r.deadline)
         if tr.enabled:
-            self._trace_batch(reqs, plans, bucket, t0, t1, attempt)
+            self._trace_batch(reqs, plans, bucket, t0, t1, attempt,
+                              worker=worker)
         do_measure = False
         with self._cv:
             if self.plans is plans:
@@ -891,11 +1378,12 @@ class SparseServer:
                                           else 0.5 * prev + 0.5 * exec_s)
             self._finish_slots(reqs, y, t1)
             self._evict_expired(t1)
-            self.metrics.record_batch(t1, n, bucket, exec_s, waits, misses)
+            self.metrics.record_batch(t1, n, bucket, exec_s, waits, misses,
+                                      dispatch_wait_s=dispatch_wait)
             if getattr(plans, "safe_mode", False):
                 self.metrics.record_degraded_batch()
-            if self.breaker is not None and \
-                    self.breaker.on_success() == "reset":
+            if self.breaker is not None and batch.gen == self._plan_gen \
+                    and self.breaker.on_success() == "reset":
                 # half-open probe served: back on the fast plan for good
                 self.metrics.record_breaker_reset()
                 self._fast_plans = None
@@ -904,11 +1392,16 @@ class SparseServer:
                 if self._measure_countdown <= 0:
                     self._measure_countdown = self.measure_dynamic_every
                     do_measure = True
+            # the seen-check must be atomic under the pool (two workers
+            # finishing the same fresh (plan set, bucket) concurrently);
+            # the observe itself stays outside the lock
+            io_key = (id(plans), bucket)
+            io_first = io_key not in self._io_seen
+            if io_first:
+                self._io_seen.add(io_key)
         # I/O telemetry runs OUTSIDE the lock: static gauges once per
         # (plan set, bucket), measured dynamic I/O on the sampling cadence
-        key = (id(plans), bucket)
-        if key not in self._io_seen:
-            self._io_seen.add(key)
+        if io_first:
             self.io.observe_plan(bucket, plans.plans.get(bucket, plans.base))
         if do_measure:
             self._measure_dynamic(plans, bucket, x)
@@ -966,6 +1459,10 @@ class SparseServer:
         snap["model"] = self.name
         snap["queue_depth_now"] = self.queue_depth
         snap["degraded"] = self._degraded
+        if self._pool is not None and self._pool_owned:
+            # per-worker utilization + dispatch state (router-shared pools
+            # are reported once, at the router level)
+            snap["pool"] = self._pool.snapshot()
         if self.breaker is not None:
             snap["breaker_state"] = self.breaker.state
             snap["breaker_open"] = self.breaker.state == "open"
@@ -998,6 +1495,8 @@ class ModelRouter:
                  watchdog_s: Optional[float] = None,
                  fault_injector: Optional[FaultInjector] = None,
                  tracer: Optional[Tracer] = None,
+                 executor_workers: int = 0,
+                 dispatch_per_lane: int = 2,
                  **server_kwargs):
         """``server_kwargs`` apply to every model's server;
         ``server_settings[name]`` overlays per-model keyword arguments
@@ -1006,7 +1505,11 @@ class ModelRouter:
         SHARED scheduler thread; ``fault_injector`` fires the
         ``router.scheduler`` chaos site; ``tracer`` is shared by every
         model's server (spans carry the model name), so one export holds
-        the whole process's request lifecycle."""
+        the whole process's request lifecycle.  ``executor_workers`` spawns
+        ONE execution-stage pool shared by every model on ``start()``:
+        lanes are per (model, bucket), so batches of different models — or
+        different buckets of one model — overlap across the shared
+        workers, while each lane stays FIFO."""
         if not models:
             raise ValueError("ModelRouter needs at least one model")
         settings = server_settings or {}
@@ -1029,6 +1532,13 @@ class ModelRouter:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._drain_on_stop = True
+        if executor_workers < 0:
+            raise ValueError(
+                f"executor_workers must be >= 0, got {executor_workers}")
+        self.executor_workers = executor_workers
+        self.dispatch_per_lane = dispatch_per_lane
+        self._dispatch: Optional[DispatchQueues] = None
+        self._pool: Optional[ExecutorPool] = None
 
     @classmethod
     def compile(cls, nets: Dict[str, object], engine=None, max_batch: int = 32,
@@ -1088,11 +1598,22 @@ class ModelRouter:
         # non-empty transition when two submits race) and the router cv is
         # taken only AFTER the server lock is released — the shared loop
         # acquires router-then-server, so the reverse order would deadlock
-        rid, wake = self._server(model)._submit(x, deadline_ms)
+        rid, wake, _ = self._server(model)._submit(x, deadline_ms)
         if wake:
             with self._cv:
                 self._cv.notify_all()
         return rid
+
+    def submit_ex(self, model: str, x,
+                  deadline_ms: Optional[float] = None
+                  ) -> "tuple[Optional[int], Optional[str]]":
+        """``submit`` with the rejection reason (``None`` / ``"queue_full"``
+        / ``"closed"``) — the HTTP front door's admission path."""
+        rid, wake, reason = self._server(model)._submit(x, deadline_ms)
+        if wake:
+            with self._cv:
+                self._cv.notify_all()
+        return rid, reason
 
     def result(self, model: str, rid: int) -> Optional[np.ndarray]:
         return self._server(model).result(rid)
@@ -1103,8 +1624,9 @@ class ModelRouter:
 
     def swap(self, model: str, net=None,
              plans: Optional[BucketedPlanSet] = None,
-             warmup: bool = True) -> BucketedPlanSet:
-        return self._server(model).swap(net, plans=plans, warmup=warmup)
+             warmup: bool = True, swap_async: bool = False):
+        return self._server(model).swap(net, plans=plans, warmup=warmup,
+                                        swap_async=swap_async)
 
     @property
     def queue_depth(self) -> int:
@@ -1131,9 +1653,24 @@ class ModelRouter:
             self._drain_on_stop = True
             for s in self.servers.values():
                 s._closed = False
+            if self.executor_workers > 0 and self._dispatch is None:
+                # ONE pool shared across every model: per-(model, bucket)
+                # lanes, common workers.  Completions wake the shared
+                # formation loop through the router cv
+                self._dispatch = DispatchQueues(
+                    per_lane=self.dispatch_per_lane)
+                self._pool = ExecutorPool(self._dispatch,
+                                          workers=self.executor_workers,
+                                          wake=self._notify,
+                                          name="router-exec")
+                for s in self.servers.values():
+                    s._attach_pool(self._dispatch, self._pool)
+            if self._pool is not None:
+                self._pool.start()
             self._spawn_scheduler_locked()
             if self.watchdog_s is not None and \
                     (self._watchdog is None or not self._watchdog.running):
+                pool = self._pool
                 self._watchdog = Watchdog(
                     timeout_s=self.watchdog_s,
                     heartbeat=self._heartbeat,
@@ -1141,8 +1678,13 @@ class ModelRouter:
                     has_work=lambda: self.queue_depth > 0,
                     restart=self._respawn,
                     stop_event=self._stop,
+                    on_poll=(pool.ensure if pool is not None else None),
                 ).start()
         return self
+
+    def _notify(self) -> None:
+        with self._cv:
+            self._cv.notify_all()
 
     def _spawn_scheduler_locked(self) -> None:
         self._heartbeat.beat()
@@ -1182,7 +1724,8 @@ class ModelRouter:
             stopping = self._stop.is_set()
             if stopping and not self._drain_on_stop:
                 return                 # abandon the backlog (bad-traffic exit)
-            served = sum(s.step(flush=stopping) for s in servers)
+            served = sum((s._pump(flush=stopping) if s._pipeline_active()
+                          else s.step(flush=stopping)) for s in servers)
             if stopping and all(s.queue_depth == 0 for s in servers):
                 return
             if served == 0:
@@ -1192,7 +1735,11 @@ class ModelRouter:
                     # concurrent drain()/step() may pop the head between an
                     # unlocked emptiness check and the head access otherwise.
                     # If any server became fireable since the step sweep (a
-                    # notify raced the loop), skip the sleep entirely
+                    # notify raced the loop), skip the sleep entirely.  A
+                    # pipeline server that is fireable but lane-blocked is
+                    # NOT fireable for this purpose — waiting is right (a
+                    # batch completion notifies the router cv), and spinning
+                    # until a lane frees would starve the other models
                     timeout = _IDLE_WAIT_S
                     fireable = False
                     for s in servers:
@@ -1200,8 +1747,11 @@ class ModelRouter:
                             if not s._queue:
                                 continue
                             if s._should_fire_locked(now):
-                                fireable = True
-                                break
+                                if not s._pipeline_active() or \
+                                        s._choose_take_locked(True) > 0:
+                                    fireable = True
+                                    break
+                                continue
                             timeout = min(
                                 timeout, s._seconds_to_fire_locked(now))
                     if not fireable and not self._stop.is_set():
@@ -1231,6 +1781,19 @@ class ModelRouter:
             joined = not t.is_alive()
         if self._watchdog is not None:
             self._watchdog.join(1.0)
+        if self._pool is not None:
+            # the router owns the shared pool: drain every model's lanes,
+            # stop the workers, run leftovers inline on their own servers
+            joined = self._pool.stop(drain=drain,
+                                     timeout=drain_timeout_s) and joined
+            if drain and self._dispatch is not None:
+                for b in self._dispatch.drain_batches():
+                    b.server._run_batch(b)
+            for s in self.servers.values():
+                s._dispatch = None
+                s._pool = None
+            self._dispatch = None
+            self._pool = None
         if not drain:
             return joined
         if drain_timeout_s is None:
@@ -1278,12 +1841,15 @@ class ModelRouter:
         Prometheus endpoint renders — the ``models`` map becomes a
         ``model=`` label."""
         base = self.metrics_snapshot()
-        return {
+        out = {
             "models": {name: s.snapshot()
                        for name, s in self.servers.items()},
             "total": base["total"],
             "router": base["router"],
         }
+        if self._pool is not None:
+            out["pool"] = self._pool.snapshot()
+        return out
 
     def summary(self) -> str:
         lines = [f"{name}: {s.metrics.summary()}"

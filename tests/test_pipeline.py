@@ -1,0 +1,652 @@
+"""The staged serving pipeline: dispatch lanes, executor pool, HTTP ingress.
+
+What the pipeline refactor must NOT change (PR-5/7 invariants, now with
+``executor_workers > 1``):
+
+  * **same-bucket FIFO** — a dispatch lane admits one in-flight batch at a
+    time, so batches of one bucket execute serially, in formation order,
+    and request order within a bucket is submission order;
+  * **different-bucket overlap** — that is the point of the pipeline: a
+    held bucket-8 batch must not block a bucket-1 batch from being formed,
+    dispatched, and served by another worker;
+  * **output transparency** — every result is bit-identical to the base
+    plan on that row alone, regardless of worker count, lane routing, or
+    batch composition; a hot-swap under overlapped traffic is atomic
+    (identical-weight swap: bit-identical throughout; new-weight swap:
+    every row matches exactly one weight set);
+  * **resilience composition** — K batch failures spread across workers
+    still trip the circuit breaker exactly once; a crashed scheduler is
+    restarted by the watchdog with zero requests lost;
+  * **backpressure, not loss** — when lanes and queue are full, admission
+    rejects (HTTP 429 at the front door); everything admitted is served.
+
+Deterministic lane mechanics are unit-tested on :class:`DispatchQueues`
+directly; overlap/ordering tests instrument a real compiled plan set with
+recording + holds (events), so assertions are on synchronized state, not
+sleeps.
+"""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.engine import Engine
+from repro.serving import (
+    BucketedPlanSet,
+    CircuitBreaker,
+    DispatchQueues,
+    FaultInjector,
+    FormedBatch,
+    HttpFrontDoor,
+    ModelRouter,
+    SparseServer,
+)
+
+
+@pytest.fixture
+def plans(make_stack):
+    return BucketedPlanSet.compile(
+        make_stack(), engine=Engine(backend="jnp"), max_batch=8).warmup()
+
+
+def _xs(plans, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(plans.n_in).astype(np.float32)
+            for _ in range(n)]
+
+
+def _expected_rows(plans, xs):
+    """Ground truth per request: the base plan on each row alone."""
+    return [np.asarray(plans.base(x[None]))[0] for x in xs]
+
+
+class InstrumentedPlans:
+    """Wraps a compiled plan set: records every batch call ``(bucket,
+    t_start, t_end, thread, rows)`` and optionally HOLDS calls of chosen
+    buckets open until the test releases them.  Everything else delegates,
+    so the server sees a normal ``BucketedPlanSet``."""
+
+    def __init__(self, base, hold_buckets=()):
+        self._base = base
+        self.calls = []
+        self._mu = threading.Lock()
+        self.entered = {b: threading.Event() for b in hold_buckets}
+        self.release = {b: threading.Event() for b in hold_buckets}
+
+    def __call__(self, x):
+        bucket = self._base.bucket_for(x.shape[0])
+        t0 = time.monotonic()
+        if bucket in self.entered:
+            self.entered[bucket].set()
+            assert self.release[bucket].wait(timeout=30.0), \
+                f"bucket-{bucket} hold never released"
+        y = self._base(x)
+        with self._mu:
+            self.calls.append({"bucket": bucket, "t0": t0,
+                               "t1": time.monotonic(),
+                               "thread": threading.current_thread().name,
+                               "rows": np.array(x, copy=True)})
+        return y
+
+    def __getattr__(self, name):
+        return getattr(self._base, name)
+
+
+# --------------------------------------------------------------------------- #
+# DispatchQueues: deterministic lane mechanics
+# --------------------------------------------------------------------------- #
+
+def _fb(bucket, t_formed, server=None):
+    return FormedBatch(reqs=[], plans=None, bucket=bucket,
+                       t_formed=t_formed, server=server)
+
+
+def test_dispatch_lane_is_serial_and_fifo():
+    d = DispatchQueues(per_lane=2)
+    a, b = _fb(8, 1.0), _fb(8, 2.0)
+    assert d.put(a) and d.put(b)
+    first = d.take(timeout=0.1)
+    assert first is a                          # oldest first
+    # one in-flight per lane: b is queued but NOT ready until a completes
+    assert d.take(timeout=0.05) is None
+    d.complete(a)
+    assert d.take(timeout=0.1) is b
+
+
+def test_dispatch_take_prefers_oldest_across_lanes():
+    d = DispatchQueues(per_lane=2)
+    late, early = _fb(8, 5.0), _fb(1, 3.0)
+    assert d.put(late) and d.put(early)
+    assert d.take(timeout=0.1) is early        # global age order
+    assert d.take(timeout=0.1) is late         # different lane: also ready
+
+
+def test_dispatch_lane_capacity_is_backpressure():
+    d = DispatchQueues(per_lane=1)
+    a, b, c = _fb(4, 1.0), _fb(4, 2.0), _fb(4, 3.0)
+    assert d.put(a)
+    assert d.take(timeout=0.1) is a            # in flight
+    assert d.put(b)                            # fills the lane buffer
+    assert not d.can_accept(b.lane)
+    assert not d.put(c)                        # full lane: rejected
+    d.complete(a)
+    assert d.take(timeout=0.1) is b
+
+
+def test_dispatch_close_is_sticky_and_drains():
+    d = DispatchQueues(per_lane=2)
+    a, b = _fb(2, 1.0), _fb(4, 2.0)
+    d.put(a), d.put(b)
+    got = d.drain_batches()
+    assert [g.t_formed for g in got] == [1.0, 2.0]
+    d.close()
+    assert not d.put(_fb(1, 3.0))              # closed: no new batches
+    assert d.take(timeout=0.05) is None
+
+
+def test_dispatch_pending_and_wait_idle_scoped_by_server():
+    d = DispatchQueues(per_lane=2)
+    s1, s2 = object(), object()
+    a, b = _fb(2, 1.0, server=s1), _fb(2, 2.0, server=s2)
+    d.put(a), d.put(b)
+    assert d.pending(server=s1) == 1 and d.pending() == 2
+    taken = d.take(timeout=0.1)
+    assert taken is a
+    assert not d.wait_idle(server=s1, timeout=0.05)   # a still in flight
+    assert d.pending(server=s1) == 1
+    d.complete(a)
+    assert d.wait_idle(server=s1, timeout=0.5)
+    assert d.pending(server=s2) == 1
+
+
+# --------------------------------------------------------------------------- #
+# executor pool: ordering + overlap (real threads)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.stress
+def test_same_bucket_batches_execute_serially_in_submission_order(plans):
+    """All traffic lands in one bucket: its lane must serialize execution
+    (no two calls overlap) and preserve submission order across batches —
+    even with 4 workers racing on the lane."""
+    inst = InstrumentedPlans(plans)
+    server = SparseServer(inst, slo_ms=50.0, executor_workers=4)
+    xs = _xs(plans, 40, seed=3)
+    for i, x in enumerate(xs):
+        x[0] = float(i)                        # tag row with submit order
+    expected = _expected_rows(plans, xs)
+    server.start()
+    try:
+        rids = [server.submit(x) for x in xs]
+        outs = [server.wait(r, timeout=20.0) for r in rids]
+    finally:
+        server.shutdown(drain=True)
+    for got, want in zip(outs, expected):
+        np.testing.assert_array_equal(got, want)
+    calls = sorted(inst.calls, key=lambda c: c["t0"])
+    per_bucket = {}
+    for c in calls:
+        per_bucket.setdefault(c["bucket"], []).append(c)
+    for bucket, bcalls in per_bucket.items():
+        for prev, nxt in zip(bcalls, bcalls[1:]):
+            assert prev["t1"] <= nxt["t0"], \
+                f"two bucket-{bucket} batches overlapped in time"
+        tags = [float(row[0]) for c in bcalls for row in c["rows"]]
+        assert tags == sorted(tags), \
+            f"bucket-{bucket} rows out of submission order: {tags}"
+
+
+@pytest.mark.stress
+def test_different_bucket_batches_overlap(plans):
+    """A held bucket-8 batch must not block a bucket-1 request: the small
+    batch is formed onto its own lane and served by another worker WHILE
+    the big one is still executing."""
+    inst = InstrumentedPlans(plans, hold_buckets=(8,))
+    server = SparseServer(inst, slo_ms=100.0, executor_workers=2)
+    xs_big = _xs(plans, 8, seed=4)
+    (x_small,) = _xs(plans, 1, seed=5)
+    server.start()
+    try:
+        big_rids = [server.submit(x) for x in xs_big]
+        assert inst.entered[8].wait(timeout=10.0)      # worker 1 is inside
+        r_small = server.submit(x_small)
+        got_small = server.wait(r_small, timeout=10.0)  # overlaps the hold
+        assert got_small is not None
+        np.testing.assert_array_equal(
+            got_small, _expected_rows(plans, [x_small])[0])
+        assert not inst.release[8].is_set()    # big batch was still held
+        inst.release[8].set()
+        for rid, want in zip(big_rids, _expected_rows(plans, xs_big)):
+            np.testing.assert_array_equal(server.wait(rid, timeout=10.0),
+                                          want)
+    finally:
+        inst.release[8].set()
+        server.shutdown(drain=True)
+    snap = server.metrics.snapshot()
+    assert snap["served"] == 9
+    assert snap["dispatch_wait_ms"]["count"] >= 2
+    assert snap["form_wait_ms"]["count"] == 9
+
+
+@pytest.mark.stress
+def test_pool_snapshot_reports_workers_and_dispatch(plans):
+    server = SparseServer(plans, slo_ms=50.0, executor_workers=3)
+    server.start()
+    try:
+        rids = [server.submit(x) for x in _xs(plans, 20, seed=6)]
+        for r in rids:
+            assert server.wait(r, timeout=20.0) is not None
+        snap = server.snapshot()
+    finally:
+        server.shutdown(drain=True)
+    pool = snap["pool"]
+    assert pool["workers"] == 3
+    assert set(pool["per_worker"]) == {"0", "1", "2"}
+    assert sum(w["batches"] for w in pool["per_worker"].values()) \
+        == snap["batches"]
+    # the per-worker map renders as worker= labelled Prometheus samples
+    from repro.obs.prom import render_prometheus
+    text = render_prometheus(snap)
+    assert 'worker="0"' in text and "_pool_worker_" in text
+
+
+# --------------------------------------------------------------------------- #
+# resilience with workers > 1
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.stress
+def test_breaker_trips_once_for_failures_across_workers(make_stack):
+    """K batch failures spread across concurrent workers feed ONE breaker:
+    it trips exactly once, degrades to the safe twin, and subsequent
+    traffic is served (bit-identical to the safe twin's forward)."""
+    plans = BucketedPlanSet.compile(
+        make_stack(), engine=Engine(backend="jnp"), max_batch=8,
+        safe_twin=True).warmup()
+
+    class FailingPlans:
+        def __init__(self, base):
+            self._base = base
+
+        def __call__(self, x):
+            raise RuntimeError("injected fast-plan failure")
+
+        def __getattr__(self, name):
+            return getattr(self._base, name)
+
+    server = SparseServer(FailingPlans(plans), slo_ms=50.0,
+                          executor_workers=3,
+                          breaker=CircuitBreaker(threshold=3,
+                                                 cooldown_s=60.0))
+    server.start()
+    try:
+        # waves of 11 rows: formation spreads each wave over several lanes
+        # (8 + spills), so concurrent workers fail in parallel; keep
+        # feeding until the shared failure count crosses the threshold
+        deadline = time.monotonic() + 15.0
+        while server.metrics.breaker_trips < 1:
+            assert time.monotonic() < deadline, "breaker never tripped"
+            doomed = [server.submit(x) for x in _xs(plans, 11, seed=7)]
+            for rid in doomed:
+                server.wait(rid, timeout=20.0)  # fail -> None results
+        xs = _xs(plans, 6, seed=8)
+        rids = [server.submit(x) for x in xs]
+        expected = _expected_rows(plans, xs)
+        for rid, want in zip(rids, expected):
+            got = server.wait(rid, timeout=20.0)
+            assert got is not None             # degraded path serves
+            np.testing.assert_array_equal(got, want)
+    finally:
+        server.shutdown(drain=True)
+    m = server.metrics.snapshot()
+    assert m["breaker_trips"] == 1             # concurrent failures: 1 trip
+    assert m["batch_failures"] >= 3
+    assert m["degraded_batches"] >= 1
+
+
+@pytest.mark.stress
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_watchdog_restart_with_pipeline_zero_requests_lost(plans):
+    """The formation (scheduler) thread crashes while a worker pool is
+    attached; the watchdog respawns it and every request is served."""
+    inj = FaultInjector()
+    server = SparseServer(plans, slo_ms=20.0, watchdog_s=0.2,
+                          fault_injector=inj, executor_workers=2)
+    inj.inject("server.scheduler", error=RuntimeError("scheduler crash"),
+               times=1)
+    server.start()                             # dies on its first iteration
+    xs = _xs(plans, 12, seed=9)
+    expected = _expected_rows(plans, xs)
+    rids = [server.submit(x) for x in xs]
+    assert all(r is not None for r in rids)
+    try:
+        for rid, want in zip(rids, expected):
+            got = server.wait(rid, timeout=10.0)
+            assert got is not None             # zero requests lost
+            np.testing.assert_array_equal(got, want)
+        assert server.metrics.watchdog_restarts >= 1
+    finally:
+        server.shutdown(drain=True)
+
+
+# --------------------------------------------------------------------------- #
+# hot swap under overlapped execution
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.stress
+def test_swap_identical_weights_bit_identical_under_overlap(plans,
+                                                            make_stack):
+    """swap() of identical weights under concurrent multi-worker traffic:
+    every result, before/during/after the swap, is bit-identical."""
+    engine = Engine(backend="jnp")
+    server = SparseServer(plans, slo_ms=50.0, engine=engine,
+                          executor_workers=3)
+    xs = _xs(plans, 16, seed=10)
+    expected = _expected_rows(plans, xs)
+    server.start()
+    stop = threading.Event()
+    results = []
+    mu = threading.Lock()
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            i = int(rng.integers(len(xs)))
+            rid = server.submit(xs[i])
+            if rid is None:
+                continue
+            y = server.wait(rid, timeout=20.0)
+            with mu:
+                results.append((i, y))
+
+    threads = [threading.Thread(target=client, args=(50 + k,))
+               for k in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        time.sleep(0.1)
+        server.swap(make_stack())              # same seed: same weights
+        time.sleep(0.1)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        server.shutdown(drain=True)
+    assert len(results) > 10
+    for i, y in results:
+        assert y is not None
+        np.testing.assert_array_equal(y, expected[i])
+    assert server.metrics.swaps == 1
+
+
+@pytest.mark.stress
+def test_swap_new_weights_never_mixes_under_overlap(plans, make_stack):
+    """A new-weight swap under multi-worker traffic: every row matches
+    exactly one of the two weight sets — never a mixture (the batch's plan
+    snapshot is immutable; the install happens between batches)."""
+    engine = Engine(backend="jnp")
+    new_plans = BucketedPlanSet.compile(make_stack(seed=99), engine=engine,
+                                        max_batch=8).warmup()
+    server = SparseServer(plans, slo_ms=50.0, engine=engine,
+                          executor_workers=3)
+    xs = _xs(plans, 8, seed=11)
+    want_old = _expected_rows(plans, xs)
+    want_new = _expected_rows(new_plans, xs)
+    for old, new in zip(want_old, want_new):
+        assert not np.array_equal(old, new)    # the swap must be visible
+    server.start()
+    stop = threading.Event()
+    results = []
+    mu = threading.Lock()
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            i = int(rng.integers(len(xs)))
+            rid = server.submit(xs[i])
+            if rid is None:
+                continue
+            y = server.wait(rid, timeout=20.0)
+            with mu:
+                results.append((i, y))
+
+    threads = [threading.Thread(target=client, args=(70 + k,))
+               for k in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        time.sleep(0.1)
+        server.swap(plans=new_plans)
+        time.sleep(0.1)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        server.shutdown(drain=True)
+    n_new = 0
+    for i, y in results:
+        assert y is not None
+        is_old = np.array_equal(y, want_old[i])
+        is_new = np.array_equal(y, want_new[i])
+        assert is_old != is_new, "row matches neither/both weight sets"
+        n_new += is_new
+    assert n_new > 0                           # the swap took effect
+
+
+def test_swap_async_builds_in_background_and_installs(plans, make_stack):
+    """``swap_async=True`` returns a handle immediately; serving continues
+    during the build; ``wait()`` returns the superseded plan set; the new
+    weights take effect afterwards."""
+    engine = Engine(backend="jnp")
+    server = SparseServer(plans, slo_ms=50.0, engine=engine,
+                          executor_workers=2)
+    server.start()
+    try:
+        handle = server.swap(make_stack(seed=99), swap_async=True)
+        # serving is NOT blocked by the background compile
+        (x,) = _xs(plans, 1, seed=12)
+        rid = server.submit(x)
+        assert server.wait(rid, timeout=20.0) is not None
+        old = handle.wait(timeout=60.0)
+        assert handle.done
+        assert old is plans                    # superseded set handed back
+        new_plans = BucketedPlanSet.compile(make_stack(seed=99),
+                                            engine=engine, max_batch=8)
+        xs = _xs(plans, 3, seed=13)
+        rids = [server.submit(v) for v in xs]
+        for rid, want in zip(rids, _expected_rows(new_plans, xs)):
+            np.testing.assert_array_equal(server.wait(rid, timeout=20.0),
+                                          want)
+        assert server.metrics.swaps == 1
+    finally:
+        server.shutdown(drain=True)
+
+
+# --------------------------------------------------------------------------- #
+# router: shared pool, totals vs per-model snapshots
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.stress
+def test_router_totals_match_per_model_under_concurrent_submitters(
+        make_stack):
+    """4 submitter threads across 2 models through ONE shared pool: no
+    request lost or crossed between models, and the router's totals equal
+    the sum of the per-model snapshots."""
+    engine = Engine(backend="jnp")
+    nets = {"a": make_stack(seed=1), "b": make_stack(seed=2)}
+    router = ModelRouter.compile(nets, engine=engine, max_batch=8,
+                                 executor_workers=2, slo_ms=50.0,
+                                 max_queue=4096)
+    refs = {name: router.servers[name].plans for name in nets}
+    xs = _xs(refs["a"], 10, seed=14)
+    expected = {name: _expected_rows(refs[name], xs) for name in nets}
+    router.start()
+    per_thread = 25
+    outcomes = []
+    mu = threading.Lock()
+    gate = threading.Barrier(4)
+
+    def submitter(k):
+        rng = np.random.default_rng(90 + k)
+        gate.wait()
+        for _ in range(per_thread):
+            name = "a" if rng.integers(2) else "b"
+            i = int(rng.integers(len(xs)))
+            rid = router.submit(name, xs[i])
+            assert rid is not None
+            y = router.wait(name, rid, timeout=20.0)
+            with mu:
+                outcomes.append((name, i, y))
+
+    threads = [threading.Thread(target=submitter, args=(k,))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    router.shutdown(drain=True)
+    assert len(outcomes) == 4 * per_thread
+    for name, i, y in outcomes:
+        assert y is not None
+        np.testing.assert_array_equal(y, expected[name][i])  # never crossed
+    snap = router.metrics_snapshot()
+    assert snap["total"]["served"] == 4 * per_thread
+    assert snap["total"]["served"] == sum(
+        m["served"] for m in snap["models"].values())
+    assert snap["total"]["failed_requests"] == 0
+    full = None
+    try:
+        full = router.snapshot()
+    finally:
+        pass
+    assert full["total"]["served"] == 4 * per_thread
+
+
+# --------------------------------------------------------------------------- #
+# HTTP front door
+# --------------------------------------------------------------------------- #
+
+def _post(url, body, timeout=10.0):
+    req = urllib.request.Request(
+        url + "/v1/infer", data=json.dumps(body).encode("utf-8"),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read()), dict(resp.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read() or b"{}"), dict(e.headers)
+
+
+@pytest.mark.stress
+def test_http_front_door_roundtrip_and_status_mapping(plans):
+    server = SparseServer(plans, slo_ms=50.0, executor_workers=2)
+    server.start()
+    front = HttpFrontDoor(server, port=0).start()
+    try:
+        (x,) = _xs(plans, 1, seed=15)
+        want = _expected_rows(plans, [x])[0]
+        code, payload, _ = _post(front.url, {"x": x.tolist()})
+        assert code == 200
+        np.testing.assert_array_equal(
+            np.asarray(payload["y"], np.float32), want)
+
+        # async submit + poll
+        code, payload, _ = _post(front.url, {"x": x.tolist(),
+                                             "wait": False})
+        assert code == 202
+        rid = payload["rid"]
+        deadline = time.monotonic() + 10.0
+        while True:
+            try:
+                with urllib.request.urlopen(
+                        front.url + f"/v1/result/{rid}", timeout=5) as r:
+                    code, payload = r.status, json.loads(r.read())
+            except urllib.error.HTTPError as e:
+                code, payload = e.code, json.loads(e.read() or b"{}")
+            if code == 200:
+                break
+            assert code == 202 and time.monotonic() < deadline
+            time.sleep(0.01)
+        np.testing.assert_array_equal(
+            np.asarray(payload["y"], np.float32), want)
+
+        # ingress-side rejections never reach formation
+        assert _post(front.url, {"x": "nonsense"})[0] == 400
+        assert _post(front.url, {"x": x.tolist(), "model": "ghost"})[0] \
+            == 404
+        with urllib.request.urlopen(front.url + "/v1/models",
+                                    timeout=5) as r:
+            assert json.loads(r.read())["models"] == [server.name]
+        with urllib.request.urlopen(front.url + "/healthz", timeout=5) as r:
+            assert r.status == 200
+    finally:
+        front.stop()
+        server.shutdown(drain=True)
+
+
+@pytest.mark.stress
+def test_http_429_backpressure_when_queue_full(plans):
+    """Queue + lanes full => 429 with Retry-After; everything that got a
+    202 is eventually served (backpressure sheds load, never loses it)."""
+    inst = InstrumentedPlans(plans, hold_buckets=(1, 2, 4, 8))
+    server = SparseServer(inst, slo_ms=50.0, max_queue=2,
+                          executor_workers=2)
+    server.start()
+    front = HttpFrontDoor(server, port=0).start()
+    try:
+        (x,) = _xs(plans, 1, seed=16)
+        codes, rids = [], []
+        for _ in range(40):                    # wait=false: returns at once
+            code, payload, headers = _post(front.url,
+                                           {"x": x.tolist(), "wait": False})
+            codes.append(code)
+            if code == 202:
+                rids.append(payload["rid"])
+            else:
+                assert code == 429
+                assert "Retry-After" in headers
+        assert codes.count(429) > 0            # admission control engaged
+        assert codes.count(202) > 0
+        for ev in inst.release.values():       # un-wedge the executors
+            ev.set()
+        want = _expected_rows(plans, [x])[0]
+        for rid in rids:                       # nothing admitted was lost
+            got = server.wait(rid, timeout=20.0)
+            assert got is not None
+            np.testing.assert_array_equal(got, want)
+    finally:
+        for ev in inst.release.values():
+            ev.set()
+        front.stop()
+        server.shutdown(drain=True)
+    assert server.metrics.rejected == codes.count(429)
+    assert server.metrics.served == len(rids)
+
+
+# --------------------------------------------------------------------------- #
+# metrics: the formation/dispatch wait split
+# --------------------------------------------------------------------------- #
+
+def test_wait_split_sums_to_queue_wait_step_driven(plans):
+    """Step-driven mode: dispatch wait is ~0 (execution starts at
+    formation), so queue_wait == form_wait and the pre-pipeline series
+    stays comparable."""
+    from conftest import FakeClock
+    clock = FakeClock()
+    server = SparseServer(plans, slo_ms=1000.0, clock=clock)
+    for x in _xs(plans, 8, seed=17):
+        server.submit(x)
+    clock.advance(0.05)
+    server.poll()
+    server.drain()
+    snap = server.metrics.snapshot()
+    assert snap["served"] == 8
+    assert snap["form_wait_ms"]["count"] == 8
+    assert snap["dispatch_wait_ms"]["p99"] == 0.0
+    assert snap["queue_wait_ms"]["p50"] == pytest.approx(
+        snap["form_wait_ms"]["p50"])
+    assert snap["form_depth"]["count"] >= 1    # depth recorded at formation
